@@ -1,0 +1,71 @@
+//! Churn resilience: peers disconnect and reconnect randomly while data
+//! is being distributed (the Testground `fuzz` scenario of §IV-B),
+//! and the layer still converges.
+//!
+//! ```bash
+//! cargo run --release --example churn_resilience
+//! ```
+
+use peersdb::modeling::datagen;
+use peersdb::peersdb::NodeConfig;
+use peersdb::sim::harness;
+use peersdb::util::time::Duration;
+use peersdb::util::Rng;
+
+fn main() {
+    let n = 10;
+    let mut cluster =
+        harness::paper_cluster(41, n, Duration::from_millis(300), |_| NodeConfig::default());
+    cluster.run_for(Duration::from_secs(15));
+    println!("cluster of {n} peers up");
+
+    let mut rng = Rng::new(42);
+    let total_contribs = 30;
+    let mut offline: Vec<usize> = Vec::new();
+    for i in 0..total_contribs {
+        // Random churn: ~20% chance per round to kill a random non-root
+        // peer; ~50% chance to revive one.
+        if rng.chance(0.2) && offline.len() < n / 3 {
+            let victim = rng.range(1, n);
+            if !offline.contains(&victim) {
+                cluster.set_offline(victim);
+                offline.push(victim);
+                println!("t={} peer {victim} disconnected", cluster.now());
+            }
+        }
+        if rng.chance(0.5) {
+            if let Some(back) = offline.pop() {
+                cluster.set_online(back);
+                println!("t={} peer {back} reconnected", cluster.now());
+            }
+        }
+        // Contributions keep flowing from random online peers.
+        let wl = (i % 6) as u32;
+        let (file, _) = datagen::generate_contribution(&mut rng, wl, 60);
+        let mut contributor = rng.range(1, n);
+        while offline.contains(&contributor) {
+            contributor = rng.range(1, n);
+        }
+        harness::contribute(&mut cluster, contributor, &file, datagen::WORKLOADS[wl as usize]);
+        cluster.run_for(Duration::from_secs(2));
+    }
+    // Revive everyone and let anti-entropy finish.
+    for peer in offline.drain(..) {
+        cluster.set_online(peer);
+        println!("t={} peer {peer} reconnected (final)", cluster.now());
+    }
+    cluster.run_for(Duration::from_secs(180));
+
+    harness::assert_converged(&mut cluster);
+    println!(
+        "\nall {} stores converged on {} contributions despite churn",
+        n,
+        cluster.node(0).contributions.len()
+    );
+    println!(
+        "transport: {} delivered, {} dropped to offline peers, {} blocked",
+        cluster.stats.msgs_delivered, cluster.stats.msgs_dropped_offline, cluster.stats.msgs_dropped_blocked
+    );
+    assert_eq!(cluster.node(0).contributions.len(), total_contribs);
+    println!("churn_resilience OK");
+}

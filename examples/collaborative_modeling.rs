@@ -1,0 +1,134 @@
+//! END-TO-END DRIVER: the full paper pipeline on a real small workload.
+//!
+//! 12 organizations run distributed dataflow jobs and share performance
+//! data through the P2P distribution layer. Afterwards one peer runs the
+//! §III-D performance-modeling workflow: assemble training data from the
+//! replicated contributions store, train the AOT-compiled MLP runtime
+//! predictor via PJRT for a few hundred steps (logging the loss curve),
+//! and evaluate prediction error — **collaborative vs local-only**, the
+//! paper's headline motivation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example collaborative_modeling
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use peersdb::modeling::datagen::{self, TraceRow, WORKLOADS};
+use peersdb::modeling::features::{encode_batch, DIM};
+use peersdb::modeling::workflow;
+use peersdb::peersdb::NodeConfig;
+use peersdb::runtime::batching::padded_batches;
+use peersdb::runtime::PerfModel;
+use peersdb::sim::harness;
+use peersdb::util::time::Duration;
+use peersdb::util::Rng;
+
+const PEERS: usize = 12;
+const FILES_PER_PEER: usize = 6;
+const ROWS_PER_FILE: usize = 40;
+const EPOCHS: usize = 40;
+const LR: f32 = 0.05;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(2024);
+
+    // ---- Phase 1: the data distribution layer at work -------------------
+    println!("== phase 1: P2P data sharing across {PEERS} peers ==");
+    let mut cluster =
+        harness::paper_cluster(11, PEERS, Duration::from_millis(400), |_| NodeConfig::default());
+    cluster.run_for(Duration::from_secs(20));
+
+    // Each peer observes only ONE workload type (the realistic silo:
+    // no single org runs everything) and contributes its trace files.
+    let mut local_rows_per_peer: Vec<Vec<TraceRow>> = vec![Vec::new(); PEERS];
+    for peer in 1..PEERS {
+        let wl = ((peer - 1) % WORKLOADS.len()) as u32;
+        for _ in 0..FILES_PER_PEER {
+            let (file, rows) = datagen::generate_contribution(&mut rng, wl, ROWS_PER_FILE);
+            local_rows_per_peer[peer].extend(rows);
+            harness::contribute(&mut cluster, peer, &file, WORKLOADS[wl as usize]);
+            cluster.run_for(Duration::from_millis(500));
+        }
+    }
+    cluster.run_for(Duration::from_secs(60));
+    harness::assert_converged(&mut cluster);
+    let total = cluster.node(0).contributions.len();
+    println!("   {total} contributions fully replicated on all {PEERS} peers");
+    let repl = cluster
+        .node(3)
+        .metrics
+        .summary("replication_ms")
+        .map(|s| (s.mean(), s.max()))
+        .unwrap_or((f64::NAN, f64::NAN));
+    println!("   peer-3 replication latency: mean {:.0} ms, max {:.0} ms", repl.0, repl.1);
+
+    // ---- Phase 2: the §III-D modeling workflow on peer 3 ----------------
+    println!("\n== phase 2: performance modeling on peer 3 (PJRT, AOT artifacts) ==");
+    let mut model = PerfModel::load("artifacts")?;
+    println!("   model loaded: {} trainable params, batch {}", model.param_count(), model.meta.batch);
+
+    // Held-out evaluation set: fresh draws from EVERY workload's ground
+    // truth — what peer 3 will be asked to predict in production.
+    let test_rows: Vec<TraceRow> = (0..WORKLOADS.len() as u32)
+        .flat_map(|wl| (0..60).map(move |_| (wl, ())))
+        .scan(Rng::new(555), |r, (wl, _)| Some(datagen::sample_row(r, wl)))
+        .collect();
+
+    // Local-only: what peer 3 saw itself (one workload).
+    let local_rows = local_rows_per_peer[3].clone();
+    // Collaborative: everything the distribution layer brought in.
+    let collab_rows = workflow::assemble_from_node(cluster.node(3), None, &[]);
+    println!("   training data: local-only {} rows | collaborative {} rows", local_rows.len(), collab_rows.len());
+
+    // Loss curve for the collaborative run (a few hundred steps).
+    {
+        model.reset()?;
+        let mut shuffled = collab_rows.clone();
+        let mut r = Rng::new(9);
+        let mut step = 0usize;
+        println!("   loss curve (collaborative):");
+        for epoch in 0..EPOCHS {
+            r.shuffle(&mut shuffled);
+            let (xs, ys) = encode_batch(&shuffled);
+            for (bx, by, bm) in padded_batches(&xs, &ys, DIM, model.meta.batch) {
+                let loss = model.train_step(&bx, &by, &bm, LR)?;
+                if step % 40 == 0 {
+                    println!("     step {step:4}  loss {loss:.4}");
+                }
+                step += 1;
+            }
+            let _ = epoch;
+        }
+        println!("     step {step:4}  (final)");
+    }
+
+    let (local, collab) = workflow::collaboration_benefit(
+        &mut model,
+        &local_rows,
+        &collab_rows,
+        &test_rows,
+        EPOCHS,
+        LR,
+        77,
+    )?;
+
+    println!("\n== results (held-out, all workloads) ==");
+    println!(
+        "   local-only    : {:4} rows  RMSE(ln rt) {:.3}  MAPE {:5.1}%",
+        local.train_rows,
+        local.rmse_log,
+        local.mape * 100.0
+    );
+    println!(
+        "   collaborative : {:4} rows  RMSE(ln rt) {:.3}  MAPE {:5.1}%",
+        collab.train_rows,
+        collab.rmse_log,
+        collab.mape * 100.0
+    );
+    let gain = local.rmse_log / collab.rmse_log;
+    println!("   collaboration improves RMSE by {gain:.1}x");
+    assert!(gain > 1.5, "collaboration should help substantially");
+    println!("\ncollaborative_modeling OK");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+"""AOT compilation: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text — not ``serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts written to ``--out`` (default ../artifacts):
+
+    init_params.hlo.txt  ()                                  -> (params…)
+    train_step.hlo.txt   (params…, x, y, mask, lr)           -> (params…, loss)
+    predict.hlo.txt      (params…, x)                        -> (yhat,)
+    knn_score.hlo.txt    (x, refs)                           -> (scores,)
+    meta.json            shape/layout contract for the rust runtime
+
+Python runs ONCE, at build time; the rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    return list(params)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    B, D, H, R = model.BATCH, model.FEATURES, model.HIDDEN, model.REFSET
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    param_specs = (
+        sd((D, H), f32), sd((H,), f32),
+        sd((H, H), f32), sd((H,), f32),
+        sd((H, 1), f32), sd((1,), f32),
+    )
+
+    def init_fn():
+        return model.init_params()
+
+    def train_fn(w1, b1, w2, b2, w3, b3, x, y, mask, lr):
+        params, loss = model.train_step((w1, b1, w2, b2, w3, b3), x, y, mask, lr)
+        return (*params, loss)
+
+    def predict_fn(w1, b1, w2, b2, w3, b3, x):
+        return (model.predict((w1, b1, w2, b2, w3, b3), x),)
+
+    def knn_fn(x, refs):
+        return (model.knn_score(x, refs),)
+
+    jobs = [
+        ("init_params", init_fn, ()),
+        ("train_step", train_fn,
+         (*param_specs, sd((B, D), f32), sd((B,), f32), sd((B,), f32), sd((), f32))),
+        ("predict", predict_fn, (*param_specs, sd((B, D), f32))),
+        ("knn_score", knn_fn, (sd((B, D), f32), sd((R, D), f32))),
+    ]
+    for name, fn, specs in jobs:
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "batch": B,
+        "features": D,
+        "hidden": H,
+        "refset": R,
+        "knn_k": model.KNN_K,
+        "param_shapes": [[D, H], [H], [H, H], [H], [H, 1], [1]],
+        "target": "ln(runtime_seconds)",
+        "interchange": "hlo-text",
+    }
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("wrote meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the performance-model compute hot-spots.
+
+Everything here is lowered with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); correctness is pinned against the
+pure-jnp oracles in :mod:`compile.kernels.ref`. Block shapes are chosen
+for the TPU memory hierarchy (see DESIGN.md §Hardware-Adaptation):
+128-aligned tiles sized to keep each grid step's working set well inside
+a ~16 MiB VMEM budget and feed the 128x128 MXU systolic array.
+"""
+
+from compile.kernels.matmul import matmul
+from compile.kernels.pairwise import pairwise_sqdist
+
+__all__ = ["matmul", "pairwise_sqdist"]

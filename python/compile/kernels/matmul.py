@@ -1,0 +1,86 @@
+"""Fused tiled matmul kernel: ``act(x @ w + b)``.
+
+The hot-spot of the performance model's forward *and* backward passes
+(dx = g @ w.T and dw = x.T @ g are matmuls too). One Pallas kernel
+covers all of them, with optional bias-add and ReLU fused into the
+epilogue so each output tile is written exactly once.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* grid = (M/bm, N/bn); each step loads an (bm, K) LHS tile and a (K, bn)
+  RHS tile from HBM into VMEM via BlockSpec, multiplies on the MXU with
+  f32 accumulation, applies the epilogue in the VPU, and writes the
+  (bm, bn) tile back — a classic output-stationary schedule.
+* bm/bn default to 128 (MXU-native); K is kept whole per step because
+  the model's contraction dims (8..128) always fit VMEM. For the
+  compiled shapes the per-step working set is
+  bm*K + K*bn + bm*bn floats ≤ ~192 KiB — far inside VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, use_bias: bool, activation: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    # MXU with f32 accumulation regardless of input dtype.
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if use_bias:
+        acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    """Largest divisor of ``dim`` that is ≤ preferred (prefers 128/64/...)."""
+    for cand in (preferred, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= dim and dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def _matmul_jit(x, w, b, activation):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m)
+    bn = _pick_block(n)
+    use_bias = b is not None
+    kernel = functools.partial(
+        _kernel, use_bias=use_bias, activation=activation or "none"
+    )
+    in_specs = [
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+    ]
+    args = [x, w]
+    if use_bias:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (j,)))
+        args.append(b)
+    else:
+        # Pallas requires a concrete operand list; pass a dummy scalar
+        # that the kernel ignores.
+        in_specs.append(pl.BlockSpec((1,), lambda i, j: (0,)))
+        args.append(jnp.zeros((1,), x.dtype))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(*args)
+
+
+def matmul(x, w, b=None, activation=None):
+    """``act(x @ w + b)`` via the Pallas kernel.
+
+    x: (M, K); w: (K, N); b: (N,) or None; activation: None | "relu".
+    """
+    return _matmul_jit(x, w, b, activation)

@@ -1,0 +1,53 @@
+"""Tiled pairwise squared-distance kernel.
+
+Used by the data-validation scorer: each incoming contribution row is
+scored by its distance to the k nearest rows of a trusted reference set
+(novelty/outlier detection — the "validate data quality as well as the
+benefit for performance modeling" routine of §III-C).
+
+dist(i, j) = |x_i|^2 + |r_j|^2 - 2 x_i.r_j
+
+The cross term is an (bm, D) x (D, bn) matmul → MXU; the norms ride in
+the VPU epilogue. Grid = (B/bm, R/bn), so arbitrary-size reference sets
+stream through VMEM tile by tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.matmul import _pick_block
+
+
+def _kernel(x_ref, r_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    cross = jnp.dot(x, r.T, preferred_element_type=jnp.float32)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    rn = jnp.sum(r * r, axis=1, keepdims=True)
+    d = xn + rn.T - 2.0 * cross
+    # Clamp tiny negatives from cancellation.
+    o_ref[...] = jnp.maximum(d, 0.0).astype(o_ref.dtype)
+
+
+@jax.jit
+def pairwise_sqdist(x, refs):
+    """Squared euclidean distances: x (B, D), refs (R, D) → (B, R)."""
+    b, d = x.shape
+    r, d2 = refs.shape
+    assert d == d2
+    bb = _pick_block(b)
+    br = _pick_block(r)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // bb, r // br),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, br), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=True,
+    )(x, refs)

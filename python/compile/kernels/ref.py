@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel test asserts allclose against these; nothing here may import
+Pallas.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, b=None, activation=None):
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def pairwise_sqdist_ref(x, refs):
+    x = x.astype(jnp.float32)
+    refs = refs.astype(jnp.float32)
+    diff = x[:, None, :] - refs[None, :, :]
+    return jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+
+
+def mlp_ref(params, x):
+    """Reference 3-layer MLP forward (f32)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jnp.maximum(jnp.dot(x, w1) + b1[None, :], 0.0)
+    h2 = jnp.maximum(jnp.dot(h1, w2) + b2[None, :], 0.0)
+    return (jnp.dot(h2, w3) + b3[None, :])[:, 0]
+
+
+def masked_mse_ref(pred, y, mask):
+    se = (pred - y) ** 2 * mask
+    return jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def knn_score_ref(x, refs, k):
+    d = pairwise_sqdist_ref(x, refs)
+    topk = jnp.sort(d, axis=1)[:, :k]
+    return jnp.mean(topk, axis=1)

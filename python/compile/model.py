@@ -1,0 +1,118 @@
+"""Layer-2: the collaborative performance model, in JAX, on Pallas kernels.
+
+The model is a 3-layer MLP runtime predictor over the 8-dim feature
+layout defined in ``rust/src/modeling/features.rs`` (kept in sync by
+hand; the AOT artifacts freeze it):
+
+    x[B, 8] -> dense(64, relu) -> dense(64, relu) -> dense(1) -> ln(rt)
+
+All dense layers run on the fused Pallas matmul kernel in both the
+forward pass and the backward pass (custom VJP below: dx and dw are
+matmuls on the same kernel). Additionally :func:`knn_score` is the
+validation scorer (pairwise-distance kernel + top-k).
+
+Targets are ln(runtime_seconds); the loss is a mask-weighted MSE so the
+Rust side can pad partial batches to the compiled batch size.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul, pairwise_sqdist
+
+# --- Compiled shapes (the AOT contract; rust/src/runtime asserts these) ---
+BATCH = 256
+FEATURES = 8
+HIDDEN = 64
+REFSET = 512
+KNN_K = 8
+
+
+# --------------------------------------------------------------------------
+# Dense layer with custom VJP — forward AND backward on the Pallas kernel.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu: bool):
+    return matmul(x, w, b, activation="relu" if relu else None)
+
+
+def _dense_fwd(x, w, b, relu: bool):
+    out = matmul(x, w, b, activation="relu" if relu else None)
+    return out, (x, w, out)
+
+
+def _dense_bwd(relu: bool, res, g):
+    x, w, out = res
+    if relu:
+        g = g * (out > 0).astype(g.dtype)
+    # dx = g @ w.T ; dw = x.T @ g — the same fused kernel, no epilogue.
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+def init_params(key=None):
+    """He-init MLP parameters (deterministic default key)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = (2.0 / FEATURES) ** 0.5
+    s2 = (2.0 / HIDDEN) ** 0.5
+    return (
+        jax.random.normal(k1, (FEATURES, HIDDEN), jnp.float32) * s1,
+        jnp.zeros((HIDDEN,), jnp.float32),
+        jax.random.normal(k2, (HIDDEN, HIDDEN), jnp.float32) * s2,
+        jnp.zeros((HIDDEN,), jnp.float32),
+        jax.random.normal(k3, (HIDDEN, 1), jnp.float32) * s2,
+        jnp.zeros((1,), jnp.float32),
+    )
+
+
+def mlp(params, x):
+    """Forward pass → predicted ln(runtime), shape (B,)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = dense(x, w1, b1, True)
+    h2 = dense(h1, w2, b2, True)
+    out = dense(h2, w3, b3, False)
+    return out[:, 0]
+
+
+def masked_mse(params, x, y, mask):
+    pred = mlp(params, x)
+    se = (pred - y) ** 2 * mask
+    return jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_step(params, x, y, mask, lr):
+    """One SGD step; returns (new_params, loss). AOT entry point."""
+    loss, grads = jax.value_and_grad(masked_mse)(params, x, y, mask)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return new_params, loss
+
+
+def predict(params, x):
+    """Predicted ln(runtime) for a feature batch. AOT entry point."""
+    return mlp(params, x)
+
+
+def knn_score(x, refs):
+    """Mean squared distance to the K nearest reference rows — the
+    validation novelty score (higher = more anomalous). AOT entry point.
+
+    Implemented with a full sort rather than ``lax.top_k``: topk lowers to
+    a `topk(..., largest=true)` HLO attribute that xla_extension 0.5.1's
+    text parser rejects, while `sort` round-trips fine.
+    """
+    d = pairwise_sqdist(x, refs)
+    return jnp.mean(jnp.sort(d, axis=1)[:, :KNN_K], axis=1)

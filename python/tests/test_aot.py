@@ -1,0 +1,59 @@
+"""AOT pipeline smoke tests: artifacts exist, are HLO text, and respect
+the declared shape contract."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PY_ROOT = os.path.dirname(HERE)
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=PY_ROOT,
+        check=True,
+    )
+    return out
+
+
+EXPECTED = ["init_params", "train_step", "predict", "knn_score"]
+
+
+def test_all_artifacts_written(artifacts):
+    for name in EXPECTED:
+        path = artifacts / f"{name}.hlo.txt"
+        assert path.exists(), name
+        text = path.read_text()
+        assert "ENTRY" in text and "HloModule" in text, f"{name} is not HLO text"
+    meta = json.loads((artifacts / "meta.json").read_text())
+    assert meta["batch"] == 256
+    assert meta["features"] == 8
+    assert meta["interchange"] == "hlo-text"
+
+
+def test_train_step_signature_shapes(artifacts):
+    text = (artifacts / "train_step.hlo.txt").read_text()
+    # 6 params + x + y + mask + lr = 10 inputs; outputs 6 params + loss.
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    end = next(i for i in range(start, len(lines)) if lines[i].rstrip() == "}")
+    entry = lines[start:end]
+    n_inputs = sum(1 for l in entry if "parameter(" in l)
+    assert n_inputs == 10, f"expected 10 entry parameters, found {n_inputs}"
+    assert "f32[256,8]" in text  # x
+    assert "f32[8,64]" in text  # w1
+
+
+def test_no_custom_calls(artifacts):
+    """interpret=True must lower to plain HLO the CPU client can run —
+    a Mosaic custom-call here would break the rust runtime."""
+    for name in EXPECTED:
+        text = (artifacts / f"{name}.hlo.txt").read_text()
+        assert "custom-call" not in text or "mosaic" not in text.lower(), name

@@ -1,0 +1,78 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including non-128-divisible ones exercising the
+block-picker) and dtypes; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, pairwise_sqdist
+from compile.kernels import ref
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 64, 100, 128, 256])
+SMALL = st.sampled_from([1, 2, 4, 8, 16, 64])
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=SMALL, n=DIMS, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k), jnp.float32)
+    w = rand(seed + 1, (k, n), jnp.float32)
+    got = matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SMALL, k=SMALL, n=SMALL, seed=st.integers(0, 2**16))
+def test_matmul_bias_relu_fusion(m, k, n, seed):
+    x = rand(seed, (m, k), jnp.float32)
+    w = rand(seed + 1, (k, n), jnp.float32)
+    b = rand(seed + 2, (n,), jnp.float32)
+    got = matmul(x, w, b, activation="relu")
+    want = ref.matmul_ref(x, w, b, activation="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert (np.asarray(got) >= 0).all(), "relu epilogue"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = rand(0, (128, 8), dtype)
+    w = rand(1, (8, 64), dtype)
+    got = matmul(x, w).astype(jnp.float32)
+    want = ref.matmul_ref(x, w).astype(jnp.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_matmul_compiled_model_shapes():
+    # The exact shapes frozen into the artifacts.
+    for (m, k, n) in [(256, 8, 64), (256, 64, 64), (256, 64, 1), (64, 256, 64)]:
+        x = rand(2, (m, k), jnp.float32)
+        w = rand(3, (k, n), jnp.float32)
+        np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=DIMS, r=DIMS, d=SMALL, seed=st.integers(0, 2**16))
+def test_pairwise_matches_ref(b, r, d, seed):
+    x = rand(seed, (b, d), jnp.float32)
+    refs = rand(seed + 1, (r, d), jnp.float32)
+    got = pairwise_sqdist(x, refs)
+    want = ref.pairwise_sqdist_ref(x, refs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(got) >= 0).all()
+
+
+def test_pairwise_zero_distance_on_self():
+    x = rand(7, (16, 8), jnp.float32)
+    d = np.asarray(pairwise_sqdist(x, x))
+    np.testing.assert_allclose(np.diag(d), np.zeros(16), atol=1e-4)

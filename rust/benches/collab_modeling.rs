@@ -1,0 +1,76 @@
+//! Collaboration benefit (paper §II motivation): prediction error of the
+//! runtime model vs the number of peers sharing performance data.
+//!
+//! "many distributed dataflow applications share key characteristics …
+//! which presents an opportunity for collaborative approaches to
+//! performance modeling" — this bench quantifies that opportunity on the
+//! AOT-compiled model via PJRT: the full distribution layer feeds peer 1's
+//! training set as more organizations participate.
+//!
+//! Requires `make artifacts`.
+
+use peersdb::modeling::datagen::{self, TraceRow, WORKLOADS};
+use peersdb::modeling::workflow;
+use peersdb::peersdb::NodeConfig;
+use peersdb::runtime::PerfModel;
+use peersdb::sim::harness;
+use peersdb::util::bench::{print_environment, Table};
+use peersdb::util::time::Duration;
+use peersdb::util::Rng;
+
+const FILES_PER_PEER: usize = 4;
+const ROWS_PER_FILE: usize = 50;
+const EPOCHS: usize = 30;
+
+fn main() -> anyhow::Result<()> {
+    print_environment("COLLABORATIVE MODELING (M-collab)");
+    let mut model = PerfModel::load("artifacts")?;
+    println!("model: {} params; batch {}\n", model.param_count(), model.meta.batch);
+
+    // Held-out evaluation rows across every workload.
+    let mut test_rng = Rng::new(555);
+    let test_rows: Vec<TraceRow> = (0..WORKLOADS.len() as u32)
+        .flat_map(|wl| (0..50).map(|_| datagen::sample_row(&mut test_rng, wl)).collect::<Vec<_>>())
+        .collect();
+
+    let mut table = Table::new(&["peers sharing", "train rows", "RMSE (ln rt)", "MAPE %"]);
+    let mut rmse_by_peers = Vec::new();
+    for &sharing in &[1usize, 2, 4, 8] {
+        // A cluster where `sharing` peers contribute their (single-
+        // workload) traces; peer 1 then assembles whatever replicated.
+        let n = sharing + 2; // root + observers
+        let mut cluster = harness::paper_cluster(0xC0 + sharing as u64, n, Duration::from_millis(300), |_| {
+            NodeConfig::default()
+        });
+        cluster.run_for(Duration::from_secs(15));
+        let mut rng = Rng::new(0xFEED + sharing as u64);
+        for peer in 1..=sharing {
+            let wl = ((peer - 1) % WORKLOADS.len()) as u32;
+            for _ in 0..FILES_PER_PEER {
+                let (file, _) = datagen::generate_contribution(&mut rng, wl, ROWS_PER_FILE);
+                harness::contribute(&mut cluster, peer, &file, WORKLOADS[wl as usize]);
+                cluster.run_for(Duration::from_millis(400));
+            }
+        }
+        cluster.run_for(Duration::from_secs(60));
+        let rows = workflow::assemble_from_node(cluster.node(1), None, &[]);
+        let mut rng2 = Rng::new(1);
+        let report = workflow::train_and_eval(&mut model, &rows, &test_rows, EPOCHS, 0.05, &mut rng2)?;
+        table.row(&[
+            sharing.to_string(),
+            report.train_rows.to_string(),
+            format!("{:.3}", report.rmse_log),
+            format!("{:.1}", report.mape * 100.0),
+        ]);
+        rmse_by_peers.push(report.rmse_log);
+    }
+    table.print();
+
+    // Shape: more sharing peers → lower error (monotone within noise).
+    let first = rmse_by_peers.first().unwrap();
+    let last = rmse_by_peers.last().unwrap();
+    println!("RMSE improvement from 1 → 8 sharing peers: {:.2}x", first / last);
+    assert!(last * 1.5 < *first, "collaboration should reduce error substantially");
+    println!("collab_modeling OK");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Experiment 2 (paper §IV-A, Fig. 4 bottom): bootstrapping time vs
+//! cluster size.
+//!
+//! "52 peers are added bit by bit to an already populated PeersDB cluster
+//! comprising initially of the root peer only. In the beginning, they
+//! were added with a downtime of 1 minute between startups, which was
+//! reduced to 30 seconds after the first 12 peers. The chosen physical
+//! machine and therefore region were changed with every deployment."
+//!
+//! Regenerates the figure's series: bootstrap time per joining peer,
+//! annotated with the cluster size at join time.
+
+use peersdb::modeling::datagen;
+use peersdb::peersdb::{NodeConfig, NodeEvent};
+use peersdb::sim::harness::{self, PeerSpec};
+use peersdb::sim::model::NetModel;
+use peersdb::sim::regions::{Region, ALL};
+use peersdb::util::bench::{print_environment, scaled, Table};
+use peersdb::util::stats;
+use peersdb::util::time::{Duration, Nanos};
+use peersdb::util::Rng;
+
+const JOINERS_FULL: usize = 52;
+/// Contributions pre-loaded on the root ("already populated cluster").
+const PRELOAD: usize = 150;
+
+fn main() {
+    print_environment("PROTOTYPE: HARDWARE & SOFTWARE SPECIFICATIONS (Table I analogue)");
+    let joiners = scaled(JOINERS_FULL);
+    println!("experiment 2: {joiners} peers join one by one (populated root, region rotated)\n");
+
+    // Join schedule: 60 s gaps for the first 12, 30 s afterwards.
+    let mut start = Duration::from_secs(30); // root warmup + preload window
+    // Pods land on the six GKE machines (one per region); rotating the
+    // region per deployment rotates the machine, as in the paper
+    // ("to avoid resource contention between starting peers").
+    let mut specs = vec![PeerSpec {
+        region: Region::AsiaEast2,
+        start_at: Nanos::ZERO,
+        cfg: NodeConfig { auto_validate: false, ..NodeConfig::default() },
+        machine: Some(0),
+        ..Default::default()
+    }];
+    for i in 0..joiners {
+        let gap = if i < 12 { Duration::from_secs(60) } else { Duration::from_secs(30) };
+        start = start + gap;
+        let region = ALL[(i + 1) % ALL.len()]; // rotate regions per join
+        specs.push(PeerSpec {
+            region,
+            start_at: Nanos(start.0),
+            cfg: NodeConfig { auto_validate: false, ..NodeConfig::default() },
+            machine: Some(ALL.iter().position(|r| *r == region).unwrap()),
+            ..Default::default()
+        });
+    }
+    let end_at = Nanos(start.0) + Duration::from_secs(120);
+    let mut cluster = harness::build_cluster(0xE2, NetModel::default(), specs);
+
+    // Populate the root before anyone joins.
+    cluster.run_for(Duration::from_secs(5));
+    let mut rng = Rng::new(0xB007);
+    for i in 0..PRELOAD {
+        let wl = (i % 6) as u32;
+        let (file, _) = datagen::generate_contribution(&mut rng, wl, 120);
+        harness::contribute(&mut cluster, 0, &file, datagen::WORKLOADS[wl as usize]);
+    }
+    println!("root populated with {PRELOAD} contributions; joining begins\n");
+    cluster.run_until(end_at);
+
+    // Bootstrap durations in join order.
+    let mut rows: Vec<(usize, &'static str, f64)> = Vec::new(); // (cluster size, region, secs)
+    let events = harness::drain_events(&mut cluster);
+    let mut durations: Vec<Option<f64>> = vec![None; cluster.len()];
+    for (idx, ev) in &events {
+        if let NodeEvent::BootstrapDone { started, completed, .. } = ev {
+            durations[*idx] = Some((completed.0 - started.0) as f64 / 1e9);
+        }
+    }
+    for idx in 1..cluster.len() {
+        if let Some(secs) = durations[idx] {
+            rows.push((idx, cluster.region_of(idx).name(), secs));
+        }
+    }
+
+    println!("Fig. 4 (bottom) — bootstrapping time per joining peer [s]:");
+    let mut table = Table::new(&["join#", "cluster size", "region", "bootstrap [s]"]);
+    for (idx, region, secs) in &rows {
+        table.row(&[
+            idx.to_string(),
+            idx.to_string(), // size of the cluster it joined
+            region.to_string(),
+            format!("{secs:.2}"),
+        ]);
+    }
+    table.print();
+
+    // Paper observation 1: "the overall size of the cluster impacts the
+    // bootstrapping time for every new peer to join" — check an upward
+    // trend via regression slope over join index.
+    let xs: Vec<f64> = rows.iter().map(|(i, _, _)| *i as f64).collect();
+    let ys: Vec<f64> = rows.iter().map(|(_, _, s)| *s).collect();
+    let slope = stats::slope(&xs, &ys);
+    let first_q = ys[..ys.len() / 4].iter().sum::<f64>() / (ys.len() / 4) as f64;
+    let last_q = ys[ys.len() * 3 / 4..].iter().sum::<f64>() / (ys.len() - ys.len() * 3 / 4) as f64;
+    println!("trend: slope {slope:+.4} s/join; first-quartile mean {first_q:.2}s vs last-quartile mean {last_q:.2}s");
+
+    // Paper observation 2: a geographically nearby peer that already
+    // holds the data speeds up joining — compare joins where the region
+    // already hosted a peer vs first-in-region joins.
+    let mut seen = std::collections::HashSet::new();
+    seen.insert("asia-east2"); // the root
+    let (mut first_in_region, mut nearby): (Vec<f64>, Vec<f64>) = (vec![], vec![]);
+    for (_, region, secs) in &rows {
+        if seen.insert(region) {
+            first_in_region.push(*secs);
+        } else {
+            nearby.push(*secs);
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "first-in-region joins: mean {:.2}s ({}) | joins with an in-region peer: mean {:.2}s ({})",
+        mean(&first_in_region),
+        first_in_region.len(),
+        mean(&nearby),
+        nearby.len()
+    );
+
+    assert_eq!(rows.len(), joiners, "all joiners bootstrapped");
+    // Paper observation 2 must hold: an in-region peer that already holds
+    // the data accelerates bootstrap.
+    assert!(
+        mean(&nearby) < mean(&first_in_region),
+        "nearby-peer speedup not reproduced"
+    );
+    // Observation 1 (growth with cluster size) is CPU-contention driven on
+    // the paper's shared GKE machines; in our DES bootstrap is dominated
+    // by the serial log-walk RTT, so the trend is ~flat — see
+    // EXPERIMENTS.md §F4-bot for the analysis of this divergence. We
+    // assert only that it does not *collapse*.
+    assert!(
+        last_q > first_q * 0.3,
+        "bootstrap time collapsed with cluster size"
+    );
+    println!("exp2_bootstrap OK");
+}

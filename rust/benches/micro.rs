@@ -1,0 +1,138 @@
+//! Micro-benchmarks of the hot paths (the §Perf baseline and regression
+//! guard): CID hashing, codec, blockstore, log join, DHT lookup machinery
+//! and raw DES event throughput.
+
+use peersdb::blockstore::BlockStore;
+use peersdb::cid::{Cid, Codec};
+use peersdb::dht::{DhtConfig, Engine as DhtEngine, Key};
+use peersdb::ipfs_log::Log;
+use peersdb::net::{Outbox, PeerId, Runner, WireSize};
+use peersdb::peersdb::Message;
+use peersdb::sim::model::NetModel;
+use peersdb::sim::regions::Region;
+use peersdb::sim::Cluster;
+use peersdb::util::bench::{bench_ns, print_environment};
+use peersdb::util::time::{Duration, Nanos};
+use peersdb::util::Rng;
+
+fn main() {
+    print_environment("MICRO BENCHMARKS (perf-pass baseline)");
+    let mut rng = Rng::new(1);
+
+    // --- content addressing ---
+    let data_9k = {
+        let mut v = vec![0u8; 9 * 1024];
+        rng.fill_bytes(&mut v);
+        v
+    };
+    bench_ns("cid: sha256 of 9 KB contribution", 20_000, || {
+        std::hint::black_box(Cid::of_raw(&data_9k));
+    });
+
+    // --- codec ---
+    let msg = Message::Bitswap(peersdb::bitswap::Msg::Block {
+        req_id: 42,
+        cid: Cid::of_raw(b"x"),
+        data: data_9k.clone(),
+    });
+    bench_ns("codec: encode 9 KB bitswap block msg", 50_000, || {
+        std::hint::black_box(peersdb::codec::to_bytes(&msg));
+    });
+    let encoded = peersdb::codec::to_bytes(&msg);
+    bench_ns("codec: decode 9 KB bitswap block msg", 50_000, || {
+        std::hint::black_box(peersdb::codec::from_bytes::<Message>(&encoded).unwrap());
+    });
+    bench_ns("codec: wire_size estimate (O(1) path)", 1_000_000, || {
+        std::hint::black_box(WireSize::wire_size(&msg));
+    });
+
+    // --- blockstore ---
+    let mut bs = BlockStore::new();
+    let mut i = 0u64;
+    bench_ns("blockstore: put 9 KB (dedup-miss)", 20_000, || {
+        let mut d = data_9k.clone();
+        d[..8].copy_from_slice(&i.to_le_bytes());
+        i += 1;
+        std::hint::black_box(bs.put(Codec::Raw, d));
+    });
+    let hot = bs.put(Codec::Raw, data_9k.clone());
+    bench_ns("blockstore: get 9 KB", 2_000_000, || {
+        std::hint::black_box(bs.get(&hot));
+    });
+
+    // --- ipfs log ---
+    let author = PeerId::from_rng(&mut rng);
+    bench_ns("ipfs_log: append (chained entry)", 50_000, {
+        let mut log = Log::new();
+        move || {
+            std::hint::black_box(log.append(author, vec![0u8; 64]));
+        }
+    });
+    // Join of two 1k-entry logs.
+    let (mut a, mut b) = (Log::new(), Log::new());
+    let author2 = PeerId::from_rng(&mut rng);
+    for i in 0..1000u32 {
+        a.append(author, i.to_le_bytes().to_vec());
+        b.append(author2, i.to_le_bytes().to_vec());
+    }
+    bench_ns("ipfs_log: join 1k-entry disjoint log", 50, || {
+        let mut fresh = a.clone();
+        fresh.join(&b);
+        std::hint::black_box(fresh.len());
+    });
+
+    // --- dht ---
+    let own = PeerId::from_rng(&mut rng);
+    let mut engine = DhtEngine::new(own, DhtConfig::default());
+    for _ in 0..500 {
+        engine.add_seed(Nanos(0), PeerId::from_rng(&mut rng));
+    }
+    let target = Key(rng.bytes32());
+    bench_ns("dht: closest() over 500-peer table", 20_000, || {
+        std::hint::black_box(engine.table.closest(&target, 20));
+    });
+
+    // --- DES event throughput ---
+    struct Pinger {
+        id: PeerId,
+        peer: Option<PeerId>,
+        n: u64,
+    }
+    impl Runner for Pinger {
+        type Msg = u64;
+        fn id(&self) -> PeerId {
+            self.id
+        }
+        fn on_start(&mut self, _now: Nanos, out: &mut Outbox<u64>) {
+            if let Some(p) = self.peer {
+                out.send(p, 0);
+            }
+        }
+        fn on_message(&mut self, _now: Nanos, from: PeerId, msg: u64, out: &mut Outbox<u64>) {
+            self.n += 1;
+            if msg < 2_000_000 {
+                out.send(from, msg + 1);
+            }
+        }
+        fn on_timer(&mut self, _n: Nanos, _t: u64, _o: &mut Outbox<u64>) {}
+        fn processing_cost(&self, _m: &u64) -> Duration {
+            Duration(0)
+        }
+    }
+    let a_id = PeerId::from_rng(&mut rng);
+    let b_id = PeerId::from_rng(&mut rng);
+    let mut cluster: Cluster<Pinger> = Cluster::new(NetModel::uniform(1.0, 10_000.0, 0.0), 7);
+    cluster.add_node(Pinger { id: a_id, peer: Some(b_id), n: 0 }, Region::Local, Nanos::ZERO);
+    cluster.add_node(Pinger { id: b_id, peer: None, n: 0 }, Region::Local, Nanos::ZERO);
+    let t0 = std::time::Instant::now();
+    cluster.run_until_idle();
+    let events = cluster.stats.events_processed;
+    let rate = events as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "  DES: {} events in {:.2}s  →  {:.2} M events/s",
+        events,
+        t0.elapsed().as_secs_f64(),
+        rate / 1e6
+    );
+    println!("micro OK");
+}

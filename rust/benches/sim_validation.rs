@@ -1,0 +1,272 @@
+//! Validation-strategy study (paper §IV-B): scaling behaviours, async vs
+//! blocking responses, batching, and the quorum-threshold tuning knob.
+//!
+//! Four sub-experiments mirroring the paper's "Learnings":
+//!
+//! 1. **Cost-model scaling** — validation latency per cost model
+//!    (constant/linear/polynomial/exponential/logarithmic) across data
+//!    amounts ("different validation procedures exhibit different
+//!    scaling behaviors").
+//! 2. **Async vs blocking** — response time of validation *queries*
+//!    while heavy validation work is in flight ("responses to validation
+//!    requests … should be fast, which requires that validation
+//!    processes run asynchronously in a background task").
+//! 3. **Batching** — total time to validate a backlog vs batch size
+//!    ("it might be worth considering batched performance data
+//!    validation").
+//! 4. **Quorum threshold** — responses-needed sweep: share of verdicts
+//!    adopted from the network vs validated locally ("the number of
+//!    responses from peers deemed sufficient in order to decide on a
+//!    vote").
+
+use peersdb::modeling::datagen;
+use peersdb::net::Outbox;
+use peersdb::peersdb::{Node, NodeConfig, NodeEvent, ValidationSource};
+use peersdb::sim::harness::{self, PeerSpec};
+use peersdb::sim::model::NetModel;
+use peersdb::sim::regions::{Region, ALL};
+use peersdb::util::bench::{print_environment, Table};
+use peersdb::util::time::{Duration, Nanos};
+use peersdb::util::Rng;
+use peersdb::validation::quorum::QuorumConfig;
+use peersdb::validation::CostModel;
+
+fn models() -> Vec<CostModel> {
+    vec![
+        CostModel::Constant { ns: 5_000_000 },
+        CostModel::Logarithmic { base_ns: 1_000_000, ns_per_log_kb: 2_000_000.0 },
+        CostModel::Linear { base_ns: 1_000_000, ns_per_kb: 1_000_000.0 },
+        CostModel::Polynomial { base_ns: 1_000_000, ns_per_kb: 100_000.0, power: 1.8 },
+        CostModel::Exponential {
+            base_ns: 1_000_000,
+            ns_per_kb: 1_000_000.0,
+            growth_per_kb: 0.01,
+            cap_ns: 120_000_000_000,
+        },
+    ]
+}
+
+/// Sub-experiment 1: cost scaling table (pure model evaluation — the
+/// "function families" of the paper).
+fn cost_scaling() {
+    println!("1) validation-cost scaling by model and data amount [ms]:");
+    let sizes_kb = [1.0, 10.0, 100.0, 1000.0];
+    let mut table = Table::new(&["model", "1 KB", "10 KB", "100 KB", "1 MB"]);
+    for m in models() {
+        let mut cells = vec![m.name().to_string()];
+        for &kb in &sizes_kb {
+            cells.push(format!("{:.2}", m.cost(kb).as_millis_f64()));
+        }
+        table.row(&cells);
+    }
+    table.print();
+    // Ordering assertion at the large end (2 MB, past the poly/exp
+    // crossover): log < linear < poly < exp.
+    let at = |i: usize| models()[i].cost(2000.0).0;
+    assert!(at(1) < at(2) && at(2) < at(3) && at(3) <= at(4), "scaling order violated");
+}
+
+/// Sub-experiment 2: async vs blocking query latency under load.
+fn async_vs_blocking() {
+    println!("2) validation-query response time while heavy validation runs [ms]:");
+    let mut table = Table::new(&["design", "p50", "p95", "max"]);
+    for blocking in [false, true] {
+        let specs: Vec<PeerSpec> = (0..3)
+            .map(|i| PeerSpec {
+                region: Region::Local,
+                start_at: Nanos(Duration::from_millis(100).0 * i as u64),
+                cfg: NodeConfig {
+                    auto_validate: false,
+                    blocking_validation: blocking,
+                    // No quorum consultation: validations go straight to
+                    // the local background worker.
+                    quorum: QuorumConfig { fanout: 0, ..Default::default() },
+                    // Heavy model: ~2 s per validation.
+                    cost_model: CostModel::Constant { ns: 2_000_000_000 },
+                    ..NodeConfig::default()
+                },
+                ..Default::default()
+            })
+            .collect();
+        let mut cluster =
+            harness::build_cluster(0x51 + blocking as u64, NetModel::uniform(5.0, 1024.0, 0.0), specs);
+        cluster.run_for(Duration::from_secs(5));
+        // Node 1 receives a stream of contributions to validate...
+        let mut rng = Rng::new(3);
+        let mut cids = Vec::new();
+        for _ in 0..10 {
+            let (file, _) = datagen::generate_contribution(&mut rng, 0, 60);
+            cids.push(harness::contribute(&mut cluster, 1, &file, "spark-sort"));
+            cluster.run_for(Duration::from_millis(300));
+        }
+        cluster.run_for(Duration::from_secs(3));
+        for cid in &cids {
+            let c = *cid;
+            cluster.with_node(1, move |n: &mut Node, now, out: &mut Outbox<_>| {
+                n.validate(now, c, out);
+            });
+        }
+        // ...while node 2 keeps querying node 1 for verdicts.
+        let mut lat = peersdb::util::stats::Summary::new();
+        let target = cluster.peer_id(1);
+        for (i, cid) in cids.iter().cycle().take(40).enumerate() {
+            let c = *cid;
+            let before = cluster.node(2).metrics.counter("val_replies_received");
+            let t0 = cluster.now();
+            cluster.with_node(2, move |n: &mut Node, _now, out: &mut Outbox<_>| {
+                n.query_verdict_remote(target, c, out);
+            });
+            // Advance until the reply lands (or 8 s).
+            let deadline = t0 + Duration::from_secs(8);
+            while cluster.node(2).metrics.counter("val_replies_received") == before
+                && cluster.now() < deadline
+            {
+                cluster.run_for(Duration::from_millis(10));
+            }
+            if cluster.node(2).metrics.counter("val_replies_received") > before {
+                lat.push((cluster.now() - t0).as_millis_f64());
+            }
+            let _ = i;
+        }
+        table.row(&[
+            if blocking { "blocking (ablation)".into() } else { "async (paper design)".to_string() },
+            format!("{:.1}", lat.p50()),
+            format!("{:.1}", lat.p95()),
+            format!("{:.1}", lat.max()),
+        ]);
+        if blocking {
+            assert!(lat.max() > 500.0, "blocking ablation should show slow replies");
+        } else {
+            assert!(lat.p95() < 100.0, "async design should answer fast");
+        }
+    }
+    table.print();
+}
+
+/// Sub-experiment 3: batching a validation backlog.
+fn batching() {
+    println!("3) time to validate a 64-contribution backlog vs batch size [virtual s]:");
+    let mut table = Table::new(&["batch size", "completion [s]", "batches run"]);
+    for &batch in &[1usize, 8, 32] {
+        let specs = vec![PeerSpec {
+            region: Region::Local,
+            start_at: Nanos::ZERO,
+            cfg: NodeConfig {
+                auto_validate: false,
+                batch_size: batch,
+                batch_flush: Duration::from_millis(200),
+                // Expensive per-invocation base cost → batching pays.
+                cost_model: CostModel::Linear { base_ns: 500_000_000, ns_per_kb: 5_000_000.0 },
+                ..NodeConfig::default()
+            },
+            ..Default::default()
+        }];
+        let mut cluster = harness::build_cluster(0xBA + batch as u64, NetModel::default(), specs);
+        cluster.run_for(Duration::from_secs(2));
+        let mut rng = Rng::new(9);
+        let mut cids = Vec::new();
+        for _ in 0..64 {
+            let (file, _) = datagen::generate_contribution(&mut rng, 1, 60);
+            cids.push(harness::contribute(&mut cluster, 0, &file, "spark-grep"));
+        }
+        let t0 = cluster.now();
+        for cid in &cids {
+            let c = *cid;
+            cluster.with_node(0, move |n: &mut Node, now, out: &mut Outbox<_>| {
+                n.validate(now, c, out);
+            });
+        }
+        let deadline = t0 + Duration::from_secs(3600);
+        while cluster.node(0).validations.len() < 64 && cluster.now() < deadline {
+            cluster.run_for(Duration::from_secs(1));
+        }
+        assert_eq!(cluster.node(0).validations.len(), 64, "backlog not validated");
+        let batches = cluster.node(0).metrics.counter("local_validations_enqueued");
+        table.row(&[
+            batch.to_string(),
+            format!("{:.1}", (cluster.now() - t0).as_secs_f64()),
+            batches.to_string(),
+        ]);
+    }
+    table.print();
+}
+
+/// Sub-experiment 4: quorum responses-needed sweep.
+fn quorum_sweep() {
+    println!("4) quorum threshold: verdict source mix + time-to-verdict:");
+    let mut table = Table::new(&[
+        "responses needed",
+        "network-adopted",
+        "validated locally",
+        "p50 time-to-verdict [ms]",
+    ]);
+    for &needed in &[1usize, 3, 5] {
+        let n = 8;
+        let mk_cfg = || NodeConfig {
+            auto_validate: true,
+            quorum: QuorumConfig { fanout: 6, responses_needed: needed, ..Default::default() },
+            cost_model: CostModel::Constant { ns: 50_000_000 },
+            ..NodeConfig::default()
+        };
+        // Heavy stagger so later peers find existing verdicts.
+        let specs: Vec<PeerSpec> = (0..n)
+            .map(|i| PeerSpec {
+                region: ALL[i % ALL.len()],
+                start_at: Nanos(Duration::from_secs(20).0 * i as u64),
+                cfg: mk_cfg(),
+                ..Default::default()
+            })
+            .collect();
+        let mut cluster = harness::build_cluster(0x900 + needed as u64, NetModel::default(), specs);
+        cluster.run_for(Duration::from_secs(10));
+        let mut rng = Rng::new(31 + needed as u64);
+        for i in 0..6 {
+            let (file, _) = datagen::generate_contribution(&mut rng, (i % 6) as u32, 60);
+            harness::contribute(&mut cluster, 1, &file, "spark-sort");
+            cluster.run_for(Duration::from_secs(5));
+        }
+        cluster.run_for(Duration::from_secs(400));
+        let events = harness::drain_events(&mut cluster);
+        let (mut network, mut local) = (0, 0);
+        for (_, e) in &events {
+            if let NodeEvent::ValidationDone { source, .. } = e {
+                match source {
+                    ValidationSource::Network => network += 1,
+                    ValidationSource::Local => local += 1,
+                }
+            }
+        }
+        // Pooled time-to-verdict: mean of per-node medians.
+        let mut lat = peersdb::util::stats::Summary::new();
+        for i in 0..cluster.len() {
+            let n_obs = cluster
+                .node(i)
+                .metrics
+                .summary("verdict_latency_ms")
+                .map(|s| s.len())
+                .unwrap_or(0);
+            if n_obs > 0 {
+                let p50 = cluster.node_mut(i).metrics.summary_mut("verdict_latency_ms").p50();
+                lat.push(p50);
+            }
+        }
+        table.row(&[
+            needed.to_string(),
+            network.to_string(),
+            local.to_string(),
+            format!("{:.0}", lat.mean()),
+        ]);
+    }
+    table.print();
+    println!("(lower thresholds let peers rely on the network's verdicts sooner,");
+    println!(" trading independent re-validation for trust — the paper's tuning knob)");
+}
+
+fn main() {
+    print_environment("SIMULATION: HARDWARE & SOFTWARE SPECIFICATIONS (Table II analogue)");
+    cost_scaling();
+    async_vs_blocking();
+    batching();
+    quorum_sweep();
+    println!("sim_validation OK");
+}

@@ -1,0 +1,80 @@
+//! Access control: passphrase-gated network join.
+//!
+//! §III-C: "A straightforward step is the implementation of access
+//! control, i.e., the requirement of a passphrase for joining through the
+//! IPFS bootstrapping node." Peers present `sha256(passphrase)` in their
+//! `Join` message; bootstrap nodes verify it before admitting them (and
+//! before revealing peers or store heads).
+//!
+//! The second access-control mechanism of the paper — the middleware that
+//! "denies external CID requests for particular CIDs" — lives in
+//! [`crate::blockstore::BlockStore::get_public`] and is exercised on every
+//! remote `Want`.
+
+use sha2::{Digest, Sha256};
+
+/// Hash a passphrase for presentation/verification.
+pub fn hash_passphrase(pass: &str) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(b"peersdb-join-v1:");
+    h.update(pass.as_bytes());
+    h.finalize().into()
+}
+
+/// Join gate held by every peer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Gate {
+    expected: [u8; 32],
+}
+
+impl Gate {
+    pub fn new(passphrase: &str) -> Gate {
+        Gate { expected: hash_passphrase(passphrase) }
+    }
+
+    pub fn from_hash(expected: [u8; 32]) -> Gate {
+        Gate { expected }
+    }
+
+    /// The hash this node presents when joining others.
+    pub fn presentation(&self) -> [u8; 32] {
+        self.expected
+    }
+
+    /// Verify a presented hash (constant-time comparison).
+    pub fn check(&self, presented: &[u8; 32]) -> bool {
+        let mut diff = 0u8;
+        for i in 0..32 {
+            diff |= self.expected[i] ^ presented[i];
+        }
+        diff == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correct_passphrase_admits() {
+        let gate = Gate::new("fonda-c5");
+        let joiner = Gate::new("fonda-c5");
+        assert!(gate.check(&joiner.presentation()));
+    }
+
+    #[test]
+    fn wrong_passphrase_rejected() {
+        let gate = Gate::new("fonda-c5");
+        let joiner = Gate::new("wrong");
+        assert!(!gate.check(&joiner.presentation()));
+    }
+
+    #[test]
+    fn hash_is_stable_and_domain_separated() {
+        assert_eq!(hash_passphrase("x"), hash_passphrase("x"));
+        assert_ne!(hash_passphrase("x"), hash_passphrase("y"));
+        // Domain prefix: differs from a bare sha256.
+        let bare: [u8; 32] = Sha256::digest(b"x").into();
+        assert_ne!(hash_passphrase("x"), bare);
+    }
+}

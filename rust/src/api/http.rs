@@ -1,0 +1,282 @@
+//! Minimal HTTP/1.1 server exposing the [`ApiRequest`] surface over a
+//! running [`TcpNode`].
+//!
+//! Routes:
+//!
+//! | Method & path               | ApiRequest                        |
+//! |-----------------------------|-----------------------------------|
+//! | `GET  /status`              | `Status`                          |
+//! | `POST /contributions?workload=w&platform=p` | `Contribute` (body = file) |
+//! | `POST /private`             | `PutPrivate` (body = file)        |
+//! | `GET  /file/<cid>`          | `GetFile`                         |
+//! | `GET  /contributions[?workload=w]` | `Query`                    |
+//! | `GET  /verdict/<cid>`       | `GetVerdict`                      |
+//! | `POST /validate/<cid>`      | `Validate`                        |
+//! | `GET  /metrics`             | `Metrics`                         |
+
+use crate::api::{dispatch, ApiRequest, ApiResponse};
+use crate::cid::Cid;
+use crate::net::tcp::TcpNode;
+use crate::peersdb::Node;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub query: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+/// Parse an HTTP/1.1 request from a stream.
+pub fn parse_request(stream: &mut TcpStream) -> std::io::Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().unwrap_or("/").to_string();
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let query = query_str
+        .split('&')
+        .filter(|s| !s.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), String::new()),
+        })
+        .collect();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length.min(64 * 1024 * 1024)];
+    reader.read_exact(&mut body)?;
+    Ok(HttpRequest { method, path, query, body })
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &[u8]) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body);
+}
+
+/// Translate an HTTP request into the internal abstraction.
+pub fn route(req: &HttpRequest) -> Result<ApiRequest, String> {
+    let q = |name: &str| {
+        req.query
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.clone())
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/status") => Ok(ApiRequest::Status),
+        ("GET", "/metrics") => Ok(ApiRequest::Metrics),
+        ("GET", "/contributions") => Ok(ApiRequest::Query { workload: q("workload") }),
+        ("POST", "/contributions") => Ok(ApiRequest::Contribute {
+            workload: q("workload").unwrap_or_else(|| "unknown".into()),
+            platform: q("platform").unwrap_or_else(|| "unknown".into()),
+            data: req.body.clone(),
+        }),
+        ("POST", "/private") => Ok(ApiRequest::PutPrivate { data: req.body.clone() }),
+        ("GET", p) if p.starts_with("/file/") => {
+            let cid = Cid::parse(&p[6..]).ok_or("bad cid")?;
+            Ok(ApiRequest::GetFile { cid })
+        }
+        ("GET", p) if p.starts_with("/verdict/") => {
+            let cid = Cid::parse(&p[9..]).ok_or("bad cid")?;
+            Ok(ApiRequest::GetVerdict { cid })
+        }
+        ("POST", p) if p.starts_with("/validate/") => {
+            let cid = Cid::parse(&p[10..]).ok_or("bad cid")?;
+            Ok(ApiRequest::Validate { cid })
+        }
+        _ => Err(format!("no route for {} {}", req.method, req.path)),
+    }
+}
+
+/// HTTP server bound to a [`TcpNode`]; one thread per connection.
+pub struct HttpServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    pub fn start(node: Arc<TcpNode<Node>>) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut stream) = conn else { break };
+                let node = node.clone();
+                std::thread::spawn(move || {
+                    let Ok(req) = parse_request(&mut stream) else { return };
+                    match route(&req) {
+                        Err(e) => write_response(&mut stream, 404, "text/plain", e.as_bytes()),
+                        Ok(api_req) => {
+                            let resp = node.call_sync(move |n, now, out| dispatch(n, now, api_req, out));
+                            match resp {
+                                ApiResponse::Json(j) => write_response(
+                                    &mut stream,
+                                    200,
+                                    "application/json",
+                                    j.to_string().as_bytes(),
+                                ),
+                                ApiResponse::Bytes(b) => {
+                                    write_response(&mut stream, 200, "application/octet-stream", &b)
+                                }
+                                ApiResponse::Text(t) => {
+                                    write_response(&mut stream, 200, "text/plain", t.as_bytes())
+                                }
+                                ApiResponse::NotFound(e) => {
+                                    write_response(&mut stream, 404, "text/plain", e.as_bytes())
+                                }
+                                ApiResponse::BadRequest(e) => {
+                                    write_response(&mut stream, 400, "text/plain", e.as_bytes())
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        Ok(HttpServer { addr, stop, thread: Some(thread) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Tiny HTTP client for tests and the CLI.
+pub fn http_get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+    http_call(addr, "GET", path, &[])
+}
+
+pub fn http_post(addr: SocketAddr, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+    http_call(addr, "POST", path, body)
+}
+
+fn http_call(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.write_all(body)?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.trim_end().split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::json::Json;
+    use crate::net::tcp::Directory;
+    use crate::peersdb::NodeConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn http_round_trip_over_real_sockets() {
+        let mut rng = Rng::new(1);
+        let id = crate::net::PeerId::from_rng(&mut rng);
+        let node = Node::new(id, NodeConfig::default(), 2);
+        let dir = Directory::new();
+        let tcp = Arc::new(TcpNode::start(node, dir).unwrap());
+        let server = HttpServer::start(tcp.clone()).unwrap();
+
+        // Status.
+        let (code, body) = http_get(server.addr, "/status").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.path("contributions").unwrap().as_u64(), Some(0));
+
+        // POST a contribution, then read it back.
+        let (code, body) = http_post(
+            server.addr,
+            "/contributions?workload=spark-sort&platform=gcp",
+            b"file-bytes",
+        )
+        .unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let cid = j.path("cid").unwrap().as_str().unwrap().to_string();
+        let (code, body) = http_get(server.addr, &format!("/file/{cid}")).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, b"file-bytes");
+
+        // Query + 404s.
+        let (code, body) = http_get(server.addr, "/contributions?workload=spark-sort").unwrap();
+        assert_eq!(code, 200);
+        assert!(std::str::from_utf8(&body).unwrap().contains(&cid));
+        let (code, _) = http_get(server.addr, "/file/junk").unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = http_get(server.addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+
+        server.stop();
+        match Arc::try_unwrap(tcp) {
+            Ok(t) => t.stop(),
+            Err(_) => panic!("server threads still hold the node"),
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! API layer: HTTP and shell front-ends (Fig. 3 of the paper).
+//!
+//! "APIs translate requests (e.g. get, post, query) to an internal
+//! abstraction, suitable for the service component." Here the internal
+//! abstraction is [`ApiRequest`]/[`ApiResponse`]; both the HTTP server
+//! ([`http`]) and the shell REPL ([`shell`]) translate into it, and
+//! [`dispatch`] executes it against a [`Node`] (on the node's event-loop
+//! thread when run over TCP).
+
+pub mod http;
+pub mod shell;
+
+use crate::cid::Cid;
+use crate::codec::json::Json;
+use crate::net::Outbox;
+use crate::peersdb::{Message, Node};
+use crate::util::time::Nanos;
+
+/// The internal request abstraction shared by all API front-ends.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiRequest {
+    Status,
+    /// POST a contribution file.
+    Contribute { workload: String, platform: String, data: Vec<u8> },
+    /// Store a private (unshared) file.
+    PutPrivate { data: Vec<u8> },
+    /// GET a file by root CID.
+    GetFile { cid: Cid },
+    /// Query contribution records, optionally by workload.
+    Query { workload: Option<String> },
+    /// Stored validation verdict for a CID.
+    GetVerdict { cid: Cid },
+    /// Trigger validation of a CID.
+    Validate { cid: Cid },
+    /// Metrics report.
+    Metrics,
+}
+
+/// The internal response abstraction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiResponse {
+    Json(Json),
+    Bytes(Vec<u8>),
+    Text(String),
+    NotFound(String),
+    BadRequest(String),
+}
+
+/// Execute a request against the node. `now`/`out` come from the driver
+/// (timer wheel + transport), exactly like any other node callback.
+pub fn dispatch(node: &mut Node, now: Nanos, req: ApiRequest, out: &mut Outbox<Message>) -> ApiResponse {
+    match req {
+        ApiRequest::Status => {
+            let j = Json::obj()
+                .set("peer_id", node.peer_id().to_string())
+                .set("bootstrapped", node.is_bootstrapped())
+                .set("contributions", node.contributions.len() as u64)
+                .set("validations", node.validations.len() as u64)
+                .set("blocks", node.bs.len() as u64)
+                .set("bytes_stored", node.bs.bytes_stored() as u64);
+            ApiResponse::Json(j)
+        }
+        ApiRequest::Contribute { workload, platform, data } => {
+            if data.is_empty() {
+                return ApiResponse::BadRequest("empty contribution".into());
+            }
+            let cid = node.contribute(now, &data, &workload, &platform, out);
+            ApiResponse::Json(Json::obj().set("cid", cid.to_string_full()))
+        }
+        ApiRequest::PutPrivate { data } => {
+            if data.is_empty() {
+                return ApiResponse::BadRequest("empty file".into());
+            }
+            let cid = node.put_private(&data);
+            ApiResponse::Json(Json::obj().set("cid", cid.to_string_full()).set("private", true))
+        }
+        ApiRequest::GetFile { cid } => match node.get_file(&cid) {
+            Some(data) => ApiResponse::Bytes(data),
+            None => ApiResponse::NotFound(format!("no local data for {cid}")),
+        },
+        ApiRequest::Query { workload } => {
+            let list = node.query_contributions(|c| {
+                workload.as_deref().map(|w| c.workload == w).unwrap_or(true)
+            });
+            let arr: Vec<Json> = list
+                .into_iter()
+                .map(|c| {
+                    Json::obj()
+                        .set("cid", c.data_cid.to_string_full())
+                        .set("workload", c.workload)
+                        .set("platform", c.platform)
+                        .set("size_bytes", c.size_bytes)
+                        .set("author", c.author.to_string())
+                        .set("created_at", c.created_at)
+                })
+                .collect();
+            ApiResponse::Json(Json::obj().set("contributions", Json::Arr(arr)))
+        }
+        ApiRequest::GetVerdict { cid } => match node.validations.get(&cid) {
+            Some(r) => ApiResponse::Json(
+                Json::obj()
+                    .set("cid", cid.to_string_full())
+                    .set(
+                        "verdict",
+                        match r.verdict {
+                            crate::stores::documents::Verdict::Valid => "valid",
+                            crate::stores::documents::Verdict::Invalid => "invalid",
+                            crate::stores::documents::Verdict::Inconclusive => "inconclusive",
+                        },
+                    )
+                    .set("score", r.score),
+            ),
+            None => ApiResponse::NotFound(format!("no verdict for {cid}")),
+        },
+        ApiRequest::Validate { cid } => {
+            if !node.bs.has(&cid) {
+                return ApiResponse::NotFound(format!("no local data for {cid}"));
+            }
+            node.validate(now, cid, out);
+            ApiResponse::Json(Json::obj().set("scheduled", true))
+        }
+        ApiRequest::Metrics => ApiResponse::Text(node.metrics.report()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peersdb::NodeConfig;
+    use crate::util::Rng;
+
+    fn node() -> Node {
+        let mut rng = Rng::new(1);
+        let id = crate::net::PeerId::from_rng(&mut rng);
+        Node::new(id, NodeConfig::default(), 2)
+    }
+
+    #[test]
+    fn status_and_contribute_roundtrip() {
+        let mut n = node();
+        let mut out = Outbox::new();
+        let r = dispatch(&mut n, Nanos(0), ApiRequest::Status, &mut out);
+        let ApiResponse::Json(j) = r else { panic!() };
+        assert_eq!(j.path("contributions").unwrap().as_u64(), Some(0));
+
+        let r = dispatch(
+            &mut n,
+            Nanos(1),
+            ApiRequest::Contribute {
+                workload: "spark-sort".into(),
+                platform: "gcp".into(),
+                data: b"rows".to_vec(),
+            },
+            &mut out,
+        );
+        let ApiResponse::Json(j) = r else { panic!() };
+        let cid = Cid::parse(j.path("cid").unwrap().as_str().unwrap()).unwrap();
+
+        let r = dispatch(&mut n, Nanos(2), ApiRequest::GetFile { cid }, &mut out);
+        assert_eq!(r, ApiResponse::Bytes(b"rows".to_vec()));
+
+        let r = dispatch(&mut n, Nanos(3), ApiRequest::Query { workload: Some("spark-sort".into()) }, &mut out);
+        let ApiResponse::Json(j) = r else { panic!() };
+        assert_eq!(j.path("contributions").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn errors_are_structured() {
+        let mut n = node();
+        let mut out = Outbox::new();
+        let missing = Cid::of_raw(b"missing");
+        assert!(matches!(
+            dispatch(&mut n, Nanos(0), ApiRequest::GetFile { cid: missing }, &mut out),
+            ApiResponse::NotFound(_)
+        ));
+        assert!(matches!(
+            dispatch(
+                &mut n,
+                Nanos(0),
+                ApiRequest::Contribute { workload: "w".into(), platform: "p".into(), data: vec![] },
+                &mut out
+            ),
+            ApiResponse::BadRequest(_)
+        ));
+    }
+}

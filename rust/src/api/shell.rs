@@ -1,0 +1,86 @@
+//! Shell API: line-oriented commands over the same internal abstraction
+//! (the prototype's second access path besides HTTP).
+
+use crate::api::{ApiRequest, ApiResponse};
+use crate::cid::Cid;
+use crate::util::hex;
+
+/// Parse one shell line into an [`ApiRequest`].
+///
+/// ```text
+/// status
+/// metrics
+/// contribute <workload> <platform> <hex-bytes>
+/// private <hex-bytes>
+/// get <cid>
+/// query [workload]
+/// verdict <cid>
+/// validate <cid>
+/// ```
+pub fn parse_line(line: &str) -> Result<ApiRequest, String> {
+    let mut it = line.split_whitespace();
+    let cmd = it.next().ok_or("empty command")?;
+    let parse_cid = |s: Option<&str>| -> Result<Cid, String> {
+        Cid::parse(s.ok_or("missing cid")?).ok_or_else(|| "bad cid".to_string())
+    };
+    match cmd {
+        "status" => Ok(ApiRequest::Status),
+        "metrics" => Ok(ApiRequest::Metrics),
+        "contribute" => {
+            let workload = it.next().ok_or("missing workload")?.to_string();
+            let platform = it.next().ok_or("missing platform")?.to_string();
+            let data = hex::decode(it.next().ok_or("missing data")?).ok_or("bad hex")?;
+            Ok(ApiRequest::Contribute { workload, platform, data })
+        }
+        "private" => {
+            let data = hex::decode(it.next().ok_or("missing data")?).ok_or("bad hex")?;
+            Ok(ApiRequest::PutPrivate { data })
+        }
+        "get" => Ok(ApiRequest::GetFile { cid: parse_cid(it.next())? }),
+        "query" => Ok(ApiRequest::Query { workload: it.next().map(|s| s.to_string()) }),
+        "verdict" => Ok(ApiRequest::GetVerdict { cid: parse_cid(it.next())? }),
+        "validate" => Ok(ApiRequest::Validate { cid: parse_cid(it.next())? }),
+        other => Err(format!("unknown command: {other}")),
+    }
+}
+
+/// Render a response for terminal output.
+pub fn render(resp: &ApiResponse) -> String {
+    match resp {
+        ApiResponse::Json(j) => j.pretty(),
+        ApiResponse::Bytes(b) => hex::encode(b),
+        ApiResponse::Text(t) => t.clone(),
+        ApiResponse::NotFound(e) => format!("not found: {e}"),
+        ApiResponse::BadRequest(e) => format!("bad request: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_commands() {
+        assert_eq!(parse_line("status").unwrap(), ApiRequest::Status);
+        let r = parse_line("contribute spark-sort gcp deadbeef").unwrap();
+        let ApiRequest::Contribute { workload, data, .. } = r else { panic!() };
+        assert_eq!(workload, "spark-sort");
+        assert_eq!(data, vec![0xde, 0xad, 0xbe, 0xef]);
+        assert!(parse_line("query").is_ok());
+        assert!(parse_line("query spark-sort").is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_line("").is_err());
+        assert!(parse_line("bogus").is_err());
+        assert!(parse_line("get notacid").is_err());
+        assert!(parse_line("contribute w p nothex!").is_err());
+    }
+
+    #[test]
+    fn render_shapes() {
+        assert_eq!(render(&ApiResponse::Bytes(vec![1, 2])), "0102");
+        assert!(render(&ApiResponse::NotFound("x".into())).contains("not found"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Fixed-size chunking with a manifest block.
+//!
+//! Files larger than [`CHUNK_SIZE`] are split into chunks; a manifest
+//! block (list of chunk CIDs + total length) is what the file's public CID
+//! refers to. Small files are stored as a single raw block with no
+//! manifest, which is the common case for performance-data contributions
+//! (≈9 KB in the paper's corpus).
+
+use crate::blockstore::BlockStore;
+use crate::cid::{Cid, Codec};
+use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+
+/// 256 KiB, matching IPFS's default block size.
+pub const CHUNK_SIZE: usize = 256 * 1024;
+
+/// Magic prefix distinguishing manifest blocks from raw single blocks.
+const MANIFEST_MAGIC: &[u8; 4] = b"PDM1";
+
+/// Manifest describing a chunked file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub total_len: u64,
+    pub chunks: Vec<Cid>,
+}
+
+impl Encode for Manifest {
+    fn encode(&self, w: &mut Writer) {
+        w.put_raw(MANIFEST_MAGIC);
+        w.put_varint(self.total_len);
+        self.chunks.encode(w);
+    }
+}
+
+impl Decode for Manifest {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let magic = r.get_raw(4)?;
+        if magic != MANIFEST_MAGIC {
+            return Err(DecodeError("bad manifest magic"));
+        }
+        Ok(Manifest {
+            total_len: r.get_varint()?,
+            chunks: Vec::<Cid>::decode(r)?,
+        })
+    }
+}
+
+/// Result of adding a file: its root CID and every block CID written
+/// (root first), e.g. for pinning or provider announcement.
+#[derive(Clone, Debug)]
+pub struct AddResult {
+    pub root: Cid,
+    pub blocks: Vec<Cid>,
+}
+
+/// Add a file to the blockstore, chunking when necessary.
+pub fn add_file(bs: &mut BlockStore, data: &[u8]) -> AddResult {
+    if data.len() <= CHUNK_SIZE {
+        let root = bs.put(Codec::Raw, data.to_vec());
+        return AddResult {
+            root,
+            blocks: vec![root],
+        };
+    }
+    let mut chunks = Vec::new();
+    for chunk in data.chunks(CHUNK_SIZE) {
+        chunks.push(bs.put(Codec::Raw, chunk.to_vec()));
+    }
+    let manifest = Manifest {
+        total_len: data.len() as u64,
+        chunks: chunks.clone(),
+    };
+    let root = bs.put(Codec::Raw, crate::codec::to_bytes(&manifest));
+    let mut blocks = vec![root];
+    blocks.extend(chunks);
+    AddResult { root, blocks }
+}
+
+/// Interpret a root block: either a manifest or a plain single block.
+pub fn parse_root(data: &[u8]) -> Option<Manifest> {
+    if data.len() >= 4 && &data[..4] == MANIFEST_MAGIC {
+        crate::codec::from_bytes::<Manifest>(data).ok()
+    } else {
+        None
+    }
+}
+
+/// Reassemble a file from its root CID. `None` if any block is missing
+/// or the manifest is inconsistent.
+pub fn get_file(bs: &BlockStore, root: &Cid) -> Option<Vec<u8>> {
+    let root_data = bs.get(root)?;
+    match parse_root(root_data) {
+        None => Some(root_data.to_vec()),
+        Some(manifest) => {
+            let mut out = Vec::with_capacity(manifest.total_len as usize);
+            for cid in &manifest.chunks {
+                out.extend_from_slice(bs.get(cid)?);
+            }
+            if out.len() as u64 != manifest.total_len {
+                return None;
+            }
+            Some(out)
+        }
+    }
+}
+
+/// All block CIDs a fetcher must retrieve for `root` given the root block
+/// contents (root itself excluded).
+pub fn child_blocks(root_data: &[u8]) -> Vec<Cid> {
+    parse_root(root_data).map(|m| m.chunks).unwrap_or_default()
+}
+
+/// True when the file rooted at `root` is *fully* present (root block and
+/// every chunk). Cheaper than [`get_file`]: no reassembly.
+pub fn has_file(bs: &BlockStore, root: &Cid) -> bool {
+    match bs.get(root) {
+        None => false,
+        Some(data) => match parse_root(data) {
+            None => true,
+            Some(m) => m.chunks.iter().all(|c| bs.has(c)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn small_file_single_block() {
+        let mut bs = BlockStore::new();
+        let res = add_file(&mut bs, b"tiny");
+        assert_eq!(res.blocks.len(), 1);
+        assert_eq!(get_file(&bs, &res.root).unwrap(), b"tiny");
+    }
+
+    #[test]
+    fn large_file_chunked_roundtrip() {
+        let mut bs = BlockStore::new();
+        let mut rng = Rng::new(1);
+        let mut data = vec![0u8; CHUNK_SIZE * 3 + 1234];
+        rng.fill_bytes(&mut data);
+        let res = add_file(&mut bs, &data);
+        assert_eq!(res.blocks.len(), 5); // manifest + 4 chunks
+        assert_eq!(get_file(&bs, &res.root).unwrap(), data);
+    }
+
+    #[test]
+    fn exact_chunk_boundary() {
+        let mut bs = BlockStore::new();
+        let data = vec![7u8; CHUNK_SIZE * 2];
+        let res = add_file(&mut bs, &data);
+        assert_eq!(res.blocks.len(), 3);
+        assert_eq!(get_file(&bs, &res.root).unwrap(), data);
+    }
+
+    #[test]
+    fn missing_chunk_detected() {
+        let mut bs = BlockStore::new();
+        let data = vec![1u8; CHUNK_SIZE + 1];
+        let res = add_file(&mut bs, &data);
+        // Remove one chunk by gc'ing without pins, keeping only the root.
+        let root = res.root;
+        let chunk = res.blocks[1];
+        bs.pin(&root, crate::blockstore::Pin::Local);
+        bs.gc();
+        assert!(!bs.has(&chunk));
+        assert!(get_file(&bs, &root).is_none());
+    }
+
+    #[test]
+    fn child_blocks_listing() {
+        let mut bs = BlockStore::new();
+        let data = vec![2u8; CHUNK_SIZE * 2 + 5];
+        let res = add_file(&mut bs, &data);
+        let children = child_blocks(bs.get(&res.root).unwrap());
+        assert_eq!(children.len(), 3);
+        assert_eq!(&res.blocks[1..], &children[..]);
+    }
+
+    #[test]
+    fn dedup_across_files() {
+        let mut bs = BlockStore::new();
+        let shared = vec![9u8; CHUNK_SIZE];
+        let mut a = shared.clone();
+        a.extend_from_slice(b"tail-a");
+        let mut b = shared.clone();
+        b.extend_from_slice(b"tail-b");
+        add_file(&mut bs, &a);
+        let before = bs.len();
+        add_file(&mut bs, &b);
+        // The shared first chunk is deduplicated.
+        assert_eq!(bs.len(), before + 2); // new tail chunk + new manifest
+    }
+}

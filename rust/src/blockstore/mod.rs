@@ -1,0 +1,242 @@
+//! Content-addressed block storage.
+//!
+//! Every peer runs its own blockstore (the paper: "each peer runs its own
+//! instance of IPFS for data storage"). Blocks are immutable byte strings
+//! keyed by [`Cid`]; large files are split by the [`chunker`] into a chunk
+//! list + manifest so that transfers can be pipelined block-wise. Pinning
+//! protects replicated data from garbage collection and marks it for
+//! serving to other peers (§III-D: "marked as qualifying for IPFS
+//! pinning").
+
+pub mod chunker;
+
+use crate::cid::{Cid, Codec};
+use std::collections::{BTreeSet, HashMap};
+
+/// Why a block is pinned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pin {
+    /// Added locally by the user (never collected).
+    Local,
+    /// Replicated from the network and pinned for re-serving.
+    Replica,
+}
+
+#[derive(Clone, Debug)]
+struct BlockMeta {
+    data: Vec<u8>,
+    pin: Option<Pin>,
+    /// True if the block must not be served to remote peers (§III-B
+    /// "a middleware can be employed that denies external CID requests").
+    private: bool,
+}
+
+/// In-memory content-addressed store with pinning and privacy flags.
+///
+/// Durability is out of scope for the reproduction (the paper's
+/// experiments are likewise on ephemeral pods); the interface mirrors what
+/// a disk-backed implementation would expose.
+#[derive(Default)]
+pub struct BlockStore {
+    blocks: HashMap<Cid, BlockMeta>,
+    bytes_stored: usize,
+}
+
+impl BlockStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a block, returning its CID. Idempotent (deduplicating).
+    pub fn put(&mut self, codec: Codec, data: Vec<u8>) -> Cid {
+        let cid = Cid::of(codec, &data);
+        if !self.blocks.contains_key(&cid) {
+            self.bytes_stored += data.len();
+            self.blocks.insert(
+                cid,
+                BlockMeta {
+                    data,
+                    pin: None,
+                    private: false,
+                },
+            );
+        }
+        cid
+    }
+
+    /// Insert a block under a CID already known to match (verified fetch).
+    /// Returns `false` if verification fails.
+    pub fn put_verified(&mut self, cid: Cid, data: Vec<u8>) -> bool {
+        if !cid.verifies(&data) {
+            return false;
+        }
+        if !self.blocks.contains_key(&cid) {
+            self.bytes_stored += data.len();
+            self.blocks.insert(
+                cid,
+                BlockMeta {
+                    data,
+                    pin: None,
+                    private: false,
+                },
+            );
+        }
+        true
+    }
+
+    pub fn get(&self, cid: &Cid) -> Option<&[u8]> {
+        self.blocks.get(cid).map(|b| b.data.as_slice())
+    }
+
+    pub fn has(&self, cid: &Cid) -> bool {
+        self.blocks.contains_key(cid)
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn bytes_stored(&self) -> usize {
+        self.bytes_stored
+    }
+
+    // ----- pinning -------------------------------------------------------
+
+    pub fn pin(&mut self, cid: &Cid, pin: Pin) -> bool {
+        if let Some(b) = self.blocks.get_mut(cid) {
+            // Local pins are stronger than replica pins.
+            if b.pin != Some(Pin::Local) {
+                b.pin = Some(pin);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn unpin(&mut self, cid: &Cid) {
+        if let Some(b) = self.blocks.get_mut(cid) {
+            b.pin = None;
+        }
+    }
+
+    pub fn pin_of(&self, cid: &Cid) -> Option<Pin> {
+        self.blocks.get(cid).and_then(|b| b.pin)
+    }
+
+    /// All pinned CIDs (these are what we announce as provider records).
+    pub fn pinned(&self) -> BTreeSet<Cid> {
+        self.blocks
+            .iter()
+            .filter(|(_, b)| b.pin.is_some())
+            .map(|(c, _)| *c)
+            .collect()
+    }
+
+    /// Drop all unpinned blocks; returns (blocks, bytes) collected.
+    pub fn gc(&mut self) -> (usize, usize) {
+        let before_blocks = self.blocks.len();
+        let before_bytes = self.bytes_stored();
+        self.blocks.retain(|_, b| b.pin.is_some());
+        self.bytes_stored = self.blocks.values().map(|b| b.data.len()).sum();
+        (
+            before_blocks - self.blocks.len(),
+            before_bytes - self.bytes_stored,
+        )
+    }
+
+    // ----- privacy ---------------------------------------------------------
+
+    /// Mark a block as private: stored locally, never served remotely.
+    pub fn set_private(&mut self, cid: &Cid, private: bool) -> bool {
+        if let Some(b) = self.blocks.get_mut(cid) {
+            b.private = private;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_private(&self, cid: &Cid) -> bool {
+        self.blocks.get(cid).map(|b| b.private).unwrap_or(false)
+    }
+
+    /// Fetch for a *remote* peer: refuses private blocks. This is the
+    /// access-control middleware of §III-B.
+    pub fn get_public(&self, cid: &Cid) -> Option<&[u8]> {
+        match self.blocks.get(cid) {
+            Some(b) if !b.private => Some(b.data.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_dedup() {
+        let mut bs = BlockStore::new();
+        let c1 = bs.put(Codec::Raw, b"hello".to_vec());
+        let c2 = bs.put(Codec::Raw, b"hello".to_vec());
+        assert_eq!(c1, c2);
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs.get(&c1), Some(&b"hello"[..]));
+    }
+
+    #[test]
+    fn put_verified_rejects_tampered() {
+        let mut bs = BlockStore::new();
+        let cid = Cid::of_raw(b"good");
+        assert!(!bs.put_verified(cid, b"evil".to_vec()));
+        assert!(!bs.has(&cid));
+        assert!(bs.put_verified(cid, b"good".to_vec()));
+        assert!(bs.has(&cid));
+    }
+
+    #[test]
+    fn gc_respects_pins() {
+        let mut bs = BlockStore::new();
+        let keep = bs.put(Codec::Raw, b"keep".to_vec());
+        let drop_ = bs.put(Codec::Raw, b"drop".to_vec());
+        bs.pin(&keep, Pin::Replica);
+        let (n, bytes) = bs.gc();
+        assert_eq!(n, 1);
+        assert_eq!(bytes, 4);
+        assert!(bs.has(&keep));
+        assert!(!bs.has(&drop_));
+    }
+
+    #[test]
+    fn local_pin_not_downgraded() {
+        let mut bs = BlockStore::new();
+        let c = bs.put(Codec::Raw, b"x".to_vec());
+        bs.pin(&c, Pin::Local);
+        bs.pin(&c, Pin::Replica);
+        assert_eq!(bs.pin_of(&c), Some(Pin::Local));
+    }
+
+    #[test]
+    fn privacy_middleware() {
+        let mut bs = BlockStore::new();
+        let c = bs.put(Codec::Raw, b"secret".to_vec());
+        bs.set_private(&c, true);
+        assert!(bs.get(&c).is_some()); // local access fine
+        assert!(bs.get_public(&c).is_none()); // remote access denied
+        bs.set_private(&c, false);
+        assert!(bs.get_public(&c).is_some());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut bs = BlockStore::new();
+        bs.put(Codec::Raw, vec![0; 100]);
+        bs.put(Codec::Raw, vec![1; 50]);
+        assert_eq!(bs.bytes_stored(), 150);
+    }
+}

@@ -1,0 +1,161 @@
+//! Content identifiers: sha2-256 multihash-style CIDs.
+//!
+//! A [`Cid`] is the sha-256 digest of a block's bytes, tagged with a codec
+//! byte distinguishing raw data blocks from encoded log entries (mirroring
+//! IPFS's multicodec). Content addressing is what gives the distribution
+//! layer its tamper-resistance: a peer can verify any fetched block by
+//! re-hashing it (§III-C of the paper).
+
+use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use crate::util::hex;
+use sha2::{Digest, Sha256};
+
+/// Payload codec tag carried inside a CID.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Codec {
+    /// Opaque user bytes (contribution files, chunks).
+    Raw = 0,
+    /// Canonically-encoded [`crate::ipfs_log::Entry`].
+    LogEntry = 1,
+}
+
+impl Codec {
+    fn from_u8(v: u8) -> Result<Codec, DecodeError> {
+        match v {
+            0 => Ok(Codec::Raw),
+            1 => Ok(Codec::LogEntry),
+            _ => Err(DecodeError("invalid cid codec")),
+        }
+    }
+}
+
+/// A content identifier: `(codec, sha256(content))`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Cid {
+    pub codec: Codec,
+    pub hash: [u8; 32],
+}
+
+impl Cid {
+    /// Hash `content` under the given codec.
+    pub fn of(codec: Codec, content: &[u8]) -> Cid {
+        let mut hasher = Sha256::new();
+        hasher.update([codec as u8]);
+        hasher.update(content);
+        Cid {
+            codec,
+            hash: hasher.finalize().into(),
+        }
+    }
+
+    pub fn of_raw(content: &[u8]) -> Cid {
+        Cid::of(Codec::Raw, content)
+    }
+
+    /// Verify that `content` hashes to this CID.
+    pub fn verifies(&self, content: &[u8]) -> bool {
+        Cid::of(self.codec, content) == *self
+    }
+
+    /// The 256-bit hash as a DHT key (XOR metric operates on this).
+    pub fn key(&self) -> [u8; 32] {
+        self.hash
+    }
+
+    /// Short printable form (first 8 hash bytes), e.g. `raw:1a2b3c4d…`.
+    pub fn short(&self) -> String {
+        format!(
+            "{}:{}",
+            match self.codec {
+                Codec::Raw => "raw",
+                Codec::LogEntry => "log",
+            },
+            hex::encode(&self.hash[..8])
+        )
+    }
+
+    /// Full printable form; parseable by [`Cid::parse`].
+    pub fn to_string_full(&self) -> String {
+        format!("{}{}", (self.codec as u8) + b'0' as u8 - 48, hex::encode(&self.hash))
+    }
+
+    /// Parse the full printable form: one codec digit + 64 hex chars.
+    pub fn parse(s: &str) -> Option<Cid> {
+        if s.len() != 65 {
+            return None;
+        }
+        let codec = Codec::from_u8(s.as_bytes()[0].wrapping_sub(b'0')).ok()?;
+        let bytes = hex::decode(&s[1..])?;
+        Some(Cid {
+            codec,
+            hash: bytes.try_into().ok()?,
+        })
+    }
+}
+
+impl std::fmt::Debug for Cid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Cid({})", self.short())
+    }
+}
+
+impl std::fmt::Display for Cid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_string_full())
+    }
+}
+
+impl Encode for Cid {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(self.codec as u8);
+        w.put_raw(&self.hash);
+    }
+}
+
+impl Decode for Cid {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let codec = Codec::from_u8(r.get_u8()?)?;
+        let hash = r.get_raw(32)?.try_into().unwrap();
+        Ok(Cid { codec, hash })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{from_bytes, to_bytes};
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(Cid::of_raw(b"hello"), Cid::of_raw(b"hello"));
+        assert_ne!(Cid::of_raw(b"hello"), Cid::of_raw(b"world"));
+    }
+
+    #[test]
+    fn codec_separates_namespaces() {
+        assert_ne!(Cid::of(Codec::Raw, b"x"), Cid::of(Codec::LogEntry, b"x"));
+    }
+
+    #[test]
+    fn verification() {
+        let cid = Cid::of_raw(b"data");
+        assert!(cid.verifies(b"data"));
+        assert!(!cid.verifies(b"Data"));
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let cid = Cid::of(Codec::LogEntry, b"entry");
+        let s = cid.to_string_full();
+        assert_eq!(Cid::parse(&s), Some(cid));
+        assert!(Cid::parse("junk").is_none());
+        assert!(Cid::parse(&s[..64]).is_none());
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let cid = Cid::of_raw(b"abc");
+        assert_eq!(from_bytes::<Cid>(&to_bytes(&cid)).unwrap(), cid);
+    }
+}

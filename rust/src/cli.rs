@@ -1,0 +1,81 @@
+//! Tiny command-line argument parser (no clap in the offline crate set).
+//!
+//! Supports `command [positional...] [--flag] [--key value]` shapes.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Parse an argument list (excluding argv[0]). Options take a value
+/// unless listed in `boolean_flags`.
+pub fn parse(args: &[String], boolean_flags: &[&str]) -> Result<Args, String> {
+    let mut out = Args::default();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            if boolean_flags.contains(&name) {
+                out.flags.push(name.to_string());
+            } else {
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("option --{name} requires a value"))?;
+                out.options.insert(name.to_string(), v.clone());
+            }
+        } else if out.command.is_none() {
+            out.command = Some(a.clone());
+        } else {
+            out.positional.push(a.clone());
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(&v(&["node", "--seed", "42", "--http", "pos1"]), &["http"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("node"));
+        assert_eq!(a.opt("seed"), Some("42"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 42);
+        assert!(a.flag("http"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&v(&["node", "--seed"]), &[]).is_err());
+        let a = parse(&v(&["x"]), &[]).unwrap();
+        assert!(a.opt_u64("seed", 7).unwrap() == 7);
+        assert!(parse(&v(&["x", "--seed", "nope"]), &[]).unwrap().opt_u64("seed", 0).is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! Canonical binary codec: LEB128 varints, length-prefixed bytes/strings,
+//! little-endian fixed floats. One valid encoding per value — encoded
+//! bytes are safe to content-address.
+
+/// Error produced when decoding malformed input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeError(pub &'static str);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error: {}", self.0)
+    }
+}
+impl std::error::Error for DecodeError {}
+
+/// Append-only encode buffer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Unsigned LEB128.
+    #[inline]
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                return;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    #[inline]
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    #[inline]
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Raw bytes without a length prefix (fixed-size fields).
+    #[inline]
+    pub fn put_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+}
+
+/// Cursor over an encoded buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Error unless the buffer was fully consumed.
+    pub fn finish(&self) -> Result<(), DecodeError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(DecodeError("trailing bytes"))
+        }
+    }
+
+    #[inline]
+    pub fn get_u8(&mut self) -> Result<u8, DecodeError> {
+        if self.pos >= self.buf.len() {
+            return Err(DecodeError("eof reading u8"));
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    #[inline]
+    pub fn get_varint(&mut self) -> Result<u64, DecodeError> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.get_u8()?;
+            if shift == 63 && b > 1 {
+                return Err(DecodeError("varint overflow"));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                // canonical: no zero-padding continuation bytes
+                if b == 0 && shift != 0 {
+                    return Err(DecodeError("non-canonical varint"));
+                }
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(DecodeError("varint too long"));
+            }
+        }
+    }
+
+    #[inline]
+    pub fn get_u64(&mut self) -> Result<u64, DecodeError> {
+        let raw = self.get_raw(8)?;
+        Ok(u64::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_f64(&mut self) -> Result<f64, DecodeError> {
+        let raw = self.get_raw(8)?;
+        Ok(f64::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_f32(&mut self) -> Result<f32, DecodeError> {
+        let raw = self.get_raw(4)?;
+        Ok(f32::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError("eof reading raw"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], DecodeError> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() {
+            return Err(DecodeError("length prefix beyond buffer"));
+        }
+        self.get_raw(n)
+    }
+
+    #[inline]
+    pub fn get_str(&mut self) -> Result<&'a str, DecodeError> {
+        std::str::from_utf8(self.get_bytes()?).map_err(|_| DecodeError("invalid utf8"))
+    }
+}
+
+/// Types encodable to the canonical binary format.
+pub trait Encode {
+    fn encode(&self, w: &mut Writer);
+}
+
+/// Types decodable from the canonical binary format.
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError>;
+}
+
+impl Encode for u64 {
+    fn encode(&self, w: &mut Writer) {
+        w.put_varint(*self);
+    }
+}
+impl Decode for u64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.get_varint()
+    }
+}
+
+impl Encode for u32 {
+    fn encode(&self, w: &mut Writer) {
+        w.put_varint(*self as u64);
+    }
+}
+impl Decode for u32 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        u32::try_from(r.get_varint()?).map_err(|_| DecodeError("u32 overflow"))
+    }
+}
+
+impl Encode for bool {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(*self as u8);
+    }
+}
+impl Decode for bool {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match r.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(DecodeError("invalid bool")),
+        }
+    }
+}
+
+impl Encode for f64 {
+    fn encode(&self, w: &mut Writer) {
+        w.put_f64(*self);
+    }
+}
+impl Decode for f64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.get_f64()
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(self);
+    }
+}
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(r.get_str()?.to_string())
+    }
+}
+
+impl Encode for Vec<u8> {
+    fn encode(&self, w: &mut Writer) {
+        w.put_bytes(self);
+    }
+}
+impl Decode for Vec<u8> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(r.get_bytes()?.to_vec())
+    }
+}
+
+impl<T: Encode> Encode for [T] {
+    fn encode(&self, w: &mut Writer) {
+        w.put_varint(self.len() as u64);
+        for item in self {
+            item.encode(w);
+        }
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, w: &mut Writer) {
+        self.as_slice().encode(w);
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let n = r.get_varint()? as usize;
+        // Defensive cap: each element consumes ≥1 byte.
+        if n > r.remaining() {
+            return Err(DecodeError("vec length beyond buffer"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                v.encode(w);
+            }
+        }
+    }
+}
+
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match r.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            _ => Err(DecodeError("invalid option tag")),
+        }
+    }
+}
+
+impl<const N: usize> Encode for [u8; N] {
+    fn encode(&self, w: &mut Writer) {
+        w.put_raw(self);
+    }
+}
+
+impl<const N: usize> Decode for [u8; N] {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let raw = r.get_raw(N)?;
+        Ok(raw.try_into().unwrap())
+    }
+}
+
+impl<A: Encode, B: Encode> Encode for (A, B) {
+    fn encode(&self, w: &mut Writer) {
+        self.0.encode(w);
+        self.1.encode(w);
+    }
+}
+
+impl<A: Decode, B: Decode> Decode for (A, B) {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{from_bytes, to_bytes};
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let b = to_bytes(&v);
+            assert_eq!(from_bytes::<u64>(&b).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn varint_canonical() {
+        // 0x80 0x00 is a non-canonical encoding of 0.
+        let mut r = Reader::new(&[0x80, 0x00]);
+        assert!(r.get_varint().is_err());
+    }
+
+    #[test]
+    fn compound_roundtrip() {
+        let v: (String, Vec<u64>) = ("hello".into(), vec![1, 2, 3]);
+        let b = to_bytes(&v);
+        assert_eq!(from_bytes::<(String, Vec<u64>)>(&b).unwrap(), v);
+    }
+
+    #[test]
+    fn option_roundtrip() {
+        let some: Option<String> = Some("x".into());
+        let none: Option<String> = None;
+        assert_eq!(from_bytes::<Option<String>>(&to_bytes(&some)).unwrap(), some);
+        assert_eq!(from_bytes::<Option<String>>(&to_bytes(&none)).unwrap(), none);
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut b = to_bytes(&7u64);
+        b.push(0);
+        assert!(from_bytes::<u64>(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_length() {
+        // Length prefix claims 2^40 elements with a 3-byte body.
+        let buf = [0xff, 0xff, 0xff, 0xff, 0xff, 0x1f, 1, 2, 3];
+        assert!(from_bytes::<Vec<u8>>(&buf).is_err());
+        assert!(from_bytes::<Vec<u64>>(&buf).is_err());
+    }
+
+    #[test]
+    fn fixed_array() {
+        let arr = [7u8; 32];
+        assert_eq!(from_bytes::<[u8; 32]>(&to_bytes(&arr)).unwrap(), arr);
+    }
+
+    #[test]
+    fn floats() {
+        let v = -1234.5678f64;
+        assert_eq!(from_bytes::<f64>(&to_bytes(&v)).unwrap(), v);
+    }
+}

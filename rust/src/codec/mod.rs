@@ -1,0 +1,28 @@
+//! Serialization: a canonical binary wire codec and a JSON implementation.
+//!
+//! The offline crate set has no `serde` facade, so both codecs are built
+//! here. The binary codec ([`bin`]) is the wire + content-hash format —
+//! it is *canonical* (one encoding per value), which matters because CIDs
+//! are hashes of encoded bytes. JSON ([`json`]) is used for configuration
+//! files, the HTTP API, and contribution payload metadata.
+
+pub mod bin;
+pub mod json;
+
+pub use bin::{Decode, Encode, Reader, Writer};
+pub use json::Json;
+
+/// Encode any `Encode` value to a fresh buffer.
+pub fn to_bytes<T: Encode + ?Sized>(value: &T) -> Vec<u8> {
+    let mut w = Writer::new();
+    value.encode(&mut w);
+    w.into_bytes()
+}
+
+/// Decode a value from a buffer, requiring full consumption.
+pub fn from_bytes<T: Decode>(bytes: &[u8]) -> Result<T, bin::DecodeError> {
+    let mut r = Reader::new(bytes);
+    let v = T::decode(&mut r)?;
+    r.finish()?;
+    Ok(v)
+}

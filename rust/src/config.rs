@@ -1,0 +1,163 @@
+//! Typed configuration loaded from JSON files + CLI overrides — the
+//! reproduction's stand-in for the paper's Helm-chart parametrization.
+
+use crate::codec::json::Json;
+use crate::dht::DhtConfig;
+use crate::peersdb::NodeConfig;
+use crate::util::time::Duration;
+use crate::validation::quorum::QuorumConfig;
+use crate::validation::CostModel;
+
+/// Load a [`NodeConfig`] from a JSON document; missing fields keep their
+/// defaults. See `examples/` and README for the schema.
+pub fn node_config_from_json(j: &Json) -> Result<NodeConfig, String> {
+    let mut cfg = NodeConfig::default();
+    if let Some(v) = j.path("passphrase").and_then(|v| v.as_str()) {
+        cfg.passphrase = v.to_string();
+    }
+    if let Some(v) = j.path("store_name").and_then(|v| v.as_str()) {
+        cfg.store_name = v.to_string();
+    }
+    if let Some(v) = j.path("auto_pin").and_then(|v| v.as_bool()) {
+        cfg.auto_pin = v;
+    }
+    if let Some(v) = j.path("auto_validate").and_then(|v| v.as_bool()) {
+        cfg.auto_validate = v;
+    }
+    if let Some(v) = j.path("announce_providers").and_then(|v| v.as_bool()) {
+        cfg.announce_providers = v;
+    }
+    if let Some(v) = j.path("neighbor_degree").and_then(|v| v.as_u64()) {
+        cfg.neighbor_degree = v as usize;
+    }
+    if let Some(v) = j.path("tick_interval_ms").and_then(|v| v.as_u64()) {
+        cfg.tick_interval = Duration::from_millis(v);
+    }
+    if let Some(v) = j.path("batch_size").and_then(|v| v.as_u64()) {
+        cfg.batch_size = v.max(1) as usize;
+    }
+    if let Some(q) = j.path("quorum") {
+        cfg.quorum = quorum_from_json(q)?;
+    }
+    if let Some(c) = j.path("cost_model") {
+        cfg.cost_model = cost_model_from_json(c)?;
+    }
+    if let Some(d) = j.path("dht") {
+        cfg.dht = dht_from_json(d, cfg.dht)?;
+    }
+    Ok(cfg)
+}
+
+fn quorum_from_json(j: &Json) -> Result<QuorumConfig, String> {
+    let mut q = QuorumConfig::default();
+    if let Some(v) = j.path("fanout").and_then(|v| v.as_u64()) {
+        q.fanout = v as usize;
+    }
+    if let Some(v) = j.path("responses_needed").and_then(|v| v.as_u64()) {
+        q.responses_needed = v as usize;
+    }
+    if let Some(v) = j.path("agreement").and_then(|v| v.as_f64()) {
+        if !(0.0..=1.0).contains(&v) {
+            return Err("quorum.agreement must be in [0,1]".into());
+        }
+        q.agreement = v;
+    }
+    if let Some(v) = j.path("timeout_ms").and_then(|v| v.as_u64()) {
+        q.timeout = Duration::from_millis(v);
+    }
+    Ok(q)
+}
+
+fn dht_from_json(j: &Json, mut d: DhtConfig) -> Result<DhtConfig, String> {
+    if let Some(v) = j.path("alpha").and_then(|v| v.as_u64()) {
+        d.alpha = v.max(1) as usize;
+    }
+    if let Some(v) = j.path("k").and_then(|v| v.as_u64()) {
+        d.k = v.max(1) as usize;
+    }
+    if let Some(v) = j.path("rpc_timeout_ms").and_then(|v| v.as_u64()) {
+        d.rpc_timeout = Duration::from_millis(v);
+    }
+    Ok(d)
+}
+
+/// Cost-model schema: `{"kind": "linear", "base_ns": ..., ...}`.
+pub fn cost_model_from_json(j: &Json) -> Result<CostModel, String> {
+    let kind = j
+        .path("kind")
+        .and_then(|v| v.as_str())
+        .ok_or("cost_model.kind missing")?;
+    let num = |name: &str, default: f64| -> f64 {
+        j.path(name).and_then(|v| v.as_f64()).unwrap_or(default)
+    };
+    Ok(match kind {
+        "constant" => CostModel::Constant { ns: num("ns", 1e6) as u64 },
+        "linear" => CostModel::Linear {
+            base_ns: num("base_ns", 1e6) as u64,
+            ns_per_kb: num("ns_per_kb", 1e4),
+        },
+        "polynomial" => CostModel::Polynomial {
+            base_ns: num("base_ns", 1e6) as u64,
+            ns_per_kb: num("ns_per_kb", 1e4),
+            power: num("power", 2.0),
+        },
+        "exponential" => CostModel::Exponential {
+            base_ns: num("base_ns", 1e6) as u64,
+            ns_per_kb: num("ns_per_kb", 1.0),
+            growth_per_kb: num("growth_per_kb", 0.01),
+            cap_ns: num("cap_ns", 60e9) as u64,
+        },
+        "logarithmic" => CostModel::Logarithmic {
+            base_ns: num("base_ns", 1e6) as u64,
+            ns_per_log_kb: num("ns_per_log_kb", 1e5),
+        },
+        other => return Err(format!("unknown cost model kind: {other}")),
+    })
+}
+
+/// Load a node config from a file path.
+pub fn load_node_config(path: &str) -> Result<NodeConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+    node_config_from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = node_config_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.store_name, "contributions");
+        assert!(cfg.auto_pin);
+    }
+
+    #[test]
+    fn full_document() {
+        let text = r#"{
+            "passphrase": "secret",
+            "auto_validate": true,
+            "batch_size": 8,
+            "quorum": {"fanout": 7, "responses_needed": 4, "agreement": 0.75, "timeout_ms": 2000},
+            "cost_model": {"kind": "polynomial", "base_ns": 1000, "ns_per_kb": 50, "power": 1.5},
+            "dht": {"alpha": 4, "k": 16, "rpc_timeout_ms": 1500}
+        }"#;
+        let cfg = node_config_from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.passphrase, "secret");
+        assert!(cfg.auto_validate);
+        assert_eq!(cfg.batch_size, 8);
+        assert_eq!(cfg.quorum.fanout, 7);
+        assert_eq!(cfg.quorum.agreement, 0.75);
+        assert_eq!(cfg.dht.alpha, 4);
+        assert!(matches!(cfg.cost_model, CostModel::Polynomial { power, .. } if power == 1.5));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let j = Json::parse(r#"{"quorum": {"agreement": 1.5}}"#).unwrap();
+        assert!(node_config_from_json(&j).is_err());
+        let j = Json::parse(r#"{"cost_model": {"kind": "quantum"}}"#).unwrap();
+        assert!(node_config_from_json(&j).is_err());
+    }
+}

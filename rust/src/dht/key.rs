@@ -1,0 +1,136 @@
+//! 256-bit DHT keys and the XOR metric (Maymounkov & Mazières, 2002).
+
+use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use crate::net::PeerId;
+
+/// A point in the 256-bit Kademlia key space. Peers live at the hash of
+/// their id; content lives at its CID hash.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Key(pub [u8; 32]);
+
+impl Key {
+    pub fn from_peer(id: PeerId) -> Key {
+        // Peer ids are already uniformly random 256-bit values.
+        Key(id.0)
+    }
+
+    pub fn from_cid(cid: &crate::cid::Cid) -> Key {
+        Key(cid.key())
+    }
+
+    /// XOR distance to another key.
+    pub fn distance(&self, other: &Key) -> Distance {
+        let mut d = [0u8; 32];
+        for i in 0..32 {
+            d[i] = self.0[i] ^ other.0[i];
+        }
+        Distance(d)
+    }
+
+    /// Index of the k-bucket this key falls into relative to `self`:
+    /// 255 − (leading zero bits of the distance); `None` for self.
+    pub fn bucket_index(&self, other: &Key) -> Option<usize> {
+        let d = self.distance(other);
+        let lz = d.leading_zeros();
+        if lz == 256 {
+            None
+        } else {
+            Some(255 - lz)
+        }
+    }
+}
+
+impl std::fmt::Debug for Key {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Key({})", crate::util::hex::encode(&self.0[..4]))
+    }
+}
+
+impl Encode for Key {
+    fn encode(&self, w: &mut Writer) {
+        w.put_raw(&self.0);
+    }
+}
+
+impl Decode for Key {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(Key(r.get_raw(32)?.try_into().unwrap()))
+    }
+}
+
+/// An XOR distance; ordered big-endian (smaller = closer).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Distance(pub [u8; 32]);
+
+impl Distance {
+    pub fn leading_zeros(&self) -> usize {
+        let mut n = 0;
+        for &b in &self.0 {
+            if b == 0 {
+                n += 8;
+            } else {
+                n += b.leading_zeros() as usize;
+                break;
+            }
+        }
+        n
+    }
+}
+
+impl std::fmt::Debug for Distance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Distance(2^{})", 256 - self.leading_zeros())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn k(byte: u8) -> Key {
+        let mut b = [0u8; 32];
+        b[0] = byte;
+        Key(b)
+    }
+
+    #[test]
+    fn distance_is_metric() {
+        let mut rng = Rng::new(1);
+        let a = Key(rng.bytes32());
+        let b = Key(rng.bytes32());
+        let c = Key(rng.bytes32());
+        // identity
+        assert_eq!(a.distance(&a).leading_zeros(), 256);
+        // symmetry
+        assert_eq!(a.distance(&b), b.distance(&a));
+        // triangle inequality under XOR: d(a,c) <= d(a,b) XOR d(b,c) — the
+        // XOR relation itself: d(a,b) ^ d(b,c) == d(a,c)
+        let ab = a.distance(&b);
+        let bc = b.distance(&c);
+        let ac = a.distance(&c);
+        let mut x = [0u8; 32];
+        for i in 0..32 {
+            x[i] = ab.0[i] ^ bc.0[i];
+        }
+        assert_eq!(Distance(x), ac);
+    }
+
+    #[test]
+    fn bucket_indices() {
+        let origin = k(0);
+        assert_eq!(origin.bucket_index(&k(0x80)), Some(255));
+        assert_eq!(origin.bucket_index(&k(0x01)), Some(248));
+        assert_eq!(origin.bucket_index(&origin), None);
+        let mut low = [0u8; 32];
+        low[31] = 1;
+        assert_eq!(origin.bucket_index(&Key(low)), Some(0));
+    }
+
+    #[test]
+    fn ordering_matches_closeness() {
+        let origin = k(0);
+        assert!(origin.distance(&k(1)) < origin.distance(&k(2)));
+        assert!(origin.distance(&k(2)) < origin.distance(&k(0xff)));
+    }
+}

@@ -1,0 +1,18 @@
+//! Kademlia distributed hash table.
+//!
+//! The peer- and provider-discovery substrate (the paper's IPFS nodes use
+//! exactly this: "IPFS … leverages the Kademlia Distributed Hash Table to
+//! facilitate the discovery of network addresses pertaining to peer nodes
+//! and the IPFS objects hosted by said peers").
+//!
+//! Implemented from scratch: XOR metric over 256-bit keys ([`key`]),
+//! LRU k-buckets ([`kbucket`]), and a sans-io engine ([`engine`]) running
+//! iterative `FIND_NODE` / `GET_PROVIDERS` lookups with α-parallelism and
+//! provider-record storage with expiry.
+
+pub mod engine;
+pub mod kbucket;
+pub mod key;
+
+pub use engine::{DhtConfig, DhtEvent, Engine, LookupId, Rpc};
+pub use key::Key;

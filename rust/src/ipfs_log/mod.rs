@@ -1,0 +1,348 @@
+//! IPFS-Log: a content-addressed, append-only Merkle log CRDT.
+//!
+//! The paper's contributions store is "an append-only log with traversable
+//! history, which in turn uses the IPFS-Log internally" — an
+//! operation-based conflict-free replicated data type. Each [`Entry`] is
+//! content-addressed (its CID is the hash of its canonical encoding) and
+//! references the log's previous heads, forming a Merkle DAG. Replication
+//! is therefore just block exchange: learn remote heads (via pubsub),
+//! fetch missing entries (via bitswap), [`Log::join_entry`] them, and the
+//! logs converge — commutatively, associatively, idempotently (verified by
+//! property tests in `rust/tests/prop.rs`).
+
+use crate::cid::{Cid, Codec};
+use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use crate::net::PeerId;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// One log entry. `lamport` is a Lamport clock establishing a total order
+/// consistent with causality; ties break on `(author, cid)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub author: PeerId,
+    pub lamport: u64,
+    /// CIDs of the heads this entry supersedes (Merkle parents).
+    pub next: Vec<Cid>,
+    /// Opaque payload (the stores define its schema).
+    pub payload: Vec<u8>,
+}
+
+impl Encode for Entry {
+    fn encode(&self, w: &mut Writer) {
+        self.author.encode(w);
+        w.put_varint(self.lamport);
+        self.next.encode(w);
+        w.put_bytes(&self.payload);
+    }
+}
+
+impl Decode for Entry {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(Entry {
+            author: PeerId::decode(r)?,
+            lamport: r.get_varint()?,
+            next: Vec::decode(r)?,
+            payload: r.get_bytes()?.to_vec(),
+        })
+    }
+}
+
+impl Entry {
+    /// The entry's content identifier.
+    pub fn cid(&self) -> Cid {
+        Cid::of(Codec::LogEntry, &crate::codec::to_bytes(self))
+    }
+}
+
+/// Result of joining a remote entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Join {
+    /// Entry was new and has been added.
+    Added,
+    /// Entry was already present.
+    Known,
+    /// Entry hash did not match its CID (tampered) — rejected.
+    Rejected,
+}
+
+/// The replicated log. Entries keyed by CID; heads are entries no other
+/// entry references.
+#[derive(Clone, Debug, Default)]
+pub struct Log {
+    entries: HashMap<Cid, Entry>,
+    /// Entries referenced by some entry (present or not).
+    referenced: BTreeSet<Cid>,
+    heads: BTreeSet<Cid>,
+    /// Referenced but absent (maintained incrementally — the replication
+    /// fetch list is queried on hot paths).
+    missing: BTreeSet<Cid>,
+    max_lamport: u64,
+}
+
+impl Log {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, cid: &Cid) -> bool {
+        self.entries.contains_key(cid)
+    }
+
+    pub fn get(&self, cid: &Cid) -> Option<&Entry> {
+        self.entries.get(cid)
+    }
+
+    /// Current heads, sorted (deterministic across replicas).
+    pub fn heads(&self) -> Vec<Cid> {
+        self.heads.iter().copied().collect()
+    }
+
+    pub fn max_lamport(&self) -> u64 {
+        self.max_lamport
+    }
+
+    /// Parents referenced by known entries but not yet present — the
+    /// fetch list during replication. O(missing), maintained
+    /// incrementally.
+    pub fn missing(&self) -> Vec<Cid> {
+        self.missing.iter().copied().collect()
+    }
+
+    pub fn missing_is_empty(&self) -> bool {
+        self.missing.is_empty()
+    }
+
+    /// Append a new local entry; returns `(cid, entry)`.
+    pub fn append(&mut self, author: PeerId, payload: Vec<u8>) -> (Cid, Entry) {
+        let entry = Entry {
+            author,
+            lamport: self.max_lamport + 1,
+            next: self.heads(),
+            payload,
+        };
+        let cid = entry.cid();
+        self.insert(cid, entry.clone());
+        (cid, entry)
+    }
+
+    /// Join a replicated entry after verifying its content address.
+    pub fn join_entry(&mut self, cid: Cid, entry: Entry) -> Join {
+        if self.entries.contains_key(&cid) {
+            return Join::Known;
+        }
+        if entry.cid() != cid {
+            return Join::Rejected;
+        }
+        self.insert(cid, entry);
+        Join::Added
+    }
+
+    /// Join every entry of another log (set union).
+    pub fn join(&mut self, other: &Log) {
+        // BTreeMap pass for deterministic insertion order.
+        let sorted: BTreeMap<&Cid, &Entry> = other.entries.iter().collect();
+        for (cid, entry) in sorted {
+            if !self.entries.contains_key(cid) {
+                self.insert(*cid, entry.clone());
+            }
+        }
+    }
+
+    fn insert(&mut self, cid: Cid, entry: Entry) {
+        self.max_lamport = self.max_lamport.max(entry.lamport);
+        for parent in &entry.next {
+            self.referenced.insert(*parent);
+            self.heads.remove(parent);
+            if !self.entries.contains_key(parent) {
+                self.missing.insert(*parent);
+            }
+        }
+        if !self.referenced.contains(&cid) {
+            self.heads.insert(cid);
+        }
+        self.missing.remove(&cid);
+        self.entries.insert(cid, entry);
+    }
+
+    /// All entries in deterministic total order: `(lamport, author, cid)`.
+    /// The order is consistent with causality (a parent's lamport is
+    /// strictly smaller than its child's).
+    pub fn traverse(&self) -> Vec<(Cid, &Entry)> {
+        let mut v: Vec<(Cid, &Entry)> = self.entries.iter().map(|(c, e)| (*c, e)).collect();
+        v.sort_by(|a, b| {
+            (a.1.lamport, a.1.author, a.0).cmp(&(b.1.lamport, b.1.author, b.0))
+        });
+        v
+    }
+
+    /// Payloads in traversal order (the store-level view).
+    pub fn payloads(&self) -> impl Iterator<Item = &[u8]> {
+        self.traverse()
+            .into_iter()
+            .map(|(_, e)| e.payload.as_slice())
+            .collect::<Vec<_>>()
+            .into_iter()
+    }
+
+    /// Structural digest of the log state: hash over sorted entry CIDs.
+    /// Two replicas are converged iff their digests match.
+    pub fn digest(&self) -> [u8; 32] {
+        use sha2::{Digest, Sha256};
+        let mut cids: Vec<&Cid> = self.entries.keys().collect();
+        cids.sort();
+        let mut h = Sha256::new();
+        for c in cids {
+            h.update([c.codec as u8]);
+            h.update(c.hash);
+        }
+        h.finalize().into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn pid(rng: &mut Rng) -> PeerId {
+        PeerId::from_rng(rng)
+    }
+
+    #[test]
+    fn entry_roundtrip_and_cid_stability() {
+        let mut rng = Rng::new(1);
+        let e = Entry {
+            author: pid(&mut rng),
+            lamport: 7,
+            next: vec![Cid::of_raw(b"x")],
+            payload: b"data".to_vec(),
+        };
+        let b = crate::codec::to_bytes(&e);
+        let d = crate::codec::from_bytes::<Entry>(&b).unwrap();
+        assert_eq!(d, e);
+        assert_eq!(d.cid(), e.cid());
+    }
+
+    #[test]
+    fn append_chains_heads() {
+        let mut rng = Rng::new(2);
+        let me = pid(&mut rng);
+        let mut log = Log::new();
+        let (c1, _) = log.append(me, b"a".to_vec());
+        assert_eq!(log.heads(), vec![c1]);
+        let (c2, e2) = log.append(me, b"b".to_vec());
+        assert_eq!(log.heads(), vec![c2]);
+        assert_eq!(e2.next, vec![c1]);
+        assert_eq!(e2.lamport, 2);
+        assert_eq!(log.len(), 2);
+    }
+
+    #[test]
+    fn join_converges_two_writers() {
+        let mut rng = Rng::new(3);
+        let (a, b) = (pid(&mut rng), pid(&mut rng));
+        let mut la = Log::new();
+        let mut lb = Log::new();
+        la.append(a, b"a1".to_vec());
+        lb.append(b, b"b1".to_vec());
+        la.append(a, b"a2".to_vec());
+        // Cross-join.
+        la.join(&lb);
+        lb.join(&la);
+        assert_eq!(la.digest(), lb.digest());
+        assert_eq!(la.len(), 3);
+        assert_eq!(la.heads(), lb.heads());
+        // Both heads present (concurrent branches).
+        assert_eq!(la.heads().len(), 2);
+        // Appending after join merges the branches.
+        let (c, e) = la.append(a, b"merge".to_vec());
+        assert_eq!(e.next.len(), 2);
+        assert_eq!(la.heads(), vec![c]);
+    }
+
+    #[test]
+    fn join_idempotent_and_commutative() {
+        let mut rng = Rng::new(4);
+        let (a, b) = (pid(&mut rng), pid(&mut rng));
+        let mut la = Log::new();
+        let mut lb = Log::new();
+        for i in 0..5 {
+            la.append(a, vec![i]);
+            lb.append(b, vec![100 + i]);
+        }
+        let mut ab = la.clone();
+        ab.join(&lb);
+        let mut ba = lb.clone();
+        ba.join(&la);
+        assert_eq!(ab.digest(), ba.digest());
+        let before = ab.digest();
+        ab.join(&lb); // idempotent
+        ab.join(&la);
+        assert_eq!(ab.digest(), before);
+    }
+
+    #[test]
+    fn tampered_entry_rejected() {
+        let mut rng = Rng::new(5);
+        let a = pid(&mut rng);
+        let mut log = Log::new();
+        let entry = Entry { author: a, lamport: 1, next: vec![], payload: b"x".to_vec() };
+        let cid = entry.cid();
+        let mut forged = entry.clone();
+        forged.payload = b"y".to_vec();
+        assert_eq!(log.join_entry(cid, forged), Join::Rejected);
+        assert_eq!(log.join_entry(cid, entry), Join::Added);
+    }
+
+    #[test]
+    fn missing_parents_tracked() {
+        let mut rng = Rng::new(6);
+        let a = pid(&mut rng);
+        let mut origin = Log::new();
+        origin.append(a, b"1".to_vec());
+        let (c2, e2) = origin.append(a, b"2".to_vec());
+        // A replica that only received the newest entry knows what's missing.
+        let mut replica = Log::new();
+        replica.join_entry(c2, e2);
+        assert_eq!(replica.missing().len(), 1);
+        assert!(origin.contains(&replica.missing()[0]));
+        // Head of replica is the entry it has (its parent is absent).
+        assert_eq!(replica.heads(), vec![c2]);
+        // After fetching the parent, nothing is missing and heads match.
+        let (c1, e1) = origin.traverse()[0];
+        replica.join_entry(c1, (*e1).clone());
+        assert!(replica.missing().is_empty());
+        assert_eq!(replica.digest(), origin.digest());
+        assert_eq!(replica.heads(), origin.heads());
+    }
+
+    #[test]
+    fn traversal_is_causal_and_deterministic() {
+        let mut rng = Rng::new(7);
+        let (a, b) = (pid(&mut rng), pid(&mut rng));
+        let mut la = Log::new();
+        la.append(a, b"a1".to_vec());
+        let mut lb = la.clone();
+        lb.append(b, b"b1".to_vec());
+        la.join(&lb);
+        la.append(a, b"a2".to_vec());
+        let order: Vec<u64> = la.traverse().iter().map(|(_, e)| e.lamport).collect();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(order, sorted, "lamport order");
+        // Parent lamports strictly smaller than children.
+        for (_, e) in la.traverse() {
+            for p in &e.next {
+                assert!(la.get(p).unwrap().lamport < e.lamport);
+            }
+        }
+    }
+}

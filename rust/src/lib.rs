@@ -1,0 +1,61 @@
+//! # PeersDB-RS
+//!
+//! A peer-to-peer data distribution layer for collaborative performance
+//! modeling of distributed dataflow applications — a from-scratch Rust
+//! reproduction of the system described in
+//! *"Towards a Peer-to-Peer Data Distribution Layer for Efficient and
+//! Collaborative Resource Optimization of Distributed Dataflow
+//! Applications"* (IEEE BigData 2023).
+//!
+//! ## Architecture
+//!
+//! The crate is organized around **sans-io protocol cores**: every
+//! protocol (Kademlia DHT, bitswap block exchange, IPFS-Log replication,
+//! pubsub, collaborative validation) is a deterministic state machine that
+//! consumes `(now, Event)` pairs and emits `Command`s. Two drivers run the
+//! same cores:
+//!
+//! * [`sim`] — a discrete-event simulator with a region latency matrix,
+//!   bandwidth/jitter/loss models and churn (the evaluation harness), and
+//! * [`net::tcp`] — a threaded TCP driver for real deployments.
+//!
+//! The performance-modeling workflows (the downstream consumer that
+//! motivates the layer) call AOT-compiled JAX/Pallas computations through
+//! [`runtime`] (PJRT via the `xla` crate); Python never runs at request
+//! time.
+//!
+//! ```text
+//!  api (http/shell)      examples/, benches/
+//!        │                     │
+//!        ▼                     ▼
+//!  peersdb::Node  ◄──── sim::Cluster / net::tcp::Swarm
+//!   ├─ stores (contributions EventLog, validations DocumentStore)
+//!   ├─ ipfs_log (Merkle-CRDT)      ├─ dht (Kademlia)
+//!   ├─ bitswap (block exchange)    ├─ pubsub (floodsub)
+//!   ├─ validation (quorum voting)  ├─ access (gate, private CIDs)
+//!   └─ blockstore (content-addressed, chunked)
+//!        │
+//!  modeling ──► runtime (PJRT) ──► artifacts/*.hlo.txt (JAX+Pallas, AOT)
+//! ```
+
+pub mod access;
+pub mod api;
+pub mod bitswap;
+pub mod blockstore;
+pub mod cid;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod dht;
+pub mod ipfs_log;
+pub mod metrics;
+pub mod modeling;
+pub mod net;
+pub mod peersdb;
+pub mod pubsub;
+pub mod runtime;
+pub mod sim;
+pub mod stores;
+pub mod testkit;
+pub mod util;
+pub mod validation;

@@ -1,0 +1,139 @@
+//! PeersDB command-line entrypoint.
+//!
+//! ```text
+//! peersdb node [--config cfg.json] [--http] [--interactive] [--seed N]
+//!     Run a live TCP node (optionally with the HTTP API and a shell REPL).
+//!
+//! peersdb demo [--peers N] [--contributions M] [--seed N]
+//!     Run a self-contained simulated cluster and print summary metrics.
+//!
+//! peersdb help
+//! ```
+
+use peersdb::api::http::HttpServer;
+use peersdb::api::shell;
+use peersdb::api::{dispatch, ApiResponse};
+use peersdb::net::tcp::{Directory, TcpNode};
+use peersdb::net::PeerId;
+use peersdb::peersdb::{Node, NodeConfig};
+use peersdb::sim::harness;
+use peersdb::util::time::Duration;
+use peersdb::util::Rng;
+use std::io::BufRead;
+use std::sync::Arc;
+
+const HELP: &str = "\
+peersdb — peer-to-peer data distribution layer for collaborative
+performance modeling of distributed dataflow applications.
+
+USAGE:
+  peersdb node [--config cfg.json] [--http] [--interactive] [--seed N]
+  peersdb demo [--peers N] [--contributions M] [--seed N]
+  peersdb help
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match peersdb::cli::parse(&argv, &["http", "interactive"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("node") => cmd_node(&args),
+        Some("demo") => cmd_demo(&args),
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command: {other}\n{HELP}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_node(args: &peersdb::cli::Args) -> Result<(), String> {
+    let cfg = match args.opt("config") {
+        Some(path) => peersdb::config::load_node_config(path)?,
+        None => NodeConfig::default(),
+    };
+    let seed = args.opt_u64("seed", 42)?;
+    let mut rng = Rng::new(seed);
+    let id = PeerId::from_rng(&mut rng);
+    println!("starting node {id}");
+    let node = Node::new(id, cfg, rng.next_u64());
+    let dir = Directory::new();
+    let tcp = Arc::new(TcpNode::start(node, dir).map_err(|e| e.to_string())?);
+    println!("p2p listening on {}", tcp.addr);
+
+    let server = if args.flag("http") {
+        let s = HttpServer::start(tcp.clone()).map_err(|e| e.to_string())?;
+        println!("http api on http://{}", s.addr);
+        Some(s)
+    } else {
+        None
+    };
+
+    if args.flag("interactive") {
+        println!("shell ready (status | contribute | get | query | verdict | metrics; ^D to exit)");
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match shell::parse_line(&line) {
+                Err(e) => println!("error: {e}"),
+                Ok(req) => {
+                    let resp: ApiResponse =
+                        tcp.call_sync(move |n, now, out| dispatch(n, now, req, out));
+                    println!("{}", shell::render(&resp));
+                }
+            }
+        }
+    } else {
+        println!("running; ^C to exit");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    if let Some(s) = server {
+        s.stop();
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &peersdb::cli::Args) -> Result<(), String> {
+    let peers = args.opt_u64("peers", 8)? as usize;
+    let contributions = args.opt_u64("contributions", 20)? as usize;
+    let seed = args.opt_u64("seed", 1)?;
+    println!("simulating {peers} peers, {contributions} contributions (seed {seed})");
+    let mut cluster = harness::paper_cluster(seed, peers, Duration::from_millis(500), |_| {
+        NodeConfig::default()
+    });
+    cluster.run_for(Duration::from_secs(30));
+    let mut rng = Rng::new(seed ^ 99);
+    for i in 0..contributions {
+        let wl = (i % 6) as u32;
+        let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, wl, 80);
+        let idx = 1 + (i % (peers - 1));
+        harness::contribute(&mut cluster, idx, &data, peersdb::modeling::datagen::WORKLOADS[wl as usize]);
+        cluster.run_for(Duration::from_millis(700));
+    }
+    cluster.run_for(Duration::from_secs(60));
+    harness::assert_converged(&mut cluster);
+    println!("\nall {} stores converged ({} contributions each)", peers, cluster.node(0).contributions.len());
+    let repl = cluster
+        .node(1)
+        .metrics
+        .summary("replication_ms")
+        .map(|s| s.mean())
+        .unwrap_or(f64::NAN);
+    println!("node-1 mean replication latency: {repl:.1} ms");
+    println!("transport: {} msgs, {:.1} MiB", cluster.stats.msgs_delivered, cluster.stats.bytes_sent as f64 / 1048576.0);
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Per-node metrics: counters and sample summaries.
+//!
+//! Experiment harnesses read these after (or during) a run; nothing here
+//! allocates on the hot path beyond the first observation of a name.
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    summaries: BTreeMap<&'static str, Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&mut self, name: &'static str) {
+        *self.counters.entry(name).or_insert(0) += 1;
+    }
+
+    #[inline]
+    pub fn add(&mut self, name: &'static str, v: u64) {
+        *self.counters.entry(name).or_insert(0) += v;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        self.summaries.entry(name).or_default().push(v);
+    }
+
+    pub fn summary(&self, name: &str) -> Option<&Summary> {
+        self.summaries.get(name)
+    }
+
+    pub fn summary_mut(&mut self, name: &'static str) -> &mut Summary {
+        self.summaries.entry(name).or_default()
+    }
+
+    /// Render all metrics as a sorted report (debugging / API endpoint).
+    pub fn report(&mut self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("{k} = {v}\n"));
+        }
+        let keys: Vec<&'static str> = self.summaries.keys().copied().collect();
+        for k in keys {
+            let line = self.summaries.get_mut(k).unwrap().brief();
+            s.push_str(&format!("{k}: {line}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summaries() {
+        let mut m = Metrics::new();
+        m.inc("msgs");
+        m.inc("msgs");
+        m.add("bytes", 100);
+        assert_eq!(m.counter("msgs"), 2);
+        assert_eq!(m.counter("bytes"), 100);
+        assert_eq!(m.counter("nope"), 0);
+        m.observe("lat", 1.0);
+        m.observe("lat", 3.0);
+        assert_eq!(m.summary("lat").unwrap().mean(), 2.0);
+        let rep = m.report();
+        assert!(rep.contains("msgs = 2"));
+        assert!(rep.contains("lat:"));
+    }
+}

@@ -1,0 +1,230 @@
+//! Synthetic distributed-dataflow trace generation.
+//!
+//! Stands in for the paper's experiment corpus (C3O + scout traces:
+//! 11,133 files averaging 9.06 KB gzip-compressed). Each contribution
+//! file is a gzipped JSON document holding runtime observations of one
+//! workload under varying resource configurations. Runtimes follow a
+//! per-workload Ernest-style scaling law
+//!
+//! ```text
+//! runtime(n, g, m) = α + β·(g/n)·s(m) + γ·ln(n) + δ·n + ε
+//! ```
+//!
+//! (serial fraction, data-parallel work scaled by machine speed,
+//! coordination overhead growing with the log of the cluster size, and a
+//! linear per-node overhead; ε is lognormal-ish noise) — the same shape
+//! used by Ernest/C3O-style predictors, so a learned model's accuracy
+//! improves with more and more-diverse training data, which is exactly
+//! the collaboration effect the paper wants to enable.
+
+use crate::codec::json::Json;
+use crate::util::Rng;
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+
+/// One runtime observation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRow {
+    pub workload_id: u32,
+    pub nodes: u32,
+    /// Machine class 0..N_MACHINE_CLASSES (larger = faster).
+    pub machine_class: u32,
+    pub dataset_gb: f64,
+    pub runtime_s: f64,
+}
+
+/// Workload catalog — names follow the paper's framing (Spark/Flink jobs).
+pub const WORKLOADS: [&str; 6] = [
+    "spark-sort",
+    "spark-grep",
+    "spark-pagerank",
+    "spark-kmeans",
+    "flink-wordcount",
+    "flink-sgd",
+];
+
+pub const N_MACHINE_CLASSES: u32 = 4;
+
+/// Scaling-law coefficients for one workload.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingLaw {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub delta: f64,
+}
+
+/// Deterministic per-workload law (id-seeded so every peer generates
+/// consistent physics).
+pub fn law_for(workload_id: u32) -> ScalingLaw {
+    let mut rng = Rng::new(0xC30_0000 + workload_id as u64);
+    ScalingLaw {
+        alpha: rng.f64_range(10.0, 60.0),
+        beta: rng.f64_range(4.0, 20.0),
+        gamma: rng.f64_range(5.0, 25.0),
+        delta: rng.f64_range(0.2, 1.5),
+    }
+}
+
+/// Relative speed of a machine class (class 0 slowest).
+pub fn machine_speed(class: u32) -> f64 {
+    1.0 / (1.0 + 0.45 * class as f64)
+}
+
+/// Ground-truth runtime (noise-free).
+pub fn true_runtime(w: &ScalingLaw, nodes: u32, machine_class: u32, dataset_gb: f64) -> f64 {
+    let n = nodes as f64;
+    w.alpha + w.beta * (dataset_gb / n) * machine_speed(machine_class) / 0.1
+        + w.gamma * n.ln()
+        + w.delta * n
+}
+
+/// Sample one observation with multiplicative noise.
+pub fn sample_row(rng: &mut Rng, workload_id: u32) -> TraceRow {
+    let law = law_for(workload_id);
+    let nodes = [2u32, 4, 8, 12, 16, 24, 32, 48, 64][rng.range(0, 9)];
+    let machine_class = rng.gen_range(N_MACHINE_CLASSES as u64) as u32;
+    let dataset_gb = rng.f64_range(5.0, 500.0);
+    let noise = (rng.normal_ms(0.0, 0.08)).exp();
+    let runtime_s = true_runtime(&law, nodes, machine_class, dataset_gb) * noise;
+    TraceRow { workload_id, nodes, machine_class, dataset_gb, runtime_s }
+}
+
+/// Serialize rows into the contribution file format (gzipped JSON).
+pub fn encode_contribution(workload_id: u32, rows: &[TraceRow]) -> Vec<u8> {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("nodes", r.nodes as u64)
+                .set("mc", r.machine_class as u64)
+                .set("gb", r.dataset_gb)
+                .set("rt", r.runtime_s)
+        })
+        .collect();
+    let doc = Json::obj()
+        .set("workload", WORKLOADS[workload_id as usize % WORKLOADS.len()])
+        .set("workload_id", workload_id as u64)
+        .set("rows", Json::Arr(rows_json));
+    let text = doc.to_string();
+    let mut enc = GzEncoder::new(Vec::new(), Compression::default());
+    enc.write_all(text.as_bytes()).expect("gzip write");
+    enc.finish().expect("gzip finish")
+}
+
+/// Parse a contribution file; `None` if it is not valid gzip+json+schema.
+pub fn parse_contribution(data: &[u8]) -> Option<Vec<TraceRow>> {
+    let mut dec = GzDecoder::new(data);
+    let mut text = String::new();
+    dec.read_to_string(&mut text).ok()?;
+    let doc = Json::parse(&text).ok()?;
+    let workload_id = doc.get("workload_id")?.as_u64()? as u32;
+    let rows = doc.get("rows")?.as_arr()?;
+    let mut out = Vec::with_capacity(rows.len());
+    for r in rows {
+        out.push(TraceRow {
+            workload_id,
+            nodes: r.get("nodes")?.as_u64()? as u32,
+            machine_class: r.get("mc")?.as_u64()? as u32,
+            dataset_gb: r.get("gb")?.as_f64()?,
+            runtime_s: r.get("rt")?.as_f64()?,
+        });
+    }
+    Some(out)
+}
+
+/// Generate a realistic contribution: `n_rows` observations of one
+/// workload, gzip-encoded (sizes land near the paper's ≈9 KB average for
+/// n_rows ≈ 120).
+pub fn generate_contribution(rng: &mut Rng, workload_id: u32, n_rows: usize) -> (Vec<u8>, Vec<TraceRow>) {
+    let rows: Vec<TraceRow> = (0..n_rows).map(|_| sample_row(rng, workload_id)).collect();
+    (encode_contribution(workload_id, &rows), rows)
+}
+
+/// Generate a *corrupted* contribution (for validation experiments):
+/// a fraction of rows get NaN / negative / absurd values.
+pub fn generate_corrupt_contribution(
+    rng: &mut Rng,
+    workload_id: u32,
+    n_rows: usize,
+    corrupt_frac: f64,
+) -> (Vec<u8>, Vec<TraceRow>) {
+    let mut rows: Vec<TraceRow> = (0..n_rows).map(|_| sample_row(rng, workload_id)).collect();
+    for r in rows.iter_mut() {
+        if rng.chance(corrupt_frac) {
+            match rng.range(0, 3) {
+                0 => r.runtime_s = -5.0,
+                1 => r.runtime_s = 1.0e12, // absurd: beyond any plausible job
+                _ => r.dataset_gb = 0.0,
+            }
+        }
+    }
+    (encode_contribution(workload_id, &rows), rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let (data, rows) = generate_contribution(&mut rng, 2, 50);
+        let parsed = parse_contribution(&data).unwrap();
+        assert_eq!(parsed.len(), rows.len());
+        for (a, b) in parsed.iter().zip(&rows) {
+            assert_eq!(a.nodes, b.nodes);
+            assert!((a.runtime_s - b.runtime_s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sizes_near_paper_corpus() {
+        let mut rng = Rng::new(2);
+        let (data, _) = generate_contribution(&mut rng, 0, 120);
+        // Paper: avg 9.06 KB compressed. Ours should be same order.
+        assert!(data.len() > 2_000 && data.len() < 20_000, "size={}", data.len());
+    }
+
+    #[test]
+    fn scaling_law_sane() {
+        let law = law_for(0);
+        // More nodes with fixed data: parallel term shrinks, overhead grows.
+        let r2 = true_runtime(&law, 2, 0, 100.0);
+        let r64 = true_runtime(&law, 64, 0, 100.0);
+        assert!(r2 > 0.0 && r64 > 0.0);
+        // Faster machines shorten runtimes.
+        assert!(true_runtime(&law, 8, 3, 100.0) < true_runtime(&law, 8, 0, 100.0));
+        // Deterministic.
+        assert_eq!(law_for(3).alpha, law_for(3).alpha);
+    }
+
+    #[test]
+    fn corrupt_rows_detectable() {
+        let mut rng = Rng::new(3);
+        let (data, _) = generate_corrupt_contribution(&mut rng, 1, 100, 0.5);
+        let rows = parse_contribution(&data).unwrap();
+        let bad = rows
+            .iter()
+            .filter(|r| {
+                !r.runtime_s.is_finite()
+                    || r.runtime_s <= 0.0
+                    || r.runtime_s > 1e6
+                    || r.dataset_gb <= 0.0
+            })
+            .count();
+        assert!(bad > 20, "bad={bad}");
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(parse_contribution(b"not gzip").is_none());
+        // Valid gzip of invalid json:
+        let mut enc = GzEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(b"{oops").unwrap();
+        let data = enc.finish().unwrap();
+        assert!(parse_contribution(&data).is_none());
+    }
+}

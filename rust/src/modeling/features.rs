@@ -1,0 +1,89 @@
+//! Feature encoding shared between the Rust coordinator and the JAX
+//! model. `python/compile/model.py` documents the identical layout; the
+//! AOT artifacts are compiled against `DIM` features.
+
+use crate::modeling::datagen::TraceRow;
+
+/// Feature-vector dimensionality (must match the compiled artifacts).
+pub const DIM: usize = 8;
+
+/// Normalization constants (dataset ranges from `datagen`).
+const MAX_NODES: f64 = 64.0;
+const MAX_GB: f64 = 500.0;
+const MAX_MC: f64 = 3.0;
+
+/// Encode one trace row. Targets are `ln(runtime)` (see [`encode_target`])
+/// which keeps the regression well-conditioned across the 1–2 orders of
+/// magnitude that the scaling laws span.
+pub fn encode_row(r: &TraceRow) -> [f32; DIM] {
+    let n = r.nodes as f64;
+    let wl = r.workload_id as f64;
+    [
+        (n / MAX_NODES) as f32,
+        (n.ln() / MAX_NODES.ln()) as f32,
+        (1.0 / n) as f32,
+        (r.dataset_gb / MAX_GB) as f32,
+        // Per-node data volume, normalized by its maximum (500 GB on the
+        // smallest 2-node cluster).
+        (r.dataset_gb / n / (MAX_GB / 2.0)) as f32,
+        (r.machine_class as f64 / MAX_MC) as f32,
+        // Two cheap workload-identity channels (sin/cos of id) — enough
+        // for the 6-workload catalog without a full one-hot.
+        (wl * 0.9).sin() as f32,
+        (wl * 0.9).cos() as f32,
+    ]
+}
+
+pub fn encode_target(r: &TraceRow) -> f32 {
+    (r.runtime_s.max(1e-3)).ln() as f32
+}
+
+/// Invert [`encode_target`].
+pub fn decode_target(y: f32) -> f64 {
+    (y as f64).exp()
+}
+
+/// Encode a batch into flat row-major buffers.
+pub fn encode_batch(rows: &[TraceRow]) -> (Vec<f32>, Vec<f32>) {
+    let mut xs = Vec::with_capacity(rows.len() * DIM);
+    let mut ys = Vec::with_capacity(rows.len());
+    for r in rows {
+        xs.extend_from_slice(&encode_row(r));
+        ys.push(encode_target(r));
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modeling::datagen::sample_row;
+    use crate::util::Rng;
+
+    #[test]
+    fn features_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let wl = rng.gen_range(6) as u32;
+            let row = sample_row(&mut rng, wl);
+            let f = encode_row(&row);
+            for (i, v) in f.iter().enumerate() {
+                assert!(v.is_finite(), "feature {i} not finite");
+                assert!(v.abs() <= 8.0, "feature {i} out of range: {v}");
+            }
+            let y = encode_target(&row);
+            assert!(y.is_finite());
+            assert!((decode_target(y) - row.runtime_s).abs() / row.runtime_s < 1e-3);
+        }
+    }
+
+    #[test]
+    fn batch_layout() {
+        let mut rng = Rng::new(2);
+        let rows: Vec<_> = (0..10).map(|_| sample_row(&mut rng, 1)).collect();
+        let (xs, ys) = encode_batch(&rows);
+        assert_eq!(xs.len(), 10 * DIM);
+        assert_eq!(ys.len(), 10);
+        assert_eq!(xs[..DIM], encode_row(&rows[0]));
+    }
+}

@@ -1,0 +1,23 @@
+//! Performance modeling of distributed dataflow jobs — the *consumer* of
+//! the data distribution layer.
+//!
+//! The paper's motivation: resource-configuration optimization needs
+//! runtime predictions, predictions need training data, and no single
+//! organization has enough — hence collaborative sharing. This module
+//! implements:
+//!
+//! * [`datagen`] — a synthetic workload-trace generator standing in for
+//!   the C3O/scout public datasets (unavailable offline; see DESIGN.md
+//!   §Substitutions). Runtime follows an Ernest-style scaling law per
+//!   workload, so learnability mirrors real traces.
+//! * [`features`] — trace row → feature-vector encoding shared with the
+//!   JAX side (python/compile/model.py documents the identical layout).
+//! * [`workflow`] — the §III-D performance-modeling workflow: assemble
+//!   training data from the contributions store (+ local private data),
+//!   train the AOT-compiled MLP via PJRT, evaluate, and compare
+//!   collaborative vs local-only modeling.
+
+pub mod datagen;
+pub mod features;
+pub mod validator;
+pub mod workflow;

@@ -1,0 +1,178 @@
+//! Model-backed data validation: the AOT k-NN novelty scorer as a
+//! [`Validator`].
+//!
+//! §III-C calls for validation routines "composed of actions that
+//! validate data quality as well as the benefit for performance
+//! modeling". [`ModelValidator`] implements both stages:
+//!
+//! 1. structural checks (gzip/json/schema/ranges — [`StatsValidator`]),
+//! 2. a learned novelty score: each row's distance to its k nearest
+//!    neighbours in a trusted reference set, computed by the AOT-compiled
+//!    `knn_score` artifact via PJRT.
+//!
+//! The PJRT executable runs on a dedicated *model-server thread* (PJRT
+//! handles are not `Send`); validators talk to it over channels. This is
+//! exactly the paper's async-background-validation shape, and it lets one
+//! compiled model serve every node in a TCP deployment.
+
+use crate::modeling::datagen::parse_contribution;
+use crate::modeling::features::{encode_row, DIM};
+use crate::runtime::PerfModel;
+use crate::stores::documents::Verdict;
+use crate::validation::{StatsValidator, Validator};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+
+enum Req {
+    Score { data: Vec<u8>, reply: Sender<(Verdict, f64)> },
+    Stop,
+}
+
+/// Handle to the model-server thread; cheap to clone, `Send`, and
+/// implements [`Validator`].
+pub struct ModelValidator {
+    tx: Sender<Req>,
+}
+
+impl Clone for ModelValidator {
+    fn clone(&self) -> Self {
+        ModelValidator { tx: self.tx.clone() }
+    }
+}
+
+impl Validator for ModelValidator {
+    fn validate(&mut self, data: &[u8]) -> (Verdict, f64) {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if self
+            .tx
+            .send(Req::Score { data: data.to_vec(), reply: reply_tx })
+            .is_err()
+        {
+            return (Verdict::Inconclusive, 0.5);
+        }
+        reply_rx.recv().unwrap_or((Verdict::Inconclusive, 0.5))
+    }
+}
+
+/// The running model server; dropping (or calling [`stop`]) joins the
+/// thread.
+pub struct ModelServer {
+    tx: Sender<Req>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ModelServer {
+    /// Spawn the server. `reference_rows` are trusted feature rows the
+    /// novelty score compares against (padded/truncated to the compiled
+    /// refset); `threshold` is the max mean-kNN-distance considered
+    /// plausible.
+    pub fn spawn(
+        artifacts_dir: PathBuf,
+        reference_rows: Vec<[f32; DIM]>,
+        threshold: f64,
+    ) -> Result<ModelServer> {
+        let (tx, rx): (Sender<Req>, Receiver<Req>) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let thread = std::thread::spawn(move || {
+            let model = match PerfModel::load(&artifacts_dir) {
+                Ok(m) => {
+                    let _ = ready_tx.send(Ok(()));
+                    m
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            serve(model, reference_rows, threshold, rx);
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("model server died"))?
+            .map_err(|e| anyhow::anyhow!("model server init: {e}"))?;
+        Ok(ModelServer { tx, thread: Some(thread) })
+    }
+
+    /// A validator handle for node construction.
+    pub fn validator(&self) -> ModelValidator {
+        ModelValidator { tx: self.tx.clone() }
+    }
+
+    pub fn stop(mut self) {
+        let _ = self.tx.send(Req::Stop);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve(model: PerfModel, reference_rows: Vec<[f32; DIM]>, threshold: f64, rx: Receiver<Req>) {
+    let b = model.meta.batch;
+    let r = model.meta.refset;
+    // Pad/cycle the reference set to the compiled size.
+    let mut refs = vec![0f32; r * DIM];
+    if !reference_rows.is_empty() {
+        for i in 0..r {
+            let row = &reference_rows[i % reference_rows.len()];
+            refs[i * DIM..(i + 1) * DIM].copy_from_slice(row);
+        }
+    }
+    let mut structural = StatsValidator::default();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Stop => return,
+            Req::Score { data, reply } => {
+                // Stage 1: structural validation.
+                let (sv, sscore) = structural.validate(&data);
+                if sv != Verdict::Valid {
+                    let _ = reply.send((sv, sscore));
+                    continue;
+                }
+                // Stage 2: learned novelty score over all rows.
+                let rows = parse_contribution(&data).unwrap_or_default();
+                if rows.is_empty() {
+                    let _ = reply.send((Verdict::Inconclusive, 0.5));
+                    continue;
+                }
+                let mut total = 0.0f64;
+                let mut n = 0usize;
+                for chunk in rows.chunks(b) {
+                    let mut xs = vec![0f32; b * DIM];
+                    for (i, row) in chunk.iter().enumerate() {
+                        xs[i * DIM..(i + 1) * DIM].copy_from_slice(&encode_row(row));
+                    }
+                    match model.knn_score(&xs, &refs) {
+                        Ok(scores) => {
+                            for s in &scores[..chunk.len()] {
+                                total += *s as f64;
+                            }
+                            n += chunk.len();
+                        }
+                        Err(_) => {
+                            let _ = reply.send((Verdict::Inconclusive, 0.5));
+                            n = 0;
+                            break;
+                        }
+                    }
+                }
+                if n == 0 {
+                    continue;
+                }
+                let mean = total / n as f64;
+                // Monotone map distance → score in (0, 1].
+                let score = 1.0 / (1.0 + mean / threshold.max(1e-9));
+                let verdict = if mean <= threshold {
+                    Verdict::Valid
+                } else {
+                    Verdict::Invalid
+                };
+                let _ = reply.send((verdict, score));
+            }
+        }
+    }
+}
+
+/// Convenience: a shared server usable from several nodes in one process.
+pub type SharedModelServer = Arc<Mutex<Option<ModelServer>>>;

@@ -1,0 +1,150 @@
+//! The §III-D performance-modeling workflow.
+//!
+//! "Whenever a new performance model shall be trained …, the
+//! contributions store is consulted and the required performance data is
+//! retrieved by their CIDs … optionally pre-filtered according to further
+//! criteria, or based on their data validity … The gathered data
+//! contributions can additionally be joined with performance data which
+//! is only locally available, and eventually used for training and
+//! employment of a performance model."
+//!
+//! This module implements exactly that pipeline against a [`Node`] and an
+//! AOT-compiled [`PerfModel`], plus the evaluation harness that compares
+//! **collaborative** vs **local-only** modeling — the paper's motivating
+//! benefit.
+
+use crate::modeling::datagen::{parse_contribution, TraceRow};
+use crate::modeling::features::{encode_batch, DIM};
+use crate::peersdb::Node;
+use crate::runtime::batching::padded_batches;
+use crate::runtime::PerfModel;
+use crate::stores::documents::Verdict;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Assemble training rows from a node's replicated contributions
+/// (skipping any the validations store flags as invalid), joined with
+/// locally-held private files.
+pub fn assemble_from_node(node: &Node, workload: Option<&str>, private_cids: &[crate::cid::Cid]) -> Vec<TraceRow> {
+    let mut rows = Vec::new();
+    for c in node.query_contributions(|c| workload.map(|w| c.workload == w).unwrap_or(true)) {
+        if node.verdict(&c.data_cid) == Some(Verdict::Invalid) {
+            continue; // §III-D: filter by data validity
+        }
+        if let Some(file) = node.get_file(&c.data_cid) {
+            if let Some(mut parsed) = parse_contribution(&file) {
+                rows.append(&mut parsed);
+            }
+        }
+    }
+    for cid in private_cids {
+        if let Some(file) = node.get_file(cid) {
+            if let Some(mut parsed) = parse_contribution(&file) {
+                rows.append(&mut parsed);
+            }
+        }
+    }
+    rows
+}
+
+/// Outcome of one train+evaluate run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub train_rows: usize,
+    pub test_rows: usize,
+    pub epochs: usize,
+    pub first_epoch_loss: f32,
+    pub final_epoch_loss: f32,
+    /// RMSE in ln(runtime) space on held-out rows.
+    pub rmse_log: f64,
+    /// Mean absolute percentage error on runtimes.
+    pub mape: f64,
+}
+
+/// Train the model on `train` and evaluate on `test`.
+pub fn train_and_eval(
+    model: &mut PerfModel,
+    train: &[TraceRow],
+    test: &[TraceRow],
+    epochs: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> Result<Report> {
+    model.reset()?;
+    let mut train = train.to_vec();
+    let (mut first, mut last) = (f32::NAN, f32::NAN);
+    for epoch in 0..epochs {
+        rng.shuffle(&mut train);
+        let (xs, ys) = encode_batch(&train);
+        let mut epoch_loss = 0.0;
+        let batches = padded_batches(&xs, &ys, DIM, model.meta.batch);
+        for (bx, by, bm) in &batches {
+            epoch_loss += model.train_step(bx, by, bm, lr)?;
+        }
+        epoch_loss /= batches.len().max(1) as f32;
+        if epoch == 0 {
+            first = epoch_loss;
+        }
+        last = epoch_loss;
+    }
+    let (rmse_log, mape) = evaluate(model, test)?;
+    Ok(Report {
+        train_rows: train.len(),
+        test_rows: test.len(),
+        epochs,
+        first_epoch_loss: first,
+        final_epoch_loss: last,
+        rmse_log,
+        mape,
+    })
+}
+
+/// Evaluate RMSE (log space) and MAPE (runtime space) on held-out rows.
+pub fn evaluate(model: &PerfModel, test: &[TraceRow]) -> Result<(f64, f64)> {
+    let (xs, ys) = encode_batch(test);
+    let mut se = 0.0f64;
+    let mut ape = 0.0f64;
+    let mut n = 0.0f64;
+    for (bx, by, bm) in padded_batches(&xs, &ys, DIM, model.meta.batch) {
+        let preds = model.predict(&bx)?;
+        for i in 0..model.meta.batch {
+            if bm[i] > 0.0 {
+                let d = (preds[i] - by[i]) as f64;
+                se += d * d;
+                let rt_true = (by[i] as f64).exp();
+                let rt_pred = (preds[i] as f64).exp();
+                ape += ((rt_pred - rt_true) / rt_true).abs();
+                n += 1.0;
+            }
+        }
+    }
+    Ok(((se / n).sqrt(), ape / n))
+}
+
+/// Train/test split by deterministic shuffle.
+pub fn split(rows: &[TraceRow], test_frac: f64, rng: &mut Rng) -> (Vec<TraceRow>, Vec<TraceRow>) {
+    let mut rows = rows.to_vec();
+    rng.shuffle(&mut rows);
+    let n_test = ((rows.len() as f64) * test_frac) as usize;
+    let test = rows.split_off(rows.len() - n_test);
+    (rows, test)
+}
+
+/// The collaboration experiment: compare a model trained only on one
+/// peer's local data against one trained on everything the distribution
+/// layer replicated. Returns (local report, collaborative report).
+pub fn collaboration_benefit(
+    model: &mut PerfModel,
+    local_rows: &[TraceRow],
+    collaborative_rows: &[TraceRow],
+    test_rows: &[TraceRow],
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(Report, Report)> {
+    let mut rng = Rng::new(seed);
+    let local = train_and_eval(model, local_rows, test_rows, epochs, lr, &mut rng)?;
+    let mut rng = Rng::new(seed);
+    let collab = train_and_eval(model, collaborative_rows, test_rows, epochs, lr, &mut rng)?;
+    Ok((local, collab))
+}

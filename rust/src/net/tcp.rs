@@ -1,0 +1,341 @@
+//! Threaded TCP driver for [`Runner`] nodes.
+//!
+//! The deployment counterpart of the DES: each node gets a listener
+//! thread, per-connection reader threads, and one event-loop thread that
+//! owns the runner and serializes all callbacks (the same single-threaded
+//! discipline the simulator enforces). Frames are `u32`-length-prefixed
+//! canonical-codec messages carrying `(sender PeerId, msg)`.
+//!
+//! Peer addresses are resolved through a shared [`Directory`] — in a
+//! production deployment this would be the DHT's address records; for the
+//! loopback clusters in `examples/tcp_cluster.rs` a process-wide map is
+//! exactly what Kubernetes DNS gave the paper's prototype.
+
+use crate::codec::bin::{Decode, Encode, Reader as BinReader, Writer};
+use crate::net::{Outbox, PeerId, Runner};
+use crate::util::time::{Duration as VDuration, Nanos};
+use std::collections::{BinaryHeap, HashMap};
+use std::io::{Read, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Shared PeerId → socket address map.
+#[derive(Clone, Default)]
+pub struct Directory {
+    inner: Arc<Mutex<HashMap<PeerId, SocketAddr>>>,
+}
+
+impl Directory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&self, id: PeerId, addr: SocketAddr) {
+        self.inner.lock().unwrap().insert(id, addr);
+    }
+
+    pub fn get(&self, id: &PeerId) -> Option<SocketAddr> {
+        self.inner.lock().unwrap().get(id).copied()
+    }
+}
+
+enum Op<R: Runner> {
+    Incoming { from: PeerId, msg: R::Msg },
+    Call(Box<dyn FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) + Send>),
+    Stop,
+}
+
+/// Handle to a running TCP node.
+pub struct TcpNode<R: Runner> {
+    pub id: PeerId,
+    pub addr: SocketAddr,
+    tx: Sender<Op<R>>,
+    stopping: Arc<std::sync::atomic::AtomicBool>,
+    event_thread: Option<JoinHandle<()>>,
+    listener_thread: Option<JoinHandle<()>>,
+}
+
+struct TimerEntry {
+    at: Instant,
+    token: u64,
+}
+impl PartialEq for TimerEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.token == o.token
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (o.at, o.token).cmp(&(self.at, self.token)) // min-heap
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, from: PeerId, payload: &[u8]) -> std::io::Result<()> {
+    let mut hdr = Writer::new();
+    from.encode(&mut hdr);
+    let head = hdr.into_bytes();
+    let total = (head.len() + payload.len()) as u32;
+    stream.write_all(&total.to_be_bytes())?;
+    stream.write_all(&head)?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<(PeerId, Vec<u8>)>> {
+    let mut len_buf = [0u8; 4];
+    if let Err(e) = stream.read_exact(&mut len_buf) {
+        return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Ok(None)
+        } else {
+            Err(e)
+        };
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len < 32 || len > MAX_FRAME {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad frame length"));
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    let mut r = BinReader::new(&buf);
+    let from = PeerId::decode(&mut r)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad peer id"))?;
+    let payload = buf[32..].to_vec();
+    Ok(Some((from, payload)))
+}
+
+impl<R: Runner + Send + 'static> TcpNode<R>
+where
+    R::Msg: Send,
+{
+    /// Start a node: binds a listener on 127.0.0.1, registers in the
+    /// directory, runs `on_start`, and begins the event loop.
+    pub fn start(runner: R, dir: Directory) -> std::io::Result<TcpNode<R>> {
+        let id = runner.id();
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        dir.insert(id, addr);
+        let (tx, rx) = mpsc::channel::<Op<R>>();
+
+        let stopping = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        // Listener: accept → spawn frame-reader per connection.
+        let tx_listen = tx.clone();
+        let stop_flag = stopping.clone();
+        let listener_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop_flag.load(std::sync::atomic::Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut stream) = conn else { break };
+                let tx = tx_listen.clone();
+                std::thread::spawn(move || {
+                    loop {
+                        match read_frame(&mut stream) {
+                            Ok(Some((from, payload))) => {
+                                let mut r = BinReader::new(&payload);
+                                let Ok(msg) = R::Msg::decode(&mut r) else { break };
+                                // A closed event loop ends this reader.
+                                if tx.send(Op::Incoming { from, msg }).is_err() {
+                                    break;
+                                }
+                            }
+                            _ => break,
+                        }
+                    }
+                });
+            }
+        });
+
+        let event_thread = std::thread::spawn(move || event_loop(runner, rx, dir));
+        Ok(TcpNode {
+            id,
+            addr,
+            tx,
+            stopping,
+            event_thread: Some(event_thread),
+            listener_thread: Some(listener_thread),
+        })
+    }
+
+    /// Run a closure on the event-loop thread against the runner
+    /// (API-call injection, mirrors `Cluster::with_node`).
+    pub fn call(&self, f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) + Send + 'static) {
+        let _ = self.tx.send(Op::Call(Box::new(f)));
+    }
+
+    /// Run a closure returning a value, blocking until it completes.
+    pub fn call_sync<T: Send + 'static>(
+        &self,
+        f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) -> T + Send + 'static,
+    ) -> T {
+        let (tx, rx) = mpsc::channel();
+        self.call(move |r, now, out| {
+            let _ = tx.send(f(r, now, out));
+        });
+        rx.recv().expect("event loop gone")
+    }
+
+    /// Stop the node and join its threads.
+    pub fn stop(mut self) {
+        let _ = self.tx.send(Op::Stop);
+        if let Some(t) = self.event_thread.take() {
+            let _ = t.join();
+        }
+        // Unblock the accept loop; the flag makes it exit.
+        self.stopping.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn event_loop<R: Runner>(mut runner: R, rx: Receiver<Op<R>>, dir: Directory) {
+    let epoch = Instant::now();
+    let now = |at: Instant| Nanos((at - epoch).as_nanos() as u64);
+    let mut timers: BinaryHeap<TimerEntry> = BinaryHeap::new();
+    let mut conns: HashMap<PeerId, TcpStream> = HashMap::new();
+    let mut out = Outbox::new();
+    runner.on_start(now(Instant::now()), &mut out);
+    flush(&runner, &mut out, &mut conns, &dir, &mut timers, epoch);
+
+    loop {
+        let timeout = timers
+            .peek()
+            .map(|t| t.at.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(200));
+        match rx.recv_timeout(timeout) {
+            Ok(Op::Incoming { from, msg }) => {
+                runner.on_message(now(Instant::now()), from, msg, &mut out);
+            }
+            Ok(Op::Call(f)) => f(&mut runner, now(Instant::now()), &mut out),
+            Ok(Op::Stop) => return,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+        // Fire due timers.
+        while timers.peek().map(|t| t.at <= Instant::now()).unwrap_or(false) {
+            let t = timers.pop().unwrap();
+            runner.on_timer(now(Instant::now()), t.token, &mut out);
+        }
+        flush(&runner, &mut out, &mut conns, &dir, &mut timers, epoch);
+    }
+}
+
+fn flush<R: Runner>(
+    runner: &R,
+    out: &mut Outbox<R::Msg>,
+    conns: &mut HashMap<PeerId, TcpStream>,
+    dir: &Directory,
+    timers: &mut BinaryHeap<TimerEntry>,
+    _epoch: Instant,
+) {
+    for (token, after) in out.timers.drain(..) {
+        timers.push(TimerEntry {
+            at: Instant::now() + Duration::from_nanos(after.0),
+            token,
+        });
+    }
+    for (to, msg) in out.sends.drain(..) {
+        let payload = crate::codec::to_bytes(&msg);
+        let stream = match conns.get_mut(&to) {
+            Some(s) => s,
+            None => {
+                let Some(addr) = dir.get(&to) else { continue };
+                let Ok(s) = TcpStream::connect_timeout(&addr, Duration::from_millis(500)) else {
+                    continue; // unreachable peer: drop, like UDP semantics
+                };
+                conns.entry(to).or_insert(s)
+            }
+        };
+        if write_frame(stream, runner.id(), &payload).is_err() {
+            conns.remove(&to); // stale connection; next send re-dials
+        }
+    }
+}
+
+/// Convert a virtual duration to wall-clock (used by tests).
+pub fn to_wall(d: VDuration) -> Duration {
+    Duration::from_nanos(d.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::token;
+    use crate::util::Rng;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    struct Echo {
+        id: PeerId,
+        peer: Option<PeerId>,
+        hits: Arc<AtomicU64>,
+    }
+
+    impl Runner for Echo {
+        type Msg = u64;
+        fn id(&self) -> PeerId {
+            self.id
+        }
+        fn on_start(&mut self, _now: Nanos, out: &mut Outbox<u64>) {
+            out.timer(token::pack(token::PEERSDB, 1), VDuration::from_millis(5));
+            if let Some(p) = self.peer {
+                out.send(p, 1);
+            }
+        }
+        fn on_message(&mut self, _now: Nanos, from: PeerId, msg: u64, out: &mut Outbox<u64>) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            if msg < 6 {
+                out.send(from, msg + 1);
+            }
+        }
+        fn on_timer(&mut self, _now: Nanos, _tok: u64, _out: &mut Outbox<u64>) {
+            self.hits.fetch_add(100, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn tcp_ping_pong_and_timers() {
+        let mut rng = Rng::new(1);
+        let a_id = PeerId::from_rng(&mut rng);
+        let b_id = PeerId::from_rng(&mut rng);
+        let hits_a = Arc::new(AtomicU64::new(0));
+        let hits_b = Arc::new(AtomicU64::new(0));
+        let dir = Directory::new();
+        let b = TcpNode::start(
+            Echo { id: b_id, peer: None, hits: hits_b.clone() },
+            dir.clone(),
+        )
+        .unwrap();
+        let a = TcpNode::start(
+            Echo { id: a_id, peer: Some(b_id), hits: hits_a.clone() },
+            dir.clone(),
+        )
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        // b receives 1,3,5 (3 msgs) + ≥1 timer; a receives 2,4,6 + ≥1 timer.
+        while Instant::now() < deadline {
+            if hits_a.load(Ordering::SeqCst) >= 103 && hits_b.load(Ordering::SeqCst) >= 103 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(hits_a.load(Ordering::SeqCst) >= 103, "a={}", hits_a.load(Ordering::SeqCst));
+        assert!(hits_b.load(Ordering::SeqCst) >= 103, "b={}", hits_b.load(Ordering::SeqCst));
+        let n = a.call_sync(|r, _, _| r.id());
+        assert_eq!(n, a_id);
+        a.stop();
+        b.stop();
+    }
+}

@@ -1,0 +1,19 @@
+//! The PeersDB node: the paper's prototype, §IV-A.
+//!
+//! A node composes every substrate — blockstore, Kademlia DHT, bitswap,
+//! IPFS-Log stores, pubsub, validation, access control — behind one
+//! sans-io [`net::Runner`](crate::net::Runner), mirroring the prototype's
+//! "service Go-routine [that] manages recurring tasks like user requests,
+//! data storage, event handling, P2P communication for new peers, and
+//! collaborative validation coordination".
+//!
+//! The same [`Node`] runs under the DES ([`crate::sim`]) for experiments
+//! and under TCP ([`crate::net::tcp`]) for deployments; the HTTP/shell
+//! APIs ([`crate::api`]) call the same public methods the experiment
+//! harnesses use.
+
+pub mod node;
+pub mod wire;
+
+pub use node::{Node, NodeConfig, NodeEvent, ValidationSource};
+pub use wire::Message;

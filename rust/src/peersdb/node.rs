@@ -1,0 +1,1132 @@
+//! The PeersDB node service: composition of all protocol engines plus the
+//! paper's workflows (contribution §III-E, replication §III-B, validation
+//! §III-C, bootstrap §IV-A experiment 2).
+
+use crate::access::Gate;
+use crate::bitswap::{self, BitswapConfig, BitswapEvent, FetchId};
+use crate::blockstore::{chunker, BlockStore, Pin};
+use crate::cid::{Cid, Codec};
+use crate::dht::{self, DhtConfig, DhtEvent, Key, LookupId};
+use crate::ipfs_log::{Entry, Join};
+use crate::metrics::Metrics;
+use crate::net::{token, Outbox, PeerId, Runner};
+use crate::peersdb::wire::Message;
+use crate::pubsub::{self, Topic};
+use crate::stores::documents::{ValidationRecord, ValidationsStore, Verdict};
+use crate::stores::{Contribution, ContributionsStore, KvStore, StoreAddress};
+use crate::util::time::{Duration, Nanos};
+use crate::util::Rng;
+use crate::validation::{BatchQueue, CostModel, IdentityValidator, Task, Validator};
+use crate::validation::quorum::{QuorumConfig, VoteOutcome, VoteState};
+use std::collections::{HashMap, HashSet};
+
+/// Node configuration (the paper's Helm-chart parametrization).
+pub struct NodeConfig {
+    pub passphrase: String,
+    pub store_name: String,
+    /// Bootstrap (root) peer to join through, if any.
+    pub bootstrap: Option<PeerId>,
+    /// Replicate (pin) contribution data files automatically.
+    pub auto_pin: bool,
+    /// Validate replicated contributions automatically.
+    pub auto_validate: bool,
+    /// Announce DHT provider records for data we contribute.
+    pub announce_providers: bool,
+    /// Also announce provider records immediately after *replicating*
+    /// someone else's data. kubo batches these on a multi-hour reprovide
+    /// interval, so the faithful default is off; replicas still serve
+    /// Wants either way, and anti-entropy covers discovery.
+    pub announce_replicas: bool,
+    pub quorum: QuorumConfig,
+    pub cost_model: CostModel,
+    /// Validation batch size (1 = validate each contribution alone).
+    pub batch_size: usize,
+    /// Max outstanding chunk requests per file fetch (bitswap-session
+    /// window; keeps large files on slow links under the RPC timeout).
+    pub chunk_window: usize,
+    /// Start a partial batch after this long without new work.
+    pub batch_flush: Duration,
+    pub tick_interval: Duration,
+    pub dht: DhtConfig,
+    pub bitswap: BitswapConfig,
+    /// Pubsub neighbor sample size taken from the routing table.
+    pub neighbor_degree: usize,
+    /// CPU model: base cost per message + per-KiB payload cost.
+    pub proc_cost_per_msg: Duration,
+    pub proc_cost_per_kb: Duration,
+    /// Periodic anti-entropy: every N ticks, exchange heads with one
+    /// random peer (guarantees convergence even when a pubsub
+    /// announcement races ahead of subscription gossip). 0 disables.
+    pub anti_entropy_every_ticks: u32,
+    /// ABLATION (benches/sim_validation): answer validation queries only
+    /// after in-flight local validations finish — the *blocking* design
+    /// the paper's simulation study argues against. Default: async
+    /// (answer immediately from the validations store).
+    pub blocking_validation: bool,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig {
+            passphrase: "peersdb".into(),
+            store_name: "contributions".into(),
+            bootstrap: None,
+            auto_pin: true,
+            auto_validate: false,
+            announce_providers: true,
+            announce_replicas: false,
+            quorum: QuorumConfig::default(),
+            cost_model: CostModel::Constant { ns: 1_000_000 },
+            batch_size: 1,
+            chunk_window: 8,
+            batch_flush: Duration::from_millis(500),
+            tick_interval: Duration::from_millis(100),
+            dht: DhtConfig::default(),
+            bitswap: BitswapConfig::default(),
+            neighbor_degree: 8,
+            proc_cost_per_msg: Duration::from_micros(30),
+            proc_cost_per_kb: Duration::from_micros(8),
+            anti_entropy_every_ticks: 20,
+            blocking_validation: false,
+        }
+    }
+}
+
+/// Where a validation verdict came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValidationSource {
+    Local,
+    Network,
+}
+
+/// Observable node events, drained by harnesses / the API layer.
+#[derive(Clone, Debug)]
+pub enum NodeEvent {
+    /// Bootstrap finished: DHT populated and store synced.
+    BootstrapDone { started: Nanos, completed: Nanos, entries_synced: usize },
+    /// A remote contribution is fully replicated locally (entry + data).
+    ContributionReplicated {
+        data_cid: Cid,
+        author: PeerId,
+        created_at: u64,
+        completed_at: Nanos,
+    },
+    /// A validation verdict was stored.
+    ValidationDone {
+        data_cid: Cid,
+        verdict: Verdict,
+        score: f64,
+        source: ValidationSource,
+    },
+    /// A remote peer asked for a private CID and was denied.
+    PrivateDenied { cid: Cid, peer: PeerId },
+}
+
+enum FetchPurpose {
+    /// A contributions-store log entry block.
+    LogEntry,
+    /// The root block of a contribution's data file.
+    DataRoot { data_cid: Cid },
+    /// A chunk of a chunked data file.
+    DataChunk { root: Cid },
+}
+
+/// Windowed multi-block file fetch (a bitswap "session"): at most
+/// `chunk_window` chunk requests outstanding per file, so large files on
+/// slow links do not overrun the per-request timeout (the retry storm a
+/// naive want-burst causes).
+struct DataFetch {
+    pending: Vec<Cid>,
+    in_flight: HashSet<Cid>,
+    source: PeerId,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Bootstrap {
+    /// Root node (no bootstrap peer): immediately operational.
+    Root,
+    Joining { started: Nanos },
+    /// Admitted; syncing DHT + store.
+    Syncing { started: Nanos, lookup_done: bool },
+    Done,
+}
+
+const TICK: u64 = 0;
+
+/// The PeersDB node. See module docs.
+pub struct Node {
+    id: PeerId,
+    pub cfg: NodeConfig,
+    gate: Gate,
+    rng: Rng,
+    pub bs: BlockStore,
+    pub dht: dht::Engine,
+    bitswap: bitswap::Engine,
+    pubsub: pubsub::Engine,
+    pub contributions: ContributionsStore,
+    pub validations: ValidationsStore,
+    pub kv: KvStore,
+    validator: Box<dyn Validator>,
+    batch_queue: BatchQueue,
+    last_enqueue: Nanos,
+
+    topic: Topic,
+    bootstrap: Bootstrap,
+    next_req: u64,
+
+    // Replication bookkeeping.
+    fetch_purpose: HashMap<FetchId, FetchPurpose>,
+    entry_fetches: HashMap<Cid, FetchId>,
+    data_fetches: HashMap<Cid, DataFetch>,
+    /// DHT provider lookups for block fetches: lookup → (cid, fetch).
+    provider_lookups: HashMap<LookupId, (Cid, Option<FetchId>)>,
+    /// DHT lookups that exist to announce a provider record.
+    provide_lookups: HashMap<LookupId, Key>,
+    /// Bootstrap self-lookup.
+    bootstrap_lookup: Option<LookupId>,
+    /// data root CID → (author, created_at) while replication in flight.
+    contribution_meta: HashMap<Cid, (PeerId, u64)>,
+
+    /// Purposes remembered across provider-lookup retries.
+    retry_purposes: HashMap<Cid, FetchPurpose>,
+
+    // Validation bookkeeping.
+    votes: HashMap<Cid, VoteState>,
+    val_req_index: HashMap<u64, Cid>,
+
+    pub events: Vec<NodeEvent>,
+    pub metrics: Metrics,
+    tick_count: u32,
+    /// ValQueries parked while blocking_validation holds them back.
+    deferred_val_replies: Vec<(PeerId, u64, Cid)>,
+    /// When validation began per CID (for the verdict-latency metric).
+    validation_started: HashMap<Cid, Nanos>,
+    /// Contributions whose data files are not yet fully local
+    /// (incremental — the anti-entropy sweep iterates only this).
+    incomplete_data: HashMap<Cid, PeerId>,
+}
+
+impl Node {
+    pub fn new(id: PeerId, cfg: NodeConfig, seed: u64) -> Node {
+        Node::with_validator(id, cfg, seed, Box::new(IdentityValidator))
+    }
+
+    pub fn with_validator(
+        id: PeerId,
+        cfg: NodeConfig,
+        seed: u64,
+        validator: Box<dyn Validator>,
+    ) -> Node {
+        let gate = Gate::new(&cfg.passphrase);
+        let topic = StoreAddress(cfg.store_name.clone()).topic();
+        let batch = BatchQueue::new(cfg.batch_size);
+        Node {
+            id,
+            gate,
+            rng: Rng::new(seed),
+            bs: BlockStore::new(),
+            dht: dht::Engine::new(id, cfg.dht.clone()),
+            bitswap: bitswap::Engine::new(cfg.bitswap.clone()),
+            pubsub: pubsub::Engine::new(id),
+            contributions: ContributionsStore::new(),
+            validations: ValidationsStore::new(),
+            kv: KvStore::new(),
+            validator,
+            batch_queue: batch,
+            last_enqueue: Nanos::ZERO,
+            topic,
+            bootstrap: if cfg.bootstrap.is_some() {
+                Bootstrap::Joining { started: Nanos::ZERO }
+            } else {
+                Bootstrap::Root
+            },
+            next_req: 1,
+            fetch_purpose: HashMap::new(),
+            entry_fetches: HashMap::new(),
+            data_fetches: HashMap::new(),
+            provider_lookups: HashMap::new(),
+            provide_lookups: HashMap::new(),
+            bootstrap_lookup: None,
+            contribution_meta: HashMap::new(),
+            retry_purposes: HashMap::new(),
+            votes: HashMap::new(),
+            val_req_index: HashMap::new(),
+            events: Vec::new(),
+            metrics: Metrics::new(),
+            tick_count: 0,
+            deferred_val_replies: Vec::new(),
+            validation_started: HashMap::new(),
+            incomplete_data: HashMap::new(),
+            cfg,
+        }
+    }
+
+    pub fn peer_id(&self) -> PeerId {
+        self.id
+    }
+
+    pub fn is_bootstrapped(&self) -> bool {
+        matches!(self.bootstrap, Bootstrap::Root | Bootstrap::Done)
+    }
+
+    // ======================================================================
+    // Public API (called by the HTTP/shell layer and experiment harnesses
+    // through `Cluster::with_node` / `TcpNode::call`)
+    // ======================================================================
+
+    /// POST a contribution (§III-E): store the file content-addressed,
+    /// append a reference to the contributions store, announce it.
+    /// Returns the data root CID.
+    #[allow(clippy::too_many_arguments)]
+    pub fn contribute(
+        &mut self,
+        now: Nanos,
+        data: &[u8],
+        workload: &str,
+        platform: &str,
+        out: &mut Outbox<Message>,
+    ) -> Cid {
+        let added = chunker::add_file(&mut self.bs, data);
+        for b in &added.blocks {
+            self.bs.pin(b, Pin::Local);
+        }
+        let c = Contribution {
+            data_cid: added.root,
+            author: self.id,
+            workload: workload.into(),
+            platform: platform.into(),
+            size_bytes: data.len() as u64,
+            created_at: now.0,
+        };
+        let (entry_cid, entry) = self.contributions.add(self.id, &c);
+        // The log entry itself is a block other peers will fetch.
+        let entry_bytes = crate::codec::to_bytes(&entry);
+        let stored = self.bs.put(Codec::LogEntry, entry_bytes);
+        debug_assert_eq!(stored, entry_cid);
+        self.bs.pin(&entry_cid, Pin::Local);
+        self.metrics.inc("contributions_added");
+        // Announce new heads over pubsub.
+        let heads = self.contributions.heads();
+        let payload = crate::codec::to_bytes(&heads);
+        let mut ps_out = pubsub::Sends::new();
+        self.pubsub.publish(now, self.topic, payload, &mut ps_out);
+        self.wrap_pubsub(ps_out, out);
+        // Provider records for the data root.
+        if self.cfg.announce_providers {
+            self.start_provide(now, Key::from_cid(&added.root), out);
+        }
+        added.root
+    }
+
+    /// Store a private (never shared) file: strong privacy per §III-B.
+    pub fn put_private(&mut self, data: &[u8]) -> Cid {
+        let added = chunker::add_file(&mut self.bs, data);
+        for b in &added.blocks {
+            self.bs.pin(b, Pin::Local);
+            self.bs.set_private(b, true);
+        }
+        self.metrics.inc("private_files_added");
+        added.root
+    }
+
+    /// GET a file by root CID from the local blockstore.
+    pub fn get_file(&self, cid: &Cid) -> Option<Vec<u8>> {
+        chunker::get_file(&self.bs, cid)
+    }
+
+    /// Query the contributions store (§III-D pre-filtering).
+    pub fn query_contributions(&self, pred: impl Fn(&Contribution) -> bool) -> Vec<Contribution> {
+        self.contributions.filter(pred)
+    }
+
+    /// Stored validation verdict, if any.
+    pub fn verdict(&self, cid: &Cid) -> Option<Verdict> {
+        self.validations.verdict(cid)
+    }
+
+    /// Manually trigger validation of a replicated contribution.
+    pub fn validate(&mut self, now: Nanos, data_cid: Cid, out: &mut Outbox<Message>) {
+        self.begin_validation(now, data_cid, out);
+    }
+
+    /// Ask a specific peer for its heads (anti-entropy).
+    pub fn sync_with(&mut self, peer: PeerId, out: &mut Outbox<Message>) {
+        out.send(peer, Message::HeadsRequest);
+    }
+
+    /// Fetch an arbitrary block by CID (e.g. one whose CID was learned out
+    /// of band). Replicated data lands in the blockstore as a root fetch.
+    pub fn fetch_cid(&mut self, now: Nanos, cid: Cid, candidates: Vec<PeerId>, out: &mut Outbox<Message>) {
+        self.fetch_data(now, cid, candidates, out);
+    }
+
+    /// Ask one specific peer for its stored verdict on a CID (a raw
+    /// validation query outside the quorum machinery; replies are counted
+    /// in the `val_replies_received` metric).
+    pub fn query_verdict_remote(&mut self, peer: PeerId, cid: Cid, out: &mut Outbox<Message>) {
+        let req_id = self.fresh_req();
+        out.send(peer, Message::ValQuery { req_id, cid });
+    }
+
+    // ======================================================================
+    // Engine plumbing
+    // ======================================================================
+
+    fn wrap_dht(&mut self, sends: dht::engine::Sends, out: &mut Outbox<Message>) {
+        for (to, rpc) in sends {
+            out.send(to, Message::Dht(rpc));
+        }
+    }
+
+    fn wrap_bitswap(&mut self, sends: bitswap::Sends, out: &mut Outbox<Message>) {
+        for (to, m) in sends {
+            out.send(to, Message::Bitswap(m));
+        }
+    }
+
+    fn wrap_pubsub(&mut self, sends: pubsub::Sends, out: &mut Outbox<Message>) {
+        for (to, m) in sends {
+            out.send(to, Message::Pubsub(m));
+        }
+    }
+
+    fn fresh_req(&mut self) -> u64 {
+        let id = self.next_req;
+        self.next_req += 1;
+        id
+    }
+
+    fn start_provide(&mut self, now: Nanos, key: Key, out: &mut Outbox<Message>) {
+        let mut sends = dht::engine::Sends::new();
+        let lid = self.dht.provide(now, key, &mut sends);
+        self.provide_lookups.insert(lid, key);
+        self.wrap_dht(sends, out);
+        self.drain_engines(now, out);
+    }
+
+    // ======================================================================
+    // Replication (§III-B / §III-D auto-pinning)
+    // ======================================================================
+
+    /// Begin fetching a log entry we do not have.
+    fn fetch_entry(&mut self, now: Nanos, cid: Cid, candidates: Vec<PeerId>, out: &mut Outbox<Message>) {
+        if self.contributions.contains_entry(&cid) || self.entry_fetches.contains_key(&cid) {
+            return;
+        }
+        let mut sends = bitswap::Sends::new();
+        let fid = self.bitswap.fetch(now, cid, candidates, &mut sends);
+        self.fetch_purpose.insert(fid, FetchPurpose::LogEntry);
+        self.entry_fetches.insert(cid, fid);
+        self.wrap_bitswap(sends, out);
+        self.metrics.inc("entry_fetches_started");
+    }
+
+    /// Begin fetching a contribution's data file.
+    fn fetch_data(&mut self, now: Nanos, data_cid: Cid, candidates: Vec<PeerId>, out: &mut Outbox<Message>) {
+        if chunker::has_file(&self.bs, &data_cid) || self.data_fetches.contains_key(&data_cid) {
+            return;
+        }
+        self.metrics.inc("data_fetches_started");
+        if self.bs.has(&data_cid) {
+            // Root block already here (e.g. earlier partial fetch):
+            // go straight to chunk scheduling.
+            let source = candidates.first().copied().unwrap_or(self.id);
+            self.schedule_chunks(now, data_cid, source, out);
+            return;
+        }
+        let mut sends = bitswap::Sends::new();
+        let fid = self.bitswap.fetch(now, data_cid, candidates, &mut sends);
+        self.fetch_purpose.insert(fid, FetchPurpose::DataRoot { data_cid });
+        self.data_fetches.insert(
+            data_cid,
+            DataFetch { pending: Vec::new(), in_flight: HashSet::new(), source: self.id },
+        );
+        self.wrap_bitswap(sends, out);
+    }
+
+    /// Set up the chunk window for a file whose root block is local.
+    fn schedule_chunks(&mut self, now: Nanos, root: Cid, source: PeerId, out: &mut Outbox<Message>) {
+        let children = chunker::child_blocks(self.bs.get(&root).expect("root present"));
+        let pending: Vec<Cid> = children.into_iter().filter(|c| !self.bs.has(c)).collect();
+        if pending.is_empty() {
+            self.data_fetches.remove(&root);
+            self.finish_replication(now, root, out);
+            return;
+        }
+        self.data_fetches.insert(
+            root,
+            DataFetch { pending, in_flight: HashSet::new(), source },
+        );
+        self.pump_chunks(now, root, out);
+    }
+
+    /// Issue chunk requests up to the window limit.
+    fn pump_chunks(&mut self, now: Nanos, root: Cid, out: &mut Outbox<Message>) {
+        let window = self.cfg.chunk_window.max(1);
+        let Some(df) = self.data_fetches.get_mut(&root) else { return };
+        let source = df.source;
+        let mut to_issue = Vec::new();
+        while df.in_flight.len() + to_issue.len() < window {
+            let Some(chunk) = df.pending.pop() else { break };
+            to_issue.push(chunk);
+        }
+        let complete = df.pending.is_empty() && df.in_flight.is_empty() && to_issue.is_empty();
+        for chunk in &to_issue {
+            df.in_flight.insert(*chunk);
+        }
+        if complete {
+            self.data_fetches.remove(&root);
+            self.finish_replication(now, root, out);
+            return;
+        }
+        let mut sends = bitswap::Sends::new();
+        for chunk in to_issue {
+            let fid = self.bitswap.fetch(now, chunk, vec![source], &mut sends);
+            self.fetch_purpose.insert(fid, FetchPurpose::DataChunk { root });
+        }
+        self.wrap_bitswap(sends, out);
+    }
+
+    fn on_entry_fetched(&mut self, now: Nanos, cid: Cid, data: Vec<u8>, from: PeerId, out: &mut Outbox<Message>) {
+        self.entry_fetches.remove(&cid);
+        let Ok(entry) = crate::codec::from_bytes::<Entry>(&data) else {
+            self.metrics.inc("entry_decode_failures");
+            return;
+        };
+        // Store + pin the entry block so we can serve it onward.
+        if !self.bs.put_verified(cid, data) {
+            self.metrics.inc("entry_verify_failures");
+            return;
+        }
+        self.bs.pin(&cid, Pin::Replica);
+        let parents = entry.next.clone();
+        if self.contributions.join_entry(cid, entry) != Join::Added {
+            return;
+        }
+        self.metrics.inc("entries_replicated");
+        // Chase missing parents from the same source.
+        for p in parents {
+            if !self.contributions.contains_entry(&p) {
+                self.fetch_entry(now, p, vec![from], out);
+            }
+        }
+        // Interpret the payload as a contribution and replicate its data.
+        if let Some(e) = self.contributions.entry(&cid) {
+            if let Ok(c) = crate::codec::from_bytes::<Contribution>(&e.payload) {
+                self.contribution_meta.insert(c.data_cid, (c.author, c.created_at));
+                if self.cfg.auto_pin && !self.bs.has(&c.data_cid) {
+                    self.incomplete_data.insert(c.data_cid, c.author);
+                    let mut cands = vec![from];
+                    if c.author != self.id && c.author != from {
+                        cands.push(c.author);
+                    }
+                    self.fetch_data(now, c.data_cid, cands, out);
+                } else if self.bs.has(&c.data_cid) {
+                    self.finish_replication(now, c.data_cid, out);
+                }
+            }
+        }
+    }
+
+    fn on_data_block_fetched(
+        &mut self,
+        now: Nanos,
+        purpose: FetchPurpose,
+        cid: Cid,
+        data: Vec<u8>,
+        from: PeerId,
+        out: &mut Outbox<Message>,
+    ) {
+        if !self.bs.put_verified(cid, data) {
+            self.metrics.inc("data_verify_failures");
+            return;
+        }
+        self.bs.pin(&cid, Pin::Replica);
+        match purpose {
+            FetchPurpose::DataRoot { data_cid } => {
+                self.schedule_chunks(now, data_cid, from, out);
+            }
+            FetchPurpose::DataChunk { root } => {
+                if let Some(df) = self.data_fetches.get_mut(&root) {
+                    df.in_flight.remove(&cid);
+                    df.source = from;
+                }
+                self.pump_chunks(now, root, out);
+            }
+            FetchPurpose::LogEntry => unreachable!("routed in on_bitswap_event"),
+        }
+    }
+
+    /// A contribution's data is fully local: record metrics, serve it
+    /// onward, start validation.
+    fn finish_replication(&mut self, now: Nanos, data_cid: Cid, out: &mut Outbox<Message>) {
+        self.incomplete_data.remove(&data_cid);
+        let (author, created_at) = self
+            .contribution_meta
+            .remove(&data_cid)
+            .unwrap_or((self.id, now.0));
+        self.metrics.inc("contributions_replicated");
+        let latency_ms = (now.0.saturating_sub(created_at)) as f64 / 1e6;
+        self.metrics.observe("replication_ms", latency_ms);
+        self.events.push(NodeEvent::ContributionReplicated {
+            data_cid,
+            author,
+            created_at,
+            completed_at: now,
+        });
+        if self.cfg.announce_providers && self.cfg.announce_replicas {
+            self.start_provide(now, Key::from_cid(&data_cid), out);
+        }
+        if self.cfg.auto_validate {
+            self.begin_validation(now, data_cid, out);
+        }
+    }
+
+    // ======================================================================
+    // Validation (§III-C)
+    // ======================================================================
+
+    fn begin_validation(&mut self, now: Nanos, data_cid: Cid, out: &mut Outbox<Message>) {
+        if self.validations.get(&data_cid).is_some() || self.votes.contains_key(&data_cid) {
+            return;
+        }
+        self.validation_started.entry(data_cid).or_insert(now);
+        // Opportunistic: ask the network first.
+        let mut candidates: Vec<PeerId> = self.pubsub.neighbors().iter().copied().collect();
+        if candidates.is_empty() {
+            candidates = self.dht.table.peers();
+        }
+        candidates.retain(|p| *p != self.id);
+        self.rng.shuffle(&mut candidates);
+        candidates.truncate(self.cfg.quorum.fanout);
+        if candidates.is_empty() {
+            self.enqueue_local_validation(now, data_cid, out);
+            return;
+        }
+        let vote = VoteState::new(now, candidates.clone());
+        for peer in candidates {
+            let req_id = self.fresh_req();
+            self.val_req_index.insert(req_id, data_cid);
+            out.send(peer, Message::ValQuery { req_id, cid: data_cid });
+        }
+        self.metrics.inc("validation_votes_started");
+        self.votes.insert(data_cid, vote);
+    }
+
+    fn enqueue_local_validation(&mut self, now: Nanos, data_cid: Cid, out: &mut Outbox<Message>) {
+        let size = self
+            .bs
+            .get(&data_cid)
+            .map(|d| d.len() as u64)
+            .unwrap_or(0);
+        self.batch_queue.enqueue(Task { data_cid, size_bytes: size });
+        self.last_enqueue = now;
+        self.metrics.inc("local_validations_enqueued");
+        self.maybe_start_batch(now, false, out);
+    }
+
+    fn maybe_start_batch(&mut self, now: Nanos, force: bool, out: &mut Outbox<Message>) {
+        while let Some((batch_id, delay)) =
+            self.batch_queue.maybe_start(now, &self.cfg.cost_model, force)
+        {
+            // The async background task: completion arrives as a timer.
+            out.timer(token::pack(token::VALIDATION, batch_id), delay);
+            if force {
+                break;
+            }
+        }
+    }
+
+    fn on_validation_batch_done(&mut self, now: Nanos, batch_id: u64, out: &mut Outbox<Message>) {
+        let Some((tasks, started)) = self.batch_queue.complete(batch_id) else {
+            return;
+        };
+        let cost_ns = now.0.saturating_sub(started.0);
+        for t in tasks {
+            let data = chunker::get_file(&self.bs, &t.data_cid).unwrap_or_default();
+            let (verdict, score) = self.validator.validate(&data);
+            self.store_verdict(now, t.data_cid, verdict, score, cost_ns, ValidationSource::Local);
+        }
+        // Blocking ablation: release parked validation queries.
+        if self.batch_queue.in_flight_len() == 0 {
+            for (peer, req_id, cid) in std::mem::take(&mut self.deferred_val_replies) {
+                let record = self.validations.get(&cid).cloned();
+                self.metrics.inc("val_queries_served");
+                out.send(peer, Message::ValReply { req_id, cid, record });
+            }
+        }
+        // More work may be waiting.
+        self.maybe_start_batch(now, false, out);
+    }
+
+    fn store_verdict(
+        &mut self,
+        now: Nanos,
+        data_cid: Cid,
+        verdict: Verdict,
+        score: f64,
+        cost_ns: u64,
+        source: ValidationSource,
+    ) {
+        self.validations.put(ValidationRecord {
+            data_cid,
+            verdict,
+            score,
+            validator: self.id,
+            validated_at: now.0,
+            cost_ns,
+        });
+        self.metrics.inc(match source {
+            ValidationSource::Local => "validations_local",
+            ValidationSource::Network => "validations_network",
+        });
+        self.metrics
+            .observe("validation_cost_ms", cost_ns as f64 / 1e6);
+        if let Some(started) = self.validation_started.remove(&data_cid) {
+            self.metrics
+                .observe("verdict_latency_ms", now.saturating_sub(started).as_millis_f64());
+        }
+        self.events.push(NodeEvent::ValidationDone { data_cid, verdict, score, source });
+    }
+
+    fn on_val_reply(&mut self, now: Nanos, from: PeerId, req_id: u64, cid: Cid, record: Option<ValidationRecord>, out: &mut Outbox<Message>) {
+        if self.val_req_index.remove(&req_id).is_none() {
+            return;
+        }
+        let Some(vote) = self.votes.get_mut(&cid) else { return };
+        vote.record(from, record.map(|r| (r.verdict, r.score)));
+        if let Some(outcome) = vote.tally(&self.cfg.quorum, false) {
+            self.votes.remove(&cid);
+            match outcome {
+                VoteOutcome::Decided { verdict, mean_score, .. } => {
+                    self.store_verdict(now, cid, verdict, mean_score, 0, ValidationSource::Network);
+                }
+                VoteOutcome::Inconclusive { .. } => {
+                    self.enqueue_local_validation(now, cid, out);
+                }
+            }
+        }
+    }
+
+    fn expire_votes(&mut self, now: Nanos, out: &mut Outbox<Message>) {
+        let timeout = self.cfg.quorum.timeout;
+        let expired: Vec<Cid> = self
+            .votes
+            .iter()
+            .filter(|(_, v)| now.saturating_sub(v.started_at) >= timeout)
+            .map(|(c, _)| *c)
+            .collect();
+        for cid in expired {
+            let vote = self.votes.remove(&cid).unwrap();
+            match vote.tally(&self.cfg.quorum, true) {
+                Some(VoteOutcome::Decided { verdict, mean_score, .. }) => {
+                    self.store_verdict(now, cid, verdict, mean_score, 0, ValidationSource::Network);
+                }
+                _ => self.enqueue_local_validation(now, cid, out),
+            }
+        }
+    }
+
+    // ======================================================================
+    // Event draining from sub-engines
+    // ======================================================================
+
+    fn drain_engines(&mut self, now: Nanos, out: &mut Outbox<Message>) {
+        // DHT events.
+        let dht_events: Vec<DhtEvent> = self.dht.events.drain(..).collect();
+        for ev in dht_events {
+            match ev {
+                DhtEvent::LookupDone { id, target, closest } => {
+                    if self.bootstrap_lookup == Some(id) {
+                        self.bootstrap_lookup = None;
+                        if let Bootstrap::Syncing { started, .. } = self.bootstrap {
+                            self.bootstrap = Bootstrap::Syncing { started, lookup_done: true };
+                        }
+                    }
+                    if let Some(key) = self.provide_lookups.remove(&id) {
+                        let mut sends = dht::engine::Sends::new();
+                        self.dht.announce_provider(key, &closest, &mut sends);
+                        self.wrap_dht(sends, out);
+                    }
+                    let _ = target;
+                }
+                DhtEvent::ProvidersDone { id, key, providers, .. } => {
+                    if let Some((cid, fetch)) = self.provider_lookups.remove(&id) {
+                        debug_assert_eq!(Key::from_cid(&cid).0, key.0);
+                        if providers.is_empty() {
+                            self.metrics.inc("provider_lookup_empty");
+                            // A failed chunk kills the whole file fetch;
+                            // the anti-entropy sweep will retry the root.
+                            if let Some(FetchPurpose::DataChunk { root }) =
+                                self.retry_purposes.remove(&cid)
+                            {
+                                self.data_fetches.remove(&root);
+                            }
+                            self.fetch_failed(cid, fetch);
+                        } else {
+                            let mut sends = bitswap::Sends::new();
+                            let purpose = self.purpose_for_retry(cid);
+                            let is_entry = matches!(purpose, FetchPurpose::LogEntry);
+                            let fid = self.bitswap.fetch(now, cid, providers, &mut sends);
+                            self.fetch_purpose.insert(fid, purpose);
+                            if is_entry {
+                                self.entry_fetches.insert(cid, fid);
+                            }
+                            self.wrap_bitswap(sends, out);
+                        }
+                    }
+                }
+            }
+        }
+        // Bitswap events.
+        let bs_events: Vec<BitswapEvent> = self.bitswap.events.drain(..).collect();
+        for ev in bs_events {
+            match ev {
+                BitswapEvent::Fetched { id, cid, data, from } => {
+                    self.dht.table.touch(from, now);
+                    match self.fetch_purpose.remove(&id) {
+                        Some(FetchPurpose::LogEntry) | None => {
+                            self.on_entry_fetched(now, cid, data, from, out)
+                        }
+                        Some(p) => self.on_data_block_fetched(now, p, cid, data, from, out),
+                    }
+                }
+                BitswapEvent::Exhausted { id, cid } => {
+                    // Last resort: look up providers in the DHT. Clear the
+                    // in-flight marker so later announcements/anti-entropy
+                    // can retry the fetch independently.
+                    let purpose = self.fetch_purpose.remove(&id);
+                    self.entry_fetches.remove(&cid);
+                    self.metrics.inc("fetch_exhausted");
+                    let key = Key::from_cid(&cid);
+                    let mut sends = dht::engine::Sends::new();
+                    let lid = self.dht.find_providers(now, key, &mut sends);
+                    self.provider_lookups.insert(lid, (cid, Some(id)));
+                    // Remember intent for the retry.
+                    if let Some(p) = purpose {
+                        self.retry_purposes.insert(cid, p);
+                    }
+                    self.wrap_dht(sends, out);
+                }
+            }
+        }
+        // Pubsub deliveries: heads announcements.
+        let deliveries: Vec<pubsub::Delivery> = self.pubsub.deliveries.drain(..).collect();
+        for d in deliveries {
+            if d.topic != self.topic {
+                continue;
+            }
+            if let Ok(heads) = crate::codec::from_bytes::<Vec<Cid>>(&d.data) {
+                for h in heads {
+                    if !self.contributions.contains_entry(&h) {
+                        self.fetch_entry(now, h, vec![d.origin], out);
+                    }
+                }
+            }
+        }
+        // Nested engine work may have produced more events.
+        if !self.dht.events.is_empty()
+            || !self.bitswap.events.is_empty()
+            || !self.pubsub.deliveries.is_empty()
+        {
+            self.drain_engines(now, out);
+        }
+    }
+
+    fn purpose_for_retry(&mut self, cid: Cid) -> FetchPurpose {
+        self.retry_purposes
+            .remove(&cid)
+            .unwrap_or(FetchPurpose::LogEntry)
+    }
+
+    fn fetch_failed(&mut self, cid: Cid, _fetch: Option<FetchId>) {
+        self.entry_fetches.remove(&cid);
+        self.data_fetches.remove(&cid);
+        self.metrics.inc("fetch_failed");
+    }
+
+    /// Anti-entropy sweep: retry log entries referenced but absent
+    /// (failed parent fetches) and data files that never completed.
+    fn retry_missing_data(&mut self, now: Nanos, out: &mut Outbox<Message>) {
+        // Missing log parents: re-fetch from a random peer (heads-based
+        // anti-entropy only covers heads, not interior gaps).
+        let missing_entries: Vec<Cid> = self
+            .contributions
+            .missing()
+            .into_iter()
+            .filter(|c| !self.entry_fetches.contains_key(c))
+            .collect();
+        if !missing_entries.is_empty() {
+            let peers = self.dht.table.peers();
+            for cid in missing_entries {
+                let mut cands = Vec::new();
+                if let Some(p) = self.rng.choose(&peers) {
+                    cands.push(*p);
+                }
+                if let Some(p) = self.rng.choose(&peers) {
+                    if !cands.contains(p) {
+                        cands.push(*p);
+                    }
+                }
+                self.metrics.inc("entry_refetches");
+                self.fetch_entry(now, cid, cands, out);
+            }
+        }
+        if !self.cfg.auto_pin {
+            return;
+        }
+        let missing: Vec<(Cid, PeerId)> = self
+            .incomplete_data
+            .iter()
+            .filter(|(cid, author)| {
+                **author != self.id && !self.data_fetches.contains_key(*cid)
+            })
+            .map(|(cid, author)| (*cid, *author))
+            .collect();
+        for (cid, author) in missing {
+            let mut cands = vec![author];
+            let peers = self.dht.table.peers();
+            if let Some(extra) = self.rng.choose(&peers) {
+                if *extra != author && *extra != self.id {
+                    cands.push(*extra);
+                }
+            }
+            self.contribution_meta.entry(cid).or_insert((author, now.0));
+            self.metrics.inc("data_refetches");
+            self.fetch_data(now, cid, cands, out);
+        }
+    }
+
+    fn refresh_neighbors(&mut self, out: &mut Outbox<Message>) {
+        let mut peers = self.dht.table.peers();
+        self.rng.shuffle(&mut peers);
+        peers.truncate(self.cfg.neighbor_degree);
+        if let Some(b) = self.cfg.bootstrap {
+            if !peers.contains(&b) {
+                peers.push(b);
+            }
+        }
+        let mut sends = pubsub::Sends::new();
+        self.pubsub.set_neighbors(peers, &mut sends);
+        self.wrap_pubsub(sends, out);
+    }
+
+    fn check_bootstrap_done(&mut self, now: Nanos) {
+        if let Bootstrap::Syncing { started, lookup_done } = self.bootstrap {
+            if lookup_done
+                && self.contributions.log().missing_is_empty()
+                && self.entry_fetches.is_empty()
+                && self.data_fetches.is_empty()
+            {
+                self.bootstrap = Bootstrap::Done;
+                let dur_ms = (now.0 - started.0) as f64 / 1e6;
+                self.metrics.observe("bootstrap_ms", dur_ms);
+                self.events.push(NodeEvent::BootstrapDone {
+                    started,
+                    completed: now,
+                    entries_synced: self.contributions.len(),
+                });
+            }
+        }
+    }
+}
+
+impl Runner for Node {
+    type Msg = Message;
+
+    fn id(&self) -> PeerId {
+        self.id
+    }
+
+    fn on_start(&mut self, now: Nanos, out: &mut Outbox<Message>) {
+        out.timer(token::pack(token::PEERSDB, TICK), self.cfg.tick_interval);
+        // Subscribe to the store topic.
+        let mut ps = pubsub::Sends::new();
+        self.pubsub.subscribe(self.topic, &mut ps);
+        self.wrap_pubsub(ps, out);
+        match self.cfg.bootstrap {
+            Some(root) => {
+                self.bootstrap = Bootstrap::Joining { started: now };
+                out.send(root, Message::Join { passphrase: self.gate.presentation() });
+            }
+            None => {
+                self.bootstrap = Bootstrap::Root;
+            }
+        }
+    }
+
+    fn on_message(&mut self, now: Nanos, from: PeerId, msg: Message, out: &mut Outbox<Message>) {
+        match msg {
+            Message::Dht(rpc) => {
+                let mut sends = dht::engine::Sends::new();
+                self.dht.on_rpc(now, from, rpc, &mut sends);
+                self.wrap_dht(sends, out);
+            }
+            Message::Bitswap(bitswap::Msg::Want { req_id, cid }) => {
+                // Server side: access-controlled blockstore read.
+                match self.bs.get_public(&cid) {
+                    Some(data) => {
+                        self.metrics.inc("blocks_served");
+                        self.metrics.add("bytes_served", data.len() as u64);
+                        let data = data.to_vec();
+                        out.send(from, Message::Bitswap(bitswap::Msg::Block { req_id, cid, data }));
+                    }
+                    None => {
+                        if self.bs.has(&cid) {
+                            // Present but private: the §III-B middleware.
+                            self.metrics.inc("private_denied");
+                            self.events.push(NodeEvent::PrivateDenied { cid, peer: from });
+                        }
+                        out.send(from, Message::Bitswap(bitswap::Msg::DontHave { req_id, cid }));
+                    }
+                }
+            }
+            Message::Bitswap(m) => {
+                let mut sends = bitswap::Sends::new();
+                self.bitswap.on_msg(now, from, m, &mut sends);
+                self.wrap_bitswap(sends, out);
+            }
+            Message::Pubsub(m) => {
+                let mut sends = pubsub::Sends::new();
+                self.pubsub.on_msg(now, from, m, &mut sends);
+                self.wrap_pubsub(sends, out);
+            }
+            Message::Join { passphrase } => {
+                let accepted = self.gate.check(&passphrase);
+                self.metrics.inc(if accepted { "joins_accepted" } else { "joins_rejected" });
+                let (peers, heads) = if accepted {
+                    self.dht.add_seed(now, from);
+                    let mut sample = self.dht.table.closest(&Key::from_peer(from), 16);
+                    sample.retain(|p| *p != from);
+                    (sample, self.contributions.heads())
+                } else {
+                    (Vec::new(), Vec::new())
+                };
+                out.send(from, Message::JoinAck { accepted, peers, heads });
+                if accepted {
+                    // Tell the joiner our subscriptions right away so it
+                    // can flood announcements to us without waiting a tick.
+                    self.refresh_neighbors(out);
+                }
+            }
+            Message::JoinAck { accepted, peers, heads } => {
+                if !accepted {
+                    self.metrics.inc("join_rejected_by_root");
+                    return;
+                }
+                let started = match self.bootstrap {
+                    Bootstrap::Joining { started } => started,
+                    _ => now,
+                };
+                self.bootstrap = Bootstrap::Syncing { started, lookup_done: false };
+                self.dht.add_seed(now, from);
+                for p in peers {
+                    self.dht.add_seed(now, p);
+                }
+                // Populate the table around our own id.
+                let mut sends = dht::engine::Sends::new();
+                let lid = self.dht.find_node(now, Key::from_peer(self.id), &mut sends);
+                self.bootstrap_lookup = Some(lid);
+                self.wrap_dht(sends, out);
+                self.refresh_neighbors(out);
+                // Sync the store from the root's heads.
+                for h in heads {
+                    self.fetch_entry(now, h, vec![from], out);
+                }
+                self.check_bootstrap_done(now);
+            }
+            Message::HeadsRequest => {
+                out.send(from, Message::HeadsReply { heads: self.contributions.heads() });
+            }
+            Message::HeadsReply { heads } => {
+                for h in heads {
+                    if !self.contributions.contains_entry(&h) {
+                        self.fetch_entry(now, h, vec![from], out);
+                    }
+                }
+            }
+            Message::ValQuery { req_id, cid } => {
+                if self.cfg.blocking_validation && self.batch_queue.in_flight_len() > 0 {
+                    // Ablation: the blocking design parks the query until
+                    // current validation work completes.
+                    self.deferred_val_replies.push((from, req_id, cid));
+                    self.metrics.inc("val_queries_deferred");
+                } else {
+                    // Answer immediately from the validations store — the
+                    // paper's learning: never block on in-flight validations.
+                    let record = self.validations.get(&cid).cloned();
+                    self.metrics.inc("val_queries_served");
+                    out.send(from, Message::ValReply { req_id, cid, record });
+                }
+            }
+            Message::ValReply { req_id, cid, record } => {
+                self.metrics.inc("val_replies_received");
+                self.on_val_reply(now, from, req_id, cid, record, out);
+            }
+        }
+        self.drain_engines(now, out);
+        self.check_bootstrap_done(now);
+    }
+
+    fn on_timer(&mut self, now: Nanos, tok: u64, out: &mut Outbox<Message>) {
+        match token::proto(tok) {
+            token::PEERSDB => {
+                // The periodic service tick.
+                out.timer(token::pack(token::PEERSDB, TICK), self.cfg.tick_interval);
+                let mut dht_sends = dht::engine::Sends::new();
+                self.dht.tick(now, &mut dht_sends);
+                self.wrap_dht(dht_sends, out);
+                let mut bs_sends = bitswap::Sends::new();
+                self.bitswap.tick(now, &mut bs_sends);
+                self.wrap_bitswap(bs_sends, out);
+                self.pubsub.tick(now);
+                // Neighbor resampling is an O(table) shuffle + gossip —
+                // once a second is plenty (ticks are 100 ms).
+                if self.tick_count % 10 == 0 {
+                    self.refresh_neighbors(out);
+                }
+                self.expire_votes(now, out);
+                // Join-handshake retry: the initial Join (or its Ack) may
+                // be lost on an unreliable network.
+                if let (Bootstrap::Joining { started }, Some(root)) =
+                    (self.bootstrap, self.cfg.bootstrap)
+                {
+                    if now.saturating_sub(started) >= Duration::from_secs(2) {
+                        self.bootstrap = Bootstrap::Joining { started: now };
+                        self.metrics.inc("join_retries");
+                        out.send(root, Message::Join { passphrase: self.gate.presentation() });
+                    }
+                }
+                // Periodic anti-entropy heads exchange.
+                self.tick_count = self.tick_count.wrapping_add(1);
+                let every = self.cfg.anti_entropy_every_ticks;
+                if every > 0 && self.tick_count % every == 0 {
+                    let peers = self.dht.table.peers();
+                    if let Some(peer) = self.rng.choose(&peers) {
+                        out.send(*peer, Message::HeadsRequest);
+                        self.metrics.inc("anti_entropy_syncs");
+                    }
+                    self.retry_missing_data(now, out);
+                }
+                // Flush stale partial validation batches.
+                if self.batch_queue.pending_len() > 0
+                    && now.saturating_sub(self.last_enqueue) >= self.cfg.batch_flush
+                {
+                    self.maybe_start_batch(now, true, out);
+                }
+                self.drain_engines(now, out);
+                self.check_bootstrap_done(now);
+            }
+            token::VALIDATION => {
+                let batch_id = token::inner(tok);
+                self.on_validation_batch_done(now, batch_id, out);
+            }
+            _ => {}
+        }
+    }
+
+    fn processing_cost(&self, msg: &Message) -> Duration {
+        let kb = crate::net::WireSize::wire_size(msg) as u64 / 1024;
+        self.cfg.proc_cost_per_msg + Duration(self.cfg.proc_cost_per_kb.0 * kb)
+    }
+}

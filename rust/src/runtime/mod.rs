@@ -1,0 +1,220 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs Python once; afterwards this module is the only
+//! bridge to the compiled computations — the request path never touches
+//! Python. Artifacts are HLO *text* (see `python/compile/aot.py` for why)
+//! loaded via `HloModuleProto::from_text_file`, compiled on the PJRT CPU
+//! client, and kept as loaded executables for repeated invocation.
+
+use crate::codec::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape contract shared with `python/compile/aot.py` (meta.json).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Meta {
+    pub batch: usize,
+    pub features: usize,
+    pub hidden: usize,
+    pub refset: usize,
+    pub knn_k: usize,
+}
+
+impl Meta {
+    fn from_json(j: &Json) -> Result<Meta> {
+        let get = |k: &str| {
+            j.path(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("meta.json missing field {k}"))
+        };
+        Ok(Meta {
+            batch: get("batch")?,
+            features: get("features")?,
+            hidden: get("hidden")?,
+            refset: get("refset")?,
+            knn_k: get("knn_k")?,
+        })
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+/// The collaborative performance model, loaded from artifacts and ready
+/// to train/predict/score. Owns the current parameter literals.
+pub struct PerfModel {
+    pub meta: Meta,
+    exe_init: xla::PjRtLoadedExecutable,
+    exe_train: xla::PjRtLoadedExecutable,
+    exe_predict: xla::PjRtLoadedExecutable,
+    exe_knn: xla::PjRtLoadedExecutable,
+    params: Vec<xla::Literal>,
+}
+
+impl PerfModel {
+    /// Load + compile all artifacts from a directory (default
+    /// `artifacts/`), then initialize parameters.
+    pub fn load(dir: impl AsRef<Path>) -> Result<PerfModel> {
+        let dir = dir.as_ref();
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
+        let meta_json =
+            Json::parse(&meta_text).map_err(|e| anyhow!("parsing meta.json: {e}"))?;
+        let meta = Meta::from_json(&meta_json)?;
+        let client = xla::PjRtClient::cpu()?;
+        let p = |name: &str| -> PathBuf { dir.join(format!("{name}.hlo.txt")) };
+        let exe_init = compile(&client, &p("init_params"))?;
+        let exe_train = compile(&client, &p("train_step"))?;
+        let exe_predict = compile(&client, &p("predict"))?;
+        let exe_knn = compile(&client, &p("knn_score"))?;
+        let mut model = PerfModel {
+            meta,
+            exe_init,
+            exe_train,
+            exe_predict,
+            exe_knn,
+            params: Vec::new(),
+        };
+        model.reset()?;
+        Ok(model)
+    }
+
+    /// Re-initialize parameters (deterministic He init baked at AOT time).
+    pub fn reset(&mut self) -> Result<()> {
+        let result = self.exe_init.execute::<xla::Literal>(&[])?[0][0].to_literal_sync()?;
+        self.params = result.to_tuple()?;
+        if self.params.len() != 6 {
+            bail!("init artifact returned {} params, want 6", self.params.len());
+        }
+        Ok(())
+    }
+
+    /// Number of trainable scalars (diagnostics).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.element_count()).sum()
+    }
+
+    fn check_batch(&self, xs: &[f32], ys_len: Option<usize>) -> Result<()> {
+        let b = self.meta.batch;
+        let d = self.meta.features;
+        if xs.len() != b * d {
+            bail!("x has {} values, compiled batch wants {}", xs.len(), b * d);
+        }
+        if let Some(n) = ys_len {
+            if n != b {
+                bail!("y/mask has {n} values, compiled batch wants {b}");
+            }
+        }
+        Ok(())
+    }
+
+    /// One SGD step on a full (padded) batch; returns the masked loss.
+    pub fn train_step(&mut self, xs: &[f32], ys: &[f32], mask: &[f32], lr: f32) -> Result<f32> {
+        self.check_batch(xs, Some(ys.len()))?;
+        let b = self.meta.batch as i64;
+        let d = self.meta.features as i64;
+        let x = xla::Literal::vec1(xs).reshape(&[b, d])?;
+        let y = xla::Literal::vec1(ys);
+        let m = xla::Literal::vec1(mask);
+        let lr = xla::Literal::scalar(lr);
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&m);
+        inputs.push(&lr);
+        let result = self.exe_train.execute(&inputs)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        if outs.len() != 7 {
+            bail!("train artifact returned {} outputs, want 7", outs.len());
+        }
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        self.params = outs;
+        Ok(loss)
+    }
+
+    /// Predict ln(runtime) for a full (padded) feature batch.
+    pub fn predict(&self, xs: &[f32]) -> Result<Vec<f32>> {
+        self.check_batch(xs, None)?;
+        let b = self.meta.batch as i64;
+        let d = self.meta.features as i64;
+        let x = xla::Literal::vec1(xs).reshape(&[b, d])?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&x);
+        let result = self.exe_predict.execute(&inputs)?[0][0].to_literal_sync()?;
+        result.to_tuple1()?.to_vec::<f32>().map_err(Into::into)
+    }
+
+    /// k-NN novelty scores of a (padded) batch against a (padded)
+    /// reference set — the validation scorer.
+    pub fn knn_score(&self, xs: &[f32], refs: &[f32]) -> Result<Vec<f32>> {
+        self.check_batch(xs, None)?;
+        let (b, d, r) = (
+            self.meta.batch as i64,
+            self.meta.features as i64,
+            self.meta.refset as i64,
+        );
+        if refs.len() != (r * d) as usize {
+            bail!("refs has {} values, compiled refset wants {}", refs.len(), r * d);
+        }
+        let x = xla::Literal::vec1(xs).reshape(&[b, d])?;
+        let rf = xla::Literal::vec1(refs).reshape(&[r, d])?;
+        let result = self.exe_knn.execute::<xla::Literal>(&[x, rf])?[0][0].to_literal_sync()?;
+        result.to_tuple1()?.to_vec::<f32>().map_err(Into::into)
+    }
+
+    /// Export current parameters (flattened) for checkpointing/sharing —
+    /// collaborative *model* exchange, the paper's future-work extension.
+    pub fn export_params(&self) -> Result<Vec<Vec<f32>>> {
+        self.params.iter().map(|p| p.to_vec::<f32>().map_err(Into::into)).collect()
+    }
+}
+
+/// Padded-batch helpers shared by training workflows.
+pub mod batching {
+    /// Split rows into `(x, y, mask)` batches padded to `batch` rows.
+    pub fn padded_batches(
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        batch: usize,
+    ) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let n = ys.len();
+        assert_eq!(xs.len(), n * dim);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let take = batch.min(n - i);
+            let mut bx = xs[i * dim..(i + take) * dim].to_vec();
+            let mut by = ys[i..i + take].to_vec();
+            let mut bm = vec![1.0f32; take];
+            bx.resize(batch * dim, 0.0);
+            by.resize(batch, 0.0);
+            bm.resize(batch, 0.0);
+            out.push((bx, by, bm));
+            i += take;
+        }
+        out
+    }
+
+    #[cfg(test)]
+    mod tests {
+        #[test]
+        fn pads_last_batch() {
+            let xs: Vec<f32> = (0..10).map(|v| v as f32).collect();
+            let ys: Vec<f32> = (0..5).map(|v| v as f32).collect();
+            let batches = super::padded_batches(&xs, &ys, 2, 4);
+            assert_eq!(batches.len(), 2);
+            let (bx, by, bm) = &batches[1];
+            assert_eq!(bx.len(), 8);
+            assert_eq!(by.len(), 4);
+            assert_eq!(bm, &vec![1.0, 0.0, 0.0, 0.0]);
+        }
+    }
+}

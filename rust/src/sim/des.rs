@@ -1,0 +1,550 @@
+//! Deterministic discrete-event simulator for [`Runner`] nodes.
+//!
+//! Executes a whole cluster of sans-io nodes in virtual time. Each node
+//! has an egress-bandwidth serializer and a single-core CPU model
+//! (messages queue behind one another), which is what reproduces the
+//! paper's observation that the root peer's CPU strain inflates
+//! replication maxima in its region.
+
+use crate::net::{Outbox, PeerId, Runner};
+use crate::sim::model::NetModel;
+use crate::sim::regions::Region;
+use crate::util::time::{Duration, Nanos};
+use crate::util::Rng;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Aggregate transport statistics for a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub msgs_sent: u64,
+    pub msgs_delivered: u64,
+    pub msgs_dropped_offline: u64,
+    pub msgs_dropped_blocked: u64,
+    pub msgs_dropped_loss: u64,
+    pub bytes_sent: u64,
+    pub events_processed: u64,
+    pub timers_fired: u64,
+}
+
+struct NodeSlot<R> {
+    runner: R,
+    region: Region,
+    online: bool,
+    /// Incremented on every offline→online transition; timers and
+    /// in-flight deliveries from a previous session are dropped.
+    epoch: u32,
+    /// Egress link is busy until this instant (bandwidth serialization).
+    egress_free: Nanos,
+    /// Physical machine this node (pod) runs on; pods sharing a machine
+    /// share its CPU — the co-location contention of the paper's GKE
+    /// deployment (up to ~9 pods per e2-standard-2 node).
+    machine: usize,
+}
+
+enum Ev<R: Runner> {
+    Start { node: usize, epoch: u32 },
+    Deliver { to: usize, epoch: u32, from: PeerId, msg: R::Msg },
+    Timer { node: usize, epoch: u32, token: u64 },
+}
+
+struct Queued<R: Runner> {
+    at: Nanos,
+    seq: u64,
+    ev: Ev<R>,
+}
+
+impl<R: Runner> PartialEq for Queued<R> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<R: Runner> Eq for Queued<R> {}
+impl<R: Runner> PartialOrd for Queued<R> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<R: Runner> Ord for Queued<R> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse for min-heap behaviour inside BinaryHeap.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// A simulated cluster of runner nodes.
+pub struct Cluster<R: Runner> {
+    nodes: Vec<NodeSlot<R>>,
+    index: HashMap<PeerId, usize>,
+    queue: BinaryHeap<Queued<R>>,
+    now: Nanos,
+    seq: u64,
+    pub model: NetModel,
+    rng: Rng,
+    /// Directionally blocked links (fuzz / partition experiments).
+    blocked: HashSet<(usize, usize)>,
+    /// CPU availability per physical machine (pods share).
+    machines: Vec<Nanos>,
+    pub stats: SimStats,
+}
+
+impl<R: Runner> Cluster<R> {
+    pub fn new(model: NetModel, seed: u64) -> Self {
+        Cluster {
+            nodes: Vec::new(),
+            index: HashMap::new(),
+            queue: BinaryHeap::new(),
+            now: Nanos::ZERO,
+            seq: 0,
+            model,
+            rng: Rng::new(seed ^ 0x5157_0CA5_7E11_0DE5),
+            blocked: HashSet::new(),
+            machines: Vec::new(),
+            stats: SimStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> Nanos {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a node on its own dedicated machine (no CPU sharing).
+    pub fn add_node(&mut self, runner: R, region: Region, start_at: Nanos) -> usize {
+        let machine = self.machines.len();
+        self.machines.push(Nanos::ZERO);
+        self.add_node_on_machine(runner, region, start_at, machine)
+    }
+
+    /// Add a node (pod) on an existing machine; pods on the same machine
+    /// contend for its CPU, as on the paper's 6-node GKE cluster.
+    pub fn add_node_on_machine(
+        &mut self,
+        runner: R,
+        region: Region,
+        start_at: Nanos,
+        machine: usize,
+    ) -> usize {
+        while self.machines.len() <= machine {
+            self.machines.push(Nanos::ZERO);
+        }
+        let id = runner.id();
+        let idx = self.nodes.len();
+        self.nodes.push(NodeSlot {
+            runner,
+            region,
+            online: true,
+            epoch: 0,
+            egress_free: Nanos::ZERO,
+            machine,
+        });
+        self.index.insert(id, idx);
+        self.push(start_at.max(self.now), Ev::Start { node: idx, epoch: 0 });
+        idx
+    }
+
+    pub fn node(&self, idx: usize) -> &R {
+        &self.nodes[idx].runner
+    }
+
+    pub fn node_mut(&mut self, idx: usize) -> &mut R {
+        &mut self.nodes[idx].runner
+    }
+
+    pub fn region_of(&self, idx: usize) -> Region {
+        self.nodes[idx].region
+    }
+
+    pub fn peer_id(&self, idx: usize) -> PeerId {
+        self.nodes[idx].runner.id()
+    }
+
+    pub fn index_of(&self, id: PeerId) -> Option<usize> {
+        self.index.get(&id).copied()
+    }
+
+    pub fn is_online(&self, idx: usize) -> bool {
+        self.nodes[idx].online
+    }
+
+    fn push(&mut self, at: Nanos, ev: Ev<R>) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Queued { at, seq, ev });
+    }
+
+    // ----- churn / fuzz controls ------------------------------------------
+
+    /// Take a node offline: in-flight deliveries and timers are dropped.
+    pub fn set_offline(&mut self, idx: usize) {
+        self.nodes[idx].online = false;
+    }
+
+    /// Bring a node back online; `on_start` runs again (rebootstrap).
+    pub fn set_online(&mut self, idx: usize) {
+        let slot = &mut self.nodes[idx];
+        if !slot.online {
+            slot.online = true;
+            slot.epoch += 1;
+            let epoch = slot.epoch;
+            self.push(self.now, Ev::Start { node: idx, epoch });
+        }
+    }
+
+    /// Block the directed link a→b (messages silently dropped).
+    pub fn block_link(&mut self, a: usize, b: usize) {
+        self.blocked.insert((a, b));
+    }
+
+    pub fn unblock_link(&mut self, a: usize, b: usize) {
+        self.blocked.remove(&(a, b));
+    }
+
+    pub fn block_pair(&mut self, a: usize, b: usize) {
+        self.block_link(a, b);
+        self.block_link(b, a);
+    }
+
+    pub fn unblock_pair(&mut self, a: usize, b: usize) {
+        self.unblock_link(a, b);
+        self.unblock_link(b, a);
+    }
+
+    // ----- injection --------------------------------------------------------
+
+    /// Invoke a closure against a node's runner *now*, routing any
+    /// resulting sends/timers through the network model. This is how
+    /// experiment harnesses inject API calls (put/get/query).
+    pub fn with_node<T>(&mut self, idx: usize, f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) -> T) -> T {
+        let mut out = Outbox::new();
+        let now = self.now;
+        let r = f(&mut self.nodes[idx].runner, now, &mut out);
+        self.dispatch(idx, out);
+        r
+    }
+
+    // ----- core loop ---------------------------------------------------------
+
+    fn dispatch(&mut self, from_idx: usize, out: Outbox<R::Msg>) {
+        let from_online = self.nodes[from_idx].online;
+        let from_id = self.nodes[from_idx].runner.id();
+        let from_region = self.nodes[from_idx].region;
+        for (token, after) in out.timers {
+            let epoch = self.nodes[from_idx].epoch;
+            let at = self.now + after;
+            self.push(at, Ev::Timer { node: from_idx, epoch, token });
+        }
+        for (to, msg) in out.sends {
+            if !from_online {
+                self.stats.msgs_dropped_offline += 1;
+                continue;
+            }
+            self.stats.msgs_sent += 1;
+            let Some(&to_idx) = self.index.get(&to) else {
+                self.stats.msgs_dropped_offline += 1;
+                continue;
+            };
+            let size = crate::net::WireSize::wire_size(&msg);
+            self.stats.bytes_sent += size as u64;
+            if to_idx == from_idx {
+                // Loopback: negligible latency, no egress cost.
+                let epoch = self.nodes[to_idx].epoch;
+                let at = self.now + Duration::from_micros(1);
+                self.push(at, Ev::Deliver { to: to_idx, epoch, from: from_id, msg });
+                continue;
+            }
+            if self.blocked.contains(&(from_idx, to_idx)) {
+                self.stats.msgs_dropped_blocked += 1;
+                continue;
+            }
+            if self.model.loss > 0.0 && self.rng.chance(self.model.loss) {
+                self.stats.msgs_dropped_loss += 1;
+                continue;
+            }
+            // Egress bandwidth serialization at the sender.
+            let tx = self.model.tx_time(size);
+            let start = self.nodes[from_idx].egress_free.max(self.now);
+            let egress_done = start + tx;
+            self.nodes[from_idx].egress_free = egress_done;
+            let to_region = self.nodes[to_idx].region;
+            let latency = self.model.sample_latency(from_region, to_region, &mut self.rng);
+            let arrival = egress_done + latency;
+            let epoch = self.nodes[to_idx].epoch;
+            self.push(arrival, Ev::Deliver { to: to_idx, epoch, from: from_id, msg });
+        }
+    }
+
+    /// Process one event; returns `false` when the queue is empty.
+    pub fn step(&mut self) -> bool {
+        let Some(q) = self.queue.pop() else {
+            return false;
+        };
+        debug_assert!(q.at >= self.now, "time went backwards");
+        self.now = q.at;
+        self.stats.events_processed += 1;
+        match q.ev {
+            Ev::Start { node, epoch } => {
+                let slot = &mut self.nodes[node];
+                if !slot.online || slot.epoch != epoch {
+                    return true;
+                }
+                let mut out = Outbox::new();
+                slot.runner.on_start(self.now, &mut out);
+                self.dispatch(node, out);
+            }
+            Ev::Deliver { to, epoch, from, msg } => {
+                let slot = &mut self.nodes[to];
+                if !slot.online || slot.epoch != epoch {
+                    self.stats.msgs_dropped_offline += 1;
+                    return true;
+                }
+                // Shared-CPU model: processing starts when the node's
+                // *machine* frees up and takes `processing_cost`; the
+                // runner observes the *completion* time. Pods co-located
+                // on one machine queue behind each other.
+                let cost = slot.runner.processing_cost(&msg);
+                let machine = slot.machine;
+                let begin = self.machines[machine].max(self.now);
+                let done = begin + cost;
+                self.machines[machine] = done;
+                let slot = &mut self.nodes[to];
+                let mut out = Outbox::new();
+                slot.runner.on_message(done, from, msg, &mut out);
+                self.stats.msgs_delivered += 1;
+                // Outbound work is timestamped at processing completion.
+                let saved = self.now;
+                self.now = done;
+                self.dispatch(to, out);
+                self.now = saved;
+            }
+            Ev::Timer { node, epoch, token } => {
+                let slot = &mut self.nodes[node];
+                if !slot.online || slot.epoch != epoch {
+                    return true;
+                }
+                self.stats.timers_fired += 1;
+                let mut out = Outbox::new();
+                slot.runner.on_timer(self.now, token, &mut out);
+                self.dispatch(node, out);
+            }
+        }
+        true
+    }
+
+    /// Run until virtual time `t` (events at exactly `t` included).
+    pub fn run_until(&mut self, t: Nanos) {
+        while let Some(head) = self.queue.peek() {
+            if head.at > t {
+                break;
+            }
+            self.step();
+        }
+        self.now = self.now.max(t);
+    }
+
+    /// Run until no events remain (careful: periodic timers never drain;
+    /// use `run_until` with protocols that self-rearm).
+    pub fn run_until_idle(&mut self) {
+        while self.step() {}
+    }
+
+    /// Advance time by `d`.
+    pub fn run_for(&mut self, d: Duration) {
+        let t = self.now + d;
+        self.run_until(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{token, WireSize};
+    use crate::sim::model::NetModel;
+
+    /// Ping-pong test runner: replies to every odd number with n+1 until 10.
+    struct Echo {
+        id: PeerId,
+        peer: Option<PeerId>,
+        pub got: Vec<(Nanos, u64)>,
+    }
+
+    impl Runner for Echo {
+        type Msg = u64;
+
+        fn id(&self) -> PeerId {
+            self.id
+        }
+
+        fn on_start(&mut self, _now: Nanos, out: &mut Outbox<u64>) {
+            if let Some(p) = self.peer {
+                out.send(p, 1);
+            }
+        }
+
+        fn on_message(&mut self, now: Nanos, from: PeerId, msg: u64, out: &mut Outbox<u64>) {
+            self.got.push((now, msg));
+            if msg < 10 {
+                out.send(from, msg + 1);
+            }
+        }
+
+        fn on_timer(&mut self, _now: Nanos, _token: u64, _out: &mut Outbox<u64>) {}
+    }
+
+    fn mk(seed: u64) -> (Cluster<Echo>, usize, usize) {
+        let mut rng = Rng::new(seed);
+        let a_id = PeerId::from_rng(&mut rng);
+        let b_id = PeerId::from_rng(&mut rng);
+        let mut c = Cluster::new(NetModel::uniform(50.0, 1000.0, 0.0), seed);
+        let a = c.add_node(
+            Echo { id: a_id, peer: Some(b_id), got: vec![] },
+            Region::AsiaEast2,
+            Nanos::ZERO,
+        );
+        let b = c.add_node(
+            Echo { id: b_id, peer: None, got: vec![] },
+            Region::EuropeWest3,
+            Nanos::ZERO,
+        );
+        (c, a, b)
+    }
+
+    #[test]
+    fn ping_pong_completes() {
+        let (mut c, a, b) = mk(1);
+        c.run_until_idle();
+        // b got 1,3,5,7,9; a got 2,4,6,8,10
+        assert_eq!(c.node(b).got.iter().map(|x| x.1).collect::<Vec<_>>(), vec![1, 3, 5, 7, 9]);
+        assert_eq!(c.node(a).got.iter().map(|x| x.1).collect::<Vec<_>>(), vec![2, 4, 6, 8, 10]);
+        assert_eq!(c.stats.msgs_delivered, 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mut c1, _, b1) = mk(7);
+        let (mut c2, _, b2) = mk(7);
+        c1.run_until_idle();
+        c2.run_until_idle();
+        assert_eq!(c1.node(b1).got, c2.node(b2).got);
+        assert_eq!(c1.now(), c2.now());
+    }
+
+    #[test]
+    fn latency_reflected_in_time() {
+        let (mut c, _, b) = mk(2);
+        c.run_until_idle();
+        // First delivery needs ≥ 50 ms one-way.
+        assert!(c.node(b).got[0].0 >= Nanos(50_000_000));
+    }
+
+    #[test]
+    fn offline_drops_messages() {
+        let (mut c, _a, b) = mk(3);
+        c.set_offline(b);
+        c.run_until_idle();
+        assert!(c.node(b).got.is_empty());
+        assert!(c.stats.msgs_dropped_offline >= 1);
+    }
+
+    #[test]
+    fn blocked_link_drops() {
+        let (mut c, a, b) = mk(4);
+        c.block_link(a, b);
+        c.run_until_idle();
+        assert!(c.node(b).got.is_empty());
+        assert_eq!(c.stats.msgs_dropped_blocked, 1);
+    }
+
+    #[test]
+    fn restart_bumps_epoch_and_restarts() {
+        let (mut c, a, b) = mk(5);
+        c.run_until_idle();
+        let before = c.node(b).got.len();
+        c.set_offline(a);
+        c.set_online(a); // re-runs on_start → new ping round
+        c.run_until_idle();
+        assert!(c.node(b).got.len() > before);
+    }
+
+    #[test]
+    fn timers_fire_in_order() {
+        struct T {
+            id: PeerId,
+            fired: Vec<u64>,
+        }
+        impl Runner for T {
+            type Msg = u64;
+            fn id(&self) -> PeerId {
+                self.id
+            }
+            fn on_start(&mut self, _now: Nanos, out: &mut Outbox<u64>) {
+                out.timer(token::pack(token::DHT, 2), Duration::from_millis(20));
+                out.timer(token::pack(token::DHT, 1), Duration::from_millis(10));
+            }
+            fn on_message(&mut self, _n: Nanos, _f: PeerId, _m: u64, _o: &mut Outbox<u64>) {}
+            fn on_timer(&mut self, _now: Nanos, tok: u64, _out: &mut Outbox<u64>) {
+                self.fired.push(token::inner(tok));
+            }
+        }
+        let mut rng = Rng::new(6);
+        let id = PeerId::from_rng(&mut rng);
+        let mut c = Cluster::new(NetModel::default(), 6);
+        let n = c.add_node(T { id, fired: vec![] }, Region::Local, Nanos::ZERO);
+        c.run_until_idle();
+        assert_eq!(c.node(n).fired, vec![1, 2]);
+    }
+
+    #[test]
+    fn cpu_model_queues_processing() {
+        // One sender floods a receiver whose per-message cost is 1 ms;
+        // completions must be spaced ≥ 1 ms apart.
+        struct Flood {
+            id: PeerId,
+            peer: Option<PeerId>,
+            got: Vec<Nanos>,
+        }
+        impl Runner for Flood {
+            type Msg = u64;
+            fn id(&self) -> PeerId {
+                self.id
+            }
+            fn on_start(&mut self, _now: Nanos, out: &mut Outbox<u64>) {
+                if let Some(p) = self.peer {
+                    for i in 0..10 {
+                        out.send(p, i);
+                    }
+                }
+            }
+            fn on_message(&mut self, now: Nanos, _f: PeerId, _m: u64, _o: &mut Outbox<u64>) {
+                self.got.push(now);
+            }
+            fn on_timer(&mut self, _n: Nanos, _t: u64, _o: &mut Outbox<u64>) {}
+            fn processing_cost(&self, _m: &u64) -> Duration {
+                Duration::from_millis(1)
+            }
+        }
+        let mut rng = Rng::new(8);
+        let a_id = PeerId::from_rng(&mut rng);
+        let b_id = PeerId::from_rng(&mut rng);
+        let mut c = Cluster::new(NetModel::uniform(1.0, 10_000.0, 0.0), 8);
+        c.add_node(Flood { id: a_id, peer: Some(b_id), got: vec![] }, Region::Local, Nanos::ZERO);
+        let b = c.add_node(Flood { id: b_id, peer: None, got: vec![] }, Region::Local, Nanos::ZERO);
+        c.run_until_idle();
+        let got = &c.node(b).got;
+        assert_eq!(got.len(), 10);
+        for w in got.windows(2) {
+            assert!(w[1].0 - w[0].0 >= 1_000_000, "completions not serialized");
+        }
+    }
+
+    #[test]
+    fn wire_size_default_via_encode() {
+        assert_eq!(WireSize::wire_size(&300u64), 2); // varint
+    }
+}

@@ -1,0 +1,131 @@
+//! Cluster-building helpers shared by tests, benches and examples:
+//! the "Helm chart" of the reproduction.
+
+use crate::net::Outbox;
+use crate::peersdb::{Node, NodeConfig, NodeEvent};
+use crate::sim::des::Cluster;
+use crate::sim::model::NetModel;
+use crate::sim::regions::{Region, ALL};
+use crate::util::time::{Duration, Nanos};
+use crate::util::Rng;
+use crate::validation::Validator;
+
+/// Description of one peer to launch.
+pub struct PeerSpec {
+    pub region: Region,
+    pub start_at: Nanos,
+    pub cfg: NodeConfig,
+    pub validator: Option<Box<dyn Validator>>,
+    /// Physical machine (pod co-location). `None` = dedicated machine.
+    pub machine: Option<usize>,
+}
+
+impl Default for PeerSpec {
+    fn default() -> Self {
+        PeerSpec {
+            region: Region::Local,
+            start_at: Nanos::ZERO,
+            cfg: NodeConfig::default(),
+            validator: None,
+            machine: None,
+        }
+    }
+}
+
+/// Build a PeersDB cluster: node 0 is the root (no bootstrap), the rest
+/// join through it. Returns the cluster; node indices equal spec indices.
+pub fn build_cluster(seed: u64, model: NetModel, specs: Vec<PeerSpec>) -> Cluster<Node> {
+    let mut rng = Rng::new(seed);
+    let mut cluster = Cluster::new(model, seed ^ 0xC0FFEE);
+    let mut root_id = None;
+    for (i, mut spec) in specs.into_iter().enumerate() {
+        let id = crate::net::PeerId::from_rng(&mut rng);
+        if i == 0 {
+            root_id = Some(id);
+            spec.cfg.bootstrap = None;
+        } else {
+            spec.cfg.bootstrap = root_id;
+        }
+        let node_seed = rng.next_u64();
+        let node = match spec.validator.take() {
+            Some(v) => Node::with_validator(id, spec.cfg, node_seed, v),
+            None => Node::new(id, spec.cfg, node_seed),
+        };
+        match spec.machine {
+            Some(m) => cluster.add_node_on_machine(node, spec.region, spec.start_at, m),
+            None => cluster.add_node(node, spec.region, spec.start_at),
+        };
+    }
+    cluster
+}
+
+/// The paper's prototype shape: `n` peers (incl. the root in
+/// asia-east2) rotated across the six GCP regions, joining with a
+/// fixed stagger. Pods co-locate on one machine per region (the GKE
+/// 6-node cluster of Table I).
+pub fn paper_cluster(
+    seed: u64,
+    n: usize,
+    stagger: Duration,
+    mut cfg_fn: impl FnMut(usize) -> NodeConfig,
+) -> Cluster<Node> {
+    let specs = (0..n)
+        .map(|i| {
+            let region = if i == 0 { Region::AsiaEast2 } else { ALL[i % ALL.len()] };
+            PeerSpec {
+                region,
+                start_at: Nanos(stagger.0 * i as u64),
+                cfg: cfg_fn(i),
+                machine: Some(ALL.iter().position(|r| *r == region).unwrap_or(0)),
+                ..Default::default()
+            }
+        })
+        .collect();
+    build_cluster(seed, NetModel::default(), specs)
+}
+
+/// Drain accumulated [`NodeEvent`]s from every node.
+pub fn drain_events(cluster: &mut Cluster<Node>) -> Vec<(usize, NodeEvent)> {
+    let mut all = Vec::new();
+    for i in 0..cluster.len() {
+        let evs = cluster.with_node(i, |n, _, _| std::mem::take(&mut n.events));
+        for e in evs {
+            all.push((i, e));
+        }
+    }
+    all
+}
+
+/// Inject a contribution at node `idx`; returns the data root CID.
+pub fn contribute(
+    cluster: &mut Cluster<Node>,
+    idx: usize,
+    data: &[u8],
+    workload: &str,
+) -> crate::cid::Cid {
+    let owned = data.to_vec();
+    let wl = workload.to_string();
+    cluster.with_node(idx, move |n: &mut Node, now, out: &mut Outbox<_>| {
+        n.contribute(now, &owned, &wl, "gcp-e2-standard-2", out)
+    })
+}
+
+/// Convenience: run until time `t`, then assert every node's store has
+/// converged to the same digest. Returns the digest.
+pub fn assert_converged(cluster: &mut Cluster<Node>) -> [u8; 32] {
+    let d0 = cluster.node(0).contributions.digest();
+    for i in 1..cluster.len() {
+        if !cluster.is_online(i) {
+            continue;
+        }
+        let di = cluster.node(i).contributions.digest();
+        assert_eq!(
+            d0,
+            di,
+            "store divergence between node 0 and node {i} ({} vs {} entries)",
+            cluster.node(0).contributions.len(),
+            cluster.node(i).contributions.len()
+        );
+    }
+    d0
+}

@@ -1,0 +1,23 @@
+//! Discrete-event simulation driver and network models.
+//!
+//! This is the evaluation substrate standing in for both the paper's
+//! 6-region GKE deployment (experiment 1 & 2) and its Testground
+//! simulations (`transfer`, `fuzz`, validation-strategy study). The same
+//! [`crate::net::Runner`] cores that run over TCP are driven here in
+//! virtual time, with:
+//!
+//! * a region-to-region latency matrix calibrated to public GCP
+//!   inter-region RTTs ([`regions`]),
+//! * per-node egress bandwidth serialization and a per-node CPU model
+//!   (which reproduces the paper's root-peer CPU-strain artifact),
+//! * optional jitter, packet loss, link blocking (fuzz/churn), and
+//! * deterministic execution from a single seed.
+
+pub mod des;
+pub mod harness;
+pub mod model;
+pub mod regions;
+
+pub use des::{Cluster, SimStats};
+pub use model::{LatencySpec, NetModel};
+pub use regions::Region;

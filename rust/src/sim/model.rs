@@ -1,0 +1,117 @@
+//! Network link model: latency, jitter, bandwidth, loss.
+
+use crate::sim::regions::{one_way_ms, Region};
+use crate::util::time::Duration;
+use crate::util::Rng;
+
+/// How link latency is determined.
+#[derive(Clone, Debug)]
+pub enum LatencySpec {
+    /// Use the GCP region matrix (prototype experiments).
+    RegionMatrix,
+    /// Fixed one-way latency for every pair (Testground-style plans).
+    Uniform { one_way_ms: f64 },
+}
+
+/// Link + node resource model. One instance shared by the whole cluster.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    pub latency: LatencySpec,
+    /// Jitter std-dev as a fraction of base latency (normal, truncated ≥0).
+    pub jitter_frac: f64,
+    /// Per-node egress bandwidth, bits/second.
+    pub bandwidth_bps: f64,
+    /// Probability a message is lost in transit.
+    pub loss: f64,
+    /// Fixed per-hop overhead added to every delivery (protocol stacks,
+    /// kernel, etc.).
+    pub per_hop_overhead: Duration,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel {
+            latency: LatencySpec::RegionMatrix,
+            jitter_frac: 0.05,
+            // e2-standard-2 egress ≈ 4 Gbit/s cap; sustained cross-region
+            // rates are far lower. 1 Gbit/s is our default.
+            bandwidth_bps: 1.0e9,
+            loss: 0.0,
+            per_hop_overhead: Duration::from_micros(100),
+        }
+    }
+}
+
+impl NetModel {
+    /// Testground-style uniform network.
+    pub fn uniform(one_way_ms: f64, bandwidth_mbps: f64, jitter_frac: f64) -> NetModel {
+        NetModel {
+            latency: LatencySpec::Uniform { one_way_ms },
+            jitter_frac,
+            bandwidth_bps: bandwidth_mbps * 1e6,
+            loss: 0.0,
+            per_hop_overhead: Duration::from_micros(100),
+        }
+    }
+
+    /// Sampled one-way delay between two regions (base + jitter).
+    pub fn sample_latency(&self, from: Region, to: Region, rng: &mut Rng) -> Duration {
+        let base_ms = match self.latency {
+            LatencySpec::RegionMatrix => one_way_ms(from, to),
+            LatencySpec::Uniform { one_way_ms } => {
+                if from == to {
+                    0.25
+                } else {
+                    one_way_ms
+                }
+            }
+        };
+        let jitter = if self.jitter_frac > 0.0 {
+            rng.normal_ms(0.0, base_ms * self.jitter_frac)
+        } else {
+            0.0
+        };
+        let ms = (base_ms + jitter).max(0.05);
+        self.per_hop_overhead + Duration::from_secs_f64(ms / 1e3)
+    }
+
+    /// Transmission (serialization) time for `bytes` at node egress.
+    pub fn tx_time(&self, bytes: usize) -> Duration {
+        Duration::from_secs_f64(bytes as f64 * 8.0 / self.bandwidth_bps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_has_floor() {
+        let m = NetModel {
+            jitter_frac: 10.0, // extreme jitter can go negative pre-clamp
+            ..NetModel::default()
+        };
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let d = m.sample_latency(Region::AsiaEast2, Region::AsiaEast2, &mut rng);
+            assert!(d.0 > 0);
+        }
+    }
+
+    #[test]
+    fn tx_time_scales() {
+        let m = NetModel::uniform(50.0, 100.0, 0.0); // 100 Mbit/s
+        let t1 = m.tx_time(1_000_000);
+        assert!((t1.as_secs_f64() - 0.08).abs() < 1e-9); // 8 Mbit / 100 Mbit/s
+    }
+
+    #[test]
+    fn uniform_spec_intra_fast() {
+        let m = NetModel::uniform(150.0, 1024.0, 0.0);
+        let mut rng = Rng::new(4);
+        let same = m.sample_latency(Region::Local, Region::Local, &mut rng);
+        assert!(same < Duration::from_millis(2));
+        let cross = m.sample_latency(Region::AsiaEast2, Region::Local, &mut rng);
+        assert!(cross >= Duration::from_millis(140));
+    }
+}

@@ -1,0 +1,99 @@
+//! The six GCP regions of the paper's prototype deployment and an
+//! approximate one-way latency matrix between them.
+//!
+//! Values are derived from publicly reported GCP inter-region round-trip
+//! times (halved to one-way, rounded). Absolute accuracy is not required —
+//! the experiments compare *relative* behaviour across regions — but the
+//! ordering (e.g. São Paulo ↔ Sydney worst, Frankfurt ↔ Tel Aviv best)
+//! matches the real topology.
+
+/// Deployment regions. `Local` models a single-datacenter/Testground
+/// setting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Region {
+    AsiaEast2,          // Hong Kong — the paper's root peer region
+    EuropeWest3,        // Frankfurt
+    UsWest1,            // Oregon
+    SouthamericaEast1,  // São Paulo
+    MeWest1,            // Tel Aviv
+    AustraliaSoutheast1, // Sydney
+    Local,
+}
+
+pub const ALL: [Region; 6] = [
+    Region::AsiaEast2,
+    Region::EuropeWest3,
+    Region::UsWest1,
+    Region::SouthamericaEast1,
+    Region::MeWest1,
+    Region::AustraliaSoutheast1,
+];
+
+impl Region {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Region::AsiaEast2 => "asia-east2",
+            Region::EuropeWest3 => "europe-west3",
+            Region::UsWest1 => "us-west1",
+            Region::SouthamericaEast1 => "southamerica-east1",
+            Region::MeWest1 => "me-west1",
+            Region::AustraliaSoutheast1 => "australia-southeast1",
+            Region::Local => "local",
+        }
+    }
+
+    fn index(&self) -> Option<usize> {
+        ALL.iter().position(|r| r == self)
+    }
+}
+
+/// One-way latency in milliseconds between region pairs (upper-triangle
+/// symmetric). Intra-region latency is 0.25 ms.
+const ONE_WAY_MS: [[f64; 6]; 6] = [
+    // to:      HK     FRA    ORE    SAO    TLV    SYD
+    /* HK  */ [0.25, 90.0, 65.0, 150.0, 110.0, 65.0],
+    /* FRA */ [90.0, 0.25, 75.0, 100.0, 30.0, 140.0],
+    /* ORE */ [65.0, 75.0, 0.25, 85.0, 90.0, 70.0],
+    /* SAO */ [150.0, 100.0, 85.0, 0.25, 125.0, 150.0],
+    /* TLV */ [110.0, 30.0, 90.0, 125.0, 0.25, 145.0],
+    /* SYD */ [65.0, 140.0, 70.0, 150.0, 145.0, 0.25],
+];
+
+/// One-way base latency between two regions, in milliseconds.
+pub fn one_way_ms(a: Region, b: Region) -> f64 {
+    match (a.index(), b.index()) {
+        (Some(i), Some(j)) => ONE_WAY_MS[i][j],
+        // Local ↔ anything: treat as intra-DC.
+        _ => 0.25,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric() {
+        for &a in &ALL {
+            for &b in &ALL {
+                assert_eq!(one_way_ms(a, b), one_way_ms(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn intra_region_small() {
+        for &r in &ALL {
+            assert!(one_way_ms(r, r) < 1.0);
+        }
+    }
+
+    #[test]
+    fn topology_ordering() {
+        use Region::*;
+        // Frankfurt–Tel Aviv is the closest inter-region pair;
+        // São Paulo–Sydney / São Paulo–Hong Kong the farthest.
+        assert!(one_way_ms(EuropeWest3, MeWest1) < one_way_ms(EuropeWest3, UsWest1));
+        assert!(one_way_ms(SouthamericaEast1, AustraliaSoutheast1) >= 145.0);
+    }
+}

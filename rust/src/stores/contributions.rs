@@ -1,0 +1,210 @@
+//! The contributions store: an event-log store of performance-data
+//! references (§III-B of the paper).
+
+use crate::cid::Cid;
+use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use crate::ipfs_log::{Entry, Join, Log};
+use crate::net::PeerId;
+use std::collections::HashSet;
+
+/// One shared performance-data contribution. The actual data lives in the
+/// blockstore under `data_cid`; this record is what replicates in the log.
+/// The attribute fields implement the paper's "the data format of the
+/// contributions store could also be extended with additional attributes,
+/// e.g., in order to filter CIDs by cloud platforms".
+#[derive(Clone, Debug, PartialEq)]
+pub struct Contribution {
+    /// Root CID of the performance-data file.
+    pub data_cid: Cid,
+    /// Contributing peer.
+    pub author: PeerId,
+    /// Dataflow workload identifier (e.g. "spark-sort", "flink-wordcount").
+    pub workload: String,
+    /// Cloud platform / cluster the data was recorded on.
+    pub platform: String,
+    /// Compressed size of the referenced file in bytes.
+    pub size_bytes: u64,
+    /// Unix-like timestamp (virtual ns in simulations).
+    pub created_at: u64,
+}
+
+impl Encode for Contribution {
+    fn encode(&self, w: &mut Writer) {
+        self.data_cid.encode(w);
+        self.author.encode(w);
+        w.put_str(&self.workload);
+        w.put_str(&self.platform);
+        w.put_varint(self.size_bytes);
+        w.put_varint(self.created_at);
+    }
+}
+
+impl Decode for Contribution {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(Contribution {
+            data_cid: Cid::decode(r)?,
+            author: PeerId::decode(r)?,
+            workload: r.get_str()?.to_string(),
+            platform: r.get_str()?.to_string(),
+            size_bytes: r.get_varint()?,
+            created_at: r.get_varint()?,
+        })
+    }
+}
+
+/// EventLogStore over [`Log`] with `Contribution` payloads.
+#[derive(Clone, Debug, Default)]
+pub struct ContributionsStore {
+    log: Log,
+    /// Fast membership test on referenced data CIDs.
+    data_cids: HashSet<Cid>,
+}
+
+impl ContributionsStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty()
+    }
+
+    pub fn log(&self) -> &Log {
+        &self.log
+    }
+
+    pub fn heads(&self) -> Vec<Cid> {
+        self.log.heads()
+    }
+
+    pub fn missing(&self) -> Vec<Cid> {
+        self.log.missing()
+    }
+
+    pub fn digest(&self) -> [u8; 32] {
+        self.log.digest()
+    }
+
+    /// Does the store already reference this data CID?
+    pub fn contains_data(&self, cid: &Cid) -> bool {
+        self.data_cids.contains(cid)
+    }
+
+    pub fn contains_entry(&self, cid: &Cid) -> bool {
+        self.log.contains(cid)
+    }
+
+    /// Append a local contribution; returns the log entry `(cid, entry)`
+    /// for blockstore persistence + provider announcement.
+    pub fn add(&mut self, author: PeerId, c: &Contribution) -> (Cid, Entry) {
+        self.data_cids.insert(c.data_cid);
+        self.log.append(author, crate::codec::to_bytes(c))
+    }
+
+    /// Join a replicated entry (verified against its CID).
+    pub fn join_entry(&mut self, cid: Cid, entry: Entry) -> Join {
+        let res = self.log.join_entry(cid, entry);
+        if res == Join::Added {
+            if let Some(e) = self.log.get(&cid) {
+                if let Ok(c) = crate::codec::from_bytes::<Contribution>(&e.payload) {
+                    self.data_cids.insert(c.data_cid);
+                }
+            }
+        }
+        res
+    }
+
+    /// Get the raw log entry (for serving replication requests).
+    pub fn entry(&self, cid: &Cid) -> Option<&Entry> {
+        self.log.get(cid)
+    }
+
+    /// All contributions in deterministic causal order. Malformed
+    /// payloads (never produced by this codebase) are skipped.
+    pub fn iter(&self) -> Vec<Contribution> {
+        self.log
+            .traverse()
+            .into_iter()
+            .filter_map(|(_, e)| crate::codec::from_bytes::<Contribution>(&e.payload).ok())
+            .collect()
+    }
+
+    /// Filtered view, e.g. by workload or platform (§III-D pre-filtering).
+    pub fn filter(&self, pred: impl Fn(&Contribution) -> bool) -> Vec<Contribution> {
+        self.iter().into_iter().filter(|c| pred(c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn contribution(rng: &mut Rng, workload: &str) -> Contribution {
+        let data = rng.bytes32().to_vec();
+        Contribution {
+            data_cid: Cid::of_raw(&data),
+            author: PeerId::from_rng(rng),
+            workload: workload.to_string(),
+            platform: "gcp-e2-standard-2".into(),
+            size_bytes: 9060,
+            created_at: 0,
+        }
+    }
+
+    #[test]
+    fn contribution_roundtrip() {
+        let mut rng = Rng::new(1);
+        let c = contribution(&mut rng, "spark-sort");
+        let b = crate::codec::to_bytes(&c);
+        assert_eq!(crate::codec::from_bytes::<Contribution>(&b).unwrap(), c);
+    }
+
+    #[test]
+    fn add_and_iterate_in_order() {
+        let mut rng = Rng::new(2);
+        let me = PeerId::from_rng(&mut rng);
+        let mut s = ContributionsStore::new();
+        let c1 = contribution(&mut rng, "spark-sort");
+        let c2 = contribution(&mut rng, "flink-wordcount");
+        s.add(me, &c1);
+        s.add(me, &c2);
+        let all = s.iter();
+        assert_eq!(all, vec![c1.clone(), c2]);
+        assert!(s.contains_data(&c1.data_cid));
+    }
+
+    #[test]
+    fn replication_converges() {
+        let mut rng = Rng::new(3);
+        let (a, b) = (PeerId::from_rng(&mut rng), PeerId::from_rng(&mut rng));
+        let mut sa = ContributionsStore::new();
+        let mut sb = ContributionsStore::new();
+        let ca = contribution(&mut rng, "spark-pagerank");
+        let cb = contribution(&mut rng, "spark-kmeans");
+        let (ea_cid, ea) = sa.add(a, &ca);
+        let (eb_cid, eb) = sb.add(b, &cb);
+        assert_eq!(sa.join_entry(eb_cid, eb), Join::Added);
+        assert_eq!(sb.join_entry(ea_cid, ea), Join::Added);
+        assert_eq!(sa.digest(), sb.digest());
+        assert_eq!(sa.iter(), sb.iter());
+        assert!(sa.contains_data(&cb.data_cid));
+    }
+
+    #[test]
+    fn filter_by_attributes() {
+        let mut rng = Rng::new(4);
+        let me = PeerId::from_rng(&mut rng);
+        let mut s = ContributionsStore::new();
+        for w in ["spark-sort", "spark-sort", "flink-wordcount"] {
+            let c = contribution(&mut rng, w);
+            s.add(me, &c);
+        }
+        assert_eq!(s.filter(|c| c.workload == "spark-sort").len(), 2);
+        assert_eq!(s.filter(|c| c.platform == "aws").len(), 0);
+    }
+}

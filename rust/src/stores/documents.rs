@@ -1,0 +1,239 @@
+//! Document store + the validations store built on it.
+//!
+//! OrbitDB's `DocumentStore` equivalent: keyed documents with put/get/
+//! delete/query. The paper instantiates one as the *validations store*:
+//! "each user maintains a local data structure in IPFS with validation
+//! results for particular CIDs, called validations store, which can be
+//! consulted if needed or used to share validation data with other peers
+//! upon request." It is local-only (never replicated wholesale); peers
+//! answer targeted queries from it.
+
+use crate::cid::Cid;
+use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use crate::net::PeerId;
+use std::collections::BTreeMap;
+
+/// Generic document store: string key → encoded document.
+#[derive(Clone, Debug)]
+pub struct DocumentStore<D> {
+    docs: BTreeMap<String, D>,
+}
+
+impl<D> Default for DocumentStore<D> {
+    fn default() -> Self {
+        DocumentStore { docs: BTreeMap::new() }
+    }
+}
+
+impl<D: Clone> DocumentStore<D> {
+    pub fn new() -> Self {
+        DocumentStore { docs: BTreeMap::new() }
+    }
+
+    pub fn put(&mut self, key: impl Into<String>, doc: D) {
+        self.docs.insert(key.into(), doc);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&D> {
+        self.docs.get(key)
+    }
+
+    pub fn delete(&mut self, key: &str) -> Option<D> {
+        self.docs.remove(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    pub fn query(&self, pred: impl Fn(&D) -> bool) -> Vec<(&str, &D)> {
+        self.docs
+            .iter()
+            .filter(|(_, d)| pred(d))
+            .map(|(k, d)| (k.as_str(), d))
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &D)> {
+        self.docs.iter().map(|(k, d)| (k.as_str(), d))
+    }
+}
+
+/// Outcome of validating one performance-data contribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Verdict {
+    Valid = 0,
+    Invalid = 1,
+    Inconclusive = 2,
+}
+
+impl Verdict {
+    fn from_u8(v: u8) -> Result<Verdict, DecodeError> {
+        match v {
+            0 => Ok(Verdict::Valid),
+            1 => Ok(Verdict::Invalid),
+            2 => Ok(Verdict::Inconclusive),
+            _ => Err(DecodeError("bad verdict")),
+        }
+    }
+}
+
+impl Encode for Verdict {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(*self as u8);
+    }
+}
+impl Decode for Verdict {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Verdict::from_u8(r.get_u8()?)
+    }
+}
+
+/// One validation result for a contribution CID.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValidationRecord {
+    pub data_cid: Cid,
+    pub verdict: Verdict,
+    /// Quality score in [0, 1] produced by the validation pipeline
+    /// (e.g. the k-NN plausibility score from the AOT model).
+    pub score: f64,
+    pub validator: PeerId,
+    pub validated_at: u64,
+    /// Wall/virtual time the validation computation took, ns.
+    pub cost_ns: u64,
+}
+
+impl Encode for ValidationRecord {
+    fn encode(&self, w: &mut Writer) {
+        self.data_cid.encode(w);
+        self.verdict.encode(w);
+        w.put_f64(self.score);
+        self.validator.encode(w);
+        w.put_varint(self.validated_at);
+        w.put_varint(self.cost_ns);
+    }
+}
+
+impl Decode for ValidationRecord {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(ValidationRecord {
+            data_cid: Cid::decode(r)?,
+            verdict: Verdict::decode(r)?,
+            score: r.get_f64()?,
+            validator: PeerId::decode(r)?,
+            validated_at: r.get_varint()?,
+            cost_ns: r.get_varint()?,
+        })
+    }
+}
+
+/// The validations store: local verdicts keyed by data CID.
+#[derive(Clone, Debug, Default)]
+pub struct ValidationsStore {
+    inner: DocumentStore<ValidationRecord>,
+}
+
+impl ValidationsStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, rec: ValidationRecord) {
+        self.inner.put(rec.data_cid.to_string_full(), rec);
+    }
+
+    pub fn get(&self, cid: &Cid) -> Option<&ValidationRecord> {
+        self.inner.get(&cid.to_string_full())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Verdict for a CID if we have one (what we answer remote
+    /// validation queries with).
+    pub fn verdict(&self, cid: &Cid) -> Option<Verdict> {
+        self.get(cid).map(|r| r.verdict)
+    }
+
+    pub fn invalid_cids(&self) -> Vec<Cid> {
+        self.inner
+            .query(|r| r.verdict == Verdict::Invalid)
+            .into_iter()
+            .map(|(_, r)| r.data_cid)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn document_store_crud() {
+        let mut s: DocumentStore<u64> = DocumentStore::new();
+        s.put("a", 1);
+        s.put("b", 2);
+        s.put("a", 3); // overwrite
+        assert_eq!(s.get("a"), Some(&3));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.delete("a"), Some(3));
+        assert_eq!(s.get("a"), None);
+        s.put("c", 10);
+        assert_eq!(s.query(|v| *v >= 2).len(), 2);
+    }
+
+    #[test]
+    fn validation_record_roundtrip() {
+        let mut rng = Rng::new(1);
+        let rec = ValidationRecord {
+            data_cid: Cid::of_raw(b"data"),
+            verdict: Verdict::Inconclusive,
+            score: 0.75,
+            validator: PeerId::from_rng(&mut rng),
+            validated_at: 123,
+            cost_ns: 456,
+        };
+        let b = crate::codec::to_bytes(&rec);
+        assert_eq!(crate::codec::from_bytes::<ValidationRecord>(&b).unwrap(), rec);
+    }
+
+    #[test]
+    fn validations_store_by_cid() {
+        let mut rng = Rng::new(2);
+        let me = PeerId::from_rng(&mut rng);
+        let mut s = ValidationsStore::new();
+        let good = Cid::of_raw(b"good");
+        let bad = Cid::of_raw(b"bad");
+        s.put(ValidationRecord {
+            data_cid: good,
+            verdict: Verdict::Valid,
+            score: 0.9,
+            validator: me,
+            validated_at: 1,
+            cost_ns: 10,
+        });
+        s.put(ValidationRecord {
+            data_cid: bad,
+            verdict: Verdict::Invalid,
+            score: 0.1,
+            validator: me,
+            validated_at: 2,
+            cost_ns: 10,
+        });
+        assert_eq!(s.verdict(&good), Some(Verdict::Valid));
+        assert_eq!(s.verdict(&bad), Some(Verdict::Invalid));
+        assert_eq!(s.verdict(&Cid::of_raw(b"unknown")), None);
+        assert_eq!(s.invalid_cids(), vec![bad]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal key-value store for node-local state (private-data indexes,
+//! workflow checkpoints). Not replicated.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct KvStore {
+    map: BTreeMap<String, Vec<u8>>,
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, key: impl Into<String>, value: Vec<u8>) {
+        self.map.insert(key.into(), value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&[u8]> {
+        self.map.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn delete(&mut self, key: &str) -> bool {
+        self.map.remove(key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Keys with a given prefix (range scan).
+    pub fn scan_prefix(&self, prefix: &str) -> Vec<(&str, &[u8])> {
+        self.map
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), v.as_slice()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crud_and_scan() {
+        let mut kv = KvStore::new();
+        kv.put("pin/a", vec![1]);
+        kv.put("pin/b", vec![2]);
+        kv.put("cfg/x", vec![3]);
+        assert_eq!(kv.get("pin/a"), Some(&[1u8][..]));
+        assert_eq!(kv.scan_prefix("pin/").len(), 2);
+        assert!(kv.delete("pin/a"));
+        assert!(!kv.delete("pin/a"));
+        assert_eq!(kv.scan_prefix("pin/").len(), 1);
+        assert_eq!(kv.len(), 2);
+    }
+}

@@ -1,0 +1,32 @@
+//! OrbitDB-like data stores backed by the IPFS substrate.
+//!
+//! * [`ContributionsStore`] — the paper's *contributions store*: an
+//!   `EventLogStore` (append-only, fully replicated among peers) whose
+//!   payloads are [`Contribution`] records referencing performance-data
+//!   files by CID. "References are shared via OrbitDB among peers in the
+//!   contributions store, fully replicated, granting access to training
+//!   data without individual storage."
+//! * [`ValidationsStore`] — the *validations store*: a `DocumentStore`
+//!   holding per-CID validation verdicts, local-only (non-replicated) but
+//!   queryable by other peers on request.
+//! * [`KvStore`] — a small key-value store for node state (private data
+//!   bookkeeping, workflow checkpoints).
+
+pub mod contributions;
+pub mod documents;
+pub mod kv;
+
+pub use contributions::{Contribution, ContributionsStore};
+pub use documents::{DocumentStore, ValidationRecord, ValidationsStore, Verdict};
+pub use kv::KvStore;
+
+/// Address of a replicated store: its name determines the pubsub topic
+/// and is the rendezvous by which peers find each other's replicas.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct StoreAddress(pub String);
+
+impl StoreAddress {
+    pub fn topic(&self) -> crate::pubsub::Topic {
+        crate::pubsub::Topic::named(&self.0)
+    }
+}

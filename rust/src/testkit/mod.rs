@@ -1,0 +1,77 @@
+//! Property-testing mini-framework (no `proptest` in the offline crate
+//! set).
+//!
+//! A property is a function from a generated case to `Result<(), String>`.
+//! [`check`] runs many cases from a seeded generator; on failure it
+//! reports the case's seed so the exact input can be replayed with
+//! `PEERSDB_PROP_SEED=<seed>`. No shrinking — cases are kept small by
+//! construction instead.
+
+use crate::util::Rng;
+
+/// Number of cases per property (override with `PEERSDB_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("PEERSDB_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` against `cases` generated inputs. Panics with the failing
+/// seed on the first counterexample.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let base: u64 = std::env::var("PEERSDB_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_BA5E);
+    let cases = default_cases();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed (case {i}, PEERSDB_PROP_SEED={seed}):\n  {msg}\n  case: {case:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property receives its own RNG fork (for
+/// randomized execution inside the property).
+pub fn check_with_rng<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T, &mut Rng) -> Result<(), String>,
+) {
+    check(name, |rng| (gen(rng), rng.next_u64()), |(case, prop_seed)| {
+        let mut prng = Rng::new(*prop_seed);
+        prop(case, &mut prng)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", |r| (r.gen_range(100), r.gen_range(100)), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", |r| r.gen_range(10), |_| Err("nope".into()));
+    }
+}

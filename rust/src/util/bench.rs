@@ -1,0 +1,140 @@
+//! Bench-harness toolkit: environment reporting (the Table I/II
+//! stand-ins), aligned table printing, and wall-clock timing.
+//!
+//! criterion is not in the offline crate set, so the experiment benches
+//! are `harness = false` binaries built on this module.
+
+use std::time::Instant;
+
+/// Print the testbed specification — our analogue of the paper's
+/// Table I / Table II hardware & software tables.
+pub fn print_environment(title: &str) {
+    println!("== {title} ==");
+    let cpu = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .map(|l| l.split(':').nth(1).unwrap_or("?").trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown".into());
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(0);
+    let mem_gb = std::fs::read_to_string("/proc/meminfo")
+        .ok()
+        .and_then(|s| {
+            s.lines().find(|l| l.starts_with("MemTotal")).and_then(|l| {
+                l.split_whitespace()
+                    .nth(1)
+                    .and_then(|kb| kb.parse::<f64>().ok())
+                    .map(|kb| kb / 1048576.0)
+            })
+        })
+        .unwrap_or(f64::NAN);
+    println!("  CPU      : {cpu} ({cores} vcores)");
+    println!("  Memory   : {mem_gb:.0} GB RAM");
+    println!("  OS       : {}", std::env::consts::OS);
+    println!("  Software : rustc 1.95 / peersdb {} / xla 0.1.6 (PJRT CPU)", env!("CARGO_PKG_VERSION"));
+    println!("  Network  : simulated (see DESIGN.md §Substitutions)");
+    println!();
+}
+
+/// Scale factor for long benches: `PEERSDB_BENCH_SCALE` (default 1.0).
+pub fn scale() -> f64 {
+    std::env::var("PEERSDB_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64) * scale()).round().max(1.0) as usize
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", cols.join("  "));
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("  {}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+        println!();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat-measure a closure for micro-benchmarks; returns ns/iter stats.
+pub fn bench_ns(label: &str, mut iters: u64, mut f: impl FnMut()) -> f64 {
+    if iters == 0 {
+        iters = 1;
+    }
+    // Warmup.
+    for _ in 0..iters.min(100) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("  {label:<44} {:>12.0} ns/iter  ({:.2} M/s)", ns, 1e3 / ns);
+    ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["region", "mean", "max"]);
+        t.row(&["asia-east2".into(), "0.42".into(), "3.1".into()]);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn timing_positive() {
+        let (_, dt) = timed(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(dt >= 0.002);
+    }
+}

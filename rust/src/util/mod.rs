@@ -1,0 +1,16 @@
+//! Small self-contained utilities: PRNG, hex, time, stats, logging.
+//!
+//! The offline crate set has no `rand`, `hex`, or `log`-backend crates, so
+//! these are first-class modules. Everything here is deterministic and
+//! allocation-light; the PRNG in particular is the seed root for all
+//! simulation experiments.
+
+pub mod bench;
+pub mod hex;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use rng::Rng;
+pub use time::{Duration, Nanos};

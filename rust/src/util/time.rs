@@ -1,0 +1,141 @@
+//! Virtual time primitives.
+//!
+//! All protocol cores are written against [`Nanos`], a monotonic virtual
+//! timestamp in nanoseconds. The DES driver advances it discretely; the
+//! TCP driver maps it to `std::time::Instant`.
+
+/// A point in virtual time, in nanoseconds since simulation start.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Nanos(pub u64);
+
+/// A span of virtual time, in nanoseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Duration(pub u64);
+
+impl Nanos {
+    pub const ZERO: Nanos = Nanos(0);
+
+    #[inline]
+    pub fn saturating_sub(self, other: Nanos) -> Duration {
+        Duration(self.0.saturating_sub(other.0))
+    }
+
+    #[inline]
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    #[inline]
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+}
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+
+    #[inline]
+    pub fn from_secs(s: u64) -> Duration {
+        Duration(s * 1_000_000_000)
+    }
+
+    #[inline]
+    pub fn from_millis(ms: u64) -> Duration {
+        Duration(ms * 1_000_000)
+    }
+
+    #[inline]
+    pub fn from_micros(us: u64) -> Duration {
+        Duration(us * 1_000)
+    }
+
+    #[inline]
+    pub fn from_secs_f64(s: f64) -> Duration {
+        Duration((s.max(0.0) * 1e9) as u64)
+    }
+
+    #[inline]
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    #[inline]
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+}
+
+impl std::ops::Add<Duration> for Nanos {
+    type Output = Nanos;
+    #[inline]
+    fn add(self, d: Duration) -> Nanos {
+        Nanos(self.0 + d.0)
+    }
+}
+
+impl std::ops::Add<Duration> for Duration {
+    type Output = Duration;
+    #[inline]
+    fn add(self, d: Duration) -> Duration {
+        Duration(self.0 + d.0)
+    }
+}
+
+impl std::ops::Sub<Nanos> for Nanos {
+    type Output = Duration;
+    #[inline]
+    fn sub(self, other: Nanos) -> Duration {
+        Duration(self.0 - other.0)
+    }
+}
+
+impl std::ops::Mul<u64> for Duration {
+    type Output = Duration;
+    #[inline]
+    fn mul(self, k: u64) -> Duration {
+        Duration(self.0 * k)
+    }
+}
+
+impl std::fmt::Display for Nanos {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+impl std::fmt::Display for Duration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0 >= 1_000_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if self.0 >= 1_000_000 {
+            write!(f, "{:.2}ms", self.as_millis_f64())
+        } else {
+            write!(f, "{}us", self.0 / 1000)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = Nanos(1_000) + Duration::from_micros(2);
+        assert_eq!(t, Nanos(3_000));
+        assert_eq!(t - Nanos(1_000), Duration(2_000));
+        assert_eq!(Duration::from_millis(1) * 3, Duration(3_000_000));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(format!("{}", Duration::from_millis(1500)), "1.500s");
+        assert_eq!(format!("{}", Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(format!("{}", Duration(1500)), "1us");
+    }
+
+    #[test]
+    fn saturating() {
+        assert_eq!(Nanos(5).saturating_sub(Nanos(10)), Duration::ZERO);
+    }
+}

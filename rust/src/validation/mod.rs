@@ -1,0 +1,289 @@
+//! Collaborative performance-data validation (§III-C, §IV-B).
+//!
+//! Validation happens on two paths:
+//!
+//! 1. **Opportunistic network consultation** — a peer asks others for
+//!    their stored verdicts on a CID and consolidates them by quorum
+//!    voting; "in case of an inconclusive vote or undesired outcome, the
+//!    performance data of interest is validated independently, otherwise
+//!    the decision of the network is used."
+//! 2. **Local validation** — an *asynchronous background task* (the
+//!    paper's key simulation learning) whose running time follows a
+//!    configurable [`CostModel`] (constant, linear, polynomial,
+//!    exponential, logarithmic — the scaling behaviours studied in
+//!    §IV-B), optionally batched to amortize per-item overhead.
+//!
+//! The verdict itself comes from a pluggable [`Validator`]; production
+//! deployments plug the AOT-compiled k-NN scorer from
+//! [`crate::modeling`], simulations use deterministic stand-ins (the
+//! paper: "any candidate for a performance data validation strategy must
+//! guarantee to produce a deterministic outcome").
+
+pub mod quorum;
+
+use crate::cid::Cid;
+use crate::stores::documents::Verdict;
+use crate::util::time::{Duration, Nanos};
+
+pub use quorum::{QuorumConfig, VoteOutcome, VoteState};
+
+/// Scaling behaviour of a validation procedure as a function of the data
+/// amount (in KiB). These mirror the function families the paper sweeps
+/// in its Testground study.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CostModel {
+    /// e.g. schema check / identity function (the prototype experiments).
+    Constant { ns: u64 },
+    /// e.g. per-record range checks.
+    Linear { base_ns: u64, ns_per_kb: f64 },
+    /// e.g. pairwise similarity against the batch itself, O(n^p).
+    Polynomial { base_ns: u64, ns_per_kb: f64, power: f64 },
+    /// e.g. combinatorial feature-subset checks.
+    Exponential { base_ns: u64, ns_per_kb: f64, growth_per_kb: f64, cap_ns: u64 },
+    /// e.g. index-backed novelty lookups.
+    Logarithmic { base_ns: u64, ns_per_log_kb: f64 },
+}
+
+impl CostModel {
+    /// Virtual compute time to validate `kb` KiB of data.
+    pub fn cost(&self, kb: f64) -> Duration {
+        let kb = kb.max(0.0);
+        let ns = match self {
+            CostModel::Constant { ns } => *ns as f64,
+            CostModel::Linear { base_ns, ns_per_kb } => *base_ns as f64 + ns_per_kb * kb,
+            CostModel::Polynomial { base_ns, ns_per_kb, power } => {
+                *base_ns as f64 + ns_per_kb * kb.powf(*power)
+            }
+            CostModel::Exponential { base_ns, ns_per_kb, growth_per_kb, cap_ns } => {
+                (*base_ns as f64 + ns_per_kb * (growth_per_kb * kb).exp()).min(*cap_ns as f64)
+            }
+            CostModel::Logarithmic { base_ns, ns_per_log_kb } => {
+                *base_ns as f64 + ns_per_log_kb * (1.0 + kb).ln()
+            }
+        };
+        Duration(ns.max(0.0) as u64)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostModel::Constant { .. } => "constant",
+            CostModel::Linear { .. } => "linear",
+            CostModel::Polynomial { .. } => "polynomial",
+            CostModel::Exponential { .. } => "exponential",
+            CostModel::Logarithmic { .. } => "logarithmic",
+        }
+    }
+}
+
+/// Produces verdicts for contribution payloads. Must be deterministic.
+pub trait Validator: Send {
+    fn validate(&mut self, data: &[u8]) -> (Verdict, f64);
+}
+
+/// Always-valid validator with score 1.0 — the paper's prototype uses
+/// "a validation model … with a fairly constant response time (identity
+/// function)".
+pub struct IdentityValidator;
+
+impl Validator for IdentityValidator {
+    fn validate(&mut self, _data: &[u8]) -> (Verdict, f64) {
+        (Verdict::Valid, 1.0)
+    }
+}
+
+/// Structural validator for the gzip+json contribution files produced by
+/// [`crate::modeling::datagen`]: decompresses, parses rows, checks value
+/// sanity (no NaN/negatives, plausible ranges). Deterministic.
+pub struct StatsValidator {
+    /// Runtimes above this (seconds) are considered implausible.
+    pub max_runtime_s: f64,
+}
+
+impl Default for StatsValidator {
+    fn default() -> Self {
+        StatsValidator { max_runtime_s: 1e6 }
+    }
+}
+
+impl Validator for StatsValidator {
+    fn validate(&mut self, data: &[u8]) -> (Verdict, f64) {
+        let Some(rows) = crate::modeling::datagen::parse_contribution(data) else {
+            return (Verdict::Invalid, 0.0);
+        };
+        if rows.is_empty() {
+            return (Verdict::Inconclusive, 0.5);
+        }
+        let mut ok = 0usize;
+        for r in &rows {
+            let sane = r.runtime_s.is_finite()
+                && r.runtime_s > 0.0
+                && r.runtime_s < self.max_runtime_s
+                && r.nodes >= 1
+                && r.dataset_gb > 0.0;
+            if sane {
+                ok += 1;
+            }
+        }
+        let frac = ok as f64 / rows.len() as f64;
+        let verdict = if frac >= 0.99 {
+            Verdict::Valid
+        } else if frac >= 0.8 {
+            Verdict::Inconclusive
+        } else {
+            Verdict::Invalid
+        };
+        (verdict, frac)
+    }
+}
+
+/// One queued local-validation work item.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub data_cid: Cid,
+    pub size_bytes: u64,
+}
+
+/// Batching queue for local validation (§IV-B: "for certain validation
+/// procedures, it might be worth considering batched performance data
+/// validation in order to accelerate the process").
+///
+/// Tasks accumulate until `batch_size` is reached (or `flush`), then one
+/// background "computation" covers the whole batch; its duration is the
+/// cost model applied to the batch's total size.
+pub struct BatchQueue {
+    pub batch_size: usize,
+    pending: Vec<Task>,
+    in_flight: std::collections::HashMap<u64, (Vec<Task>, Nanos)>,
+    next_batch_id: u64,
+}
+
+impl BatchQueue {
+    pub fn new(batch_size: usize) -> Self {
+        BatchQueue {
+            batch_size: batch_size.max(1),
+            pending: Vec::new(),
+            in_flight: std::collections::HashMap::new(),
+            next_batch_id: 1,
+        }
+    }
+
+    pub fn enqueue(&mut self, task: Task) {
+        self.pending.push(task);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// If a batch is ready (or `force`), take it: returns
+    /// `(batch_id, completion_delay)` to arm a timer with.
+    ///
+    /// Batches execute one at a time (a single background worker — the
+    /// validation task is CPU-bound): while one is in flight, nothing new
+    /// starts.
+    pub fn maybe_start(
+        &mut self,
+        now: Nanos,
+        cost: &CostModel,
+        force: bool,
+    ) -> Option<(u64, Duration)> {
+        if !self.in_flight.is_empty() {
+            return None;
+        }
+        if self.pending.is_empty() || (!force && self.pending.len() < self.batch_size) {
+            return None;
+        }
+        let take = self.pending.len().min(self.batch_size);
+        let batch: Vec<Task> = self.pending.drain(..take).collect();
+        let total_kb: f64 = batch.iter().map(|t| t.size_bytes as f64 / 1024.0).sum();
+        let delay = cost.cost(total_kb);
+        let id = self.next_batch_id;
+        self.next_batch_id += 1;
+        self.in_flight.insert(id, (batch, now));
+        Some((id, delay))
+    }
+
+    /// A batch timer fired: hand back its tasks for verdict computation.
+    pub fn complete(&mut self, batch_id: u64) -> Option<(Vec<Task>, Nanos)> {
+        self.in_flight.remove(&batch_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_orderings() {
+        let c = CostModel::Constant { ns: 1000 };
+        let lin = CostModel::Linear { base_ns: 0, ns_per_kb: 100.0 };
+        let pol = CostModel::Polynomial { base_ns: 0, ns_per_kb: 100.0, power: 2.0 };
+        let log = CostModel::Logarithmic { base_ns: 0, ns_per_log_kb: 100.0 };
+        // At 1 KB everything is small; at 1000 KB the order is
+        // log < const? (const fixed) — check monotone growth relations.
+        assert_eq!(c.cost(1.0), c.cost(1000.0));
+        assert!(lin.cost(1000.0) > lin.cost(10.0));
+        assert!(pol.cost(1000.0).0 > lin.cost(1000.0).0);
+        assert!(log.cost(1000.0).0 < lin.cost(1000.0).0);
+    }
+
+    #[test]
+    fn exponential_capped() {
+        let e = CostModel::Exponential {
+            base_ns: 0,
+            ns_per_kb: 1.0,
+            growth_per_kb: 1.0,
+            cap_ns: 1_000_000,
+        };
+        assert_eq!(e.cost(1e6), Duration(1_000_000));
+        assert!(e.cost(5.0).0 > e.cost(1.0).0);
+    }
+
+    #[test]
+    fn identity_validator_constant() {
+        let mut v = IdentityValidator;
+        assert_eq!(v.validate(b"anything"), (Verdict::Valid, 1.0));
+        assert_eq!(v.validate(b""), (Verdict::Valid, 1.0));
+    }
+
+    #[test]
+    fn batch_queue_waits_for_batch() {
+        let mut q = BatchQueue::new(3);
+        let cost = CostModel::Linear { base_ns: 1000, ns_per_kb: 1000.0 };
+        q.enqueue(Task { data_cid: Cid::of_raw(b"a"), size_bytes: 1024 });
+        q.enqueue(Task { data_cid: Cid::of_raw(b"b"), size_bytes: 1024 });
+        assert!(q.maybe_start(Nanos(0), &cost, false).is_none());
+        q.enqueue(Task { data_cid: Cid::of_raw(b"c"), size_bytes: 1024 });
+        let (id, delay) = q.maybe_start(Nanos(0), &cost, false).unwrap();
+        // 3 KiB → 1000 + 3000 ns.
+        assert_eq!(delay, Duration(4000));
+        let (tasks, started) = q.complete(id).unwrap();
+        assert_eq!(tasks.len(), 3);
+        assert_eq!(started, Nanos(0));
+        assert!(q.complete(id).is_none());
+    }
+
+    #[test]
+    fn batch_queue_force_flush() {
+        let mut q = BatchQueue::new(100);
+        let cost = CostModel::Constant { ns: 5 };
+        q.enqueue(Task { data_cid: Cid::of_raw(b"a"), size_bytes: 10 });
+        let got = q.maybe_start(Nanos(1), &cost, true);
+        assert!(got.is_some());
+        assert_eq!(q.pending_len(), 0);
+    }
+
+    #[test]
+    fn batching_amortizes_per_item_base_cost() {
+        // With a large base cost, one batch of 10 is far cheaper than 10
+        // singleton validations — the §IV-B batching observation.
+        let cost = CostModel::Linear { base_ns: 1_000_000, ns_per_kb: 10.0 };
+        let singleton_total = 10 * cost.cost(9.0).0;
+        let batched = cost.cost(90.0).0;
+        assert!(batched < singleton_total / 5);
+    }
+}

@@ -1,0 +1,197 @@
+//! Quorum voting over remote validation verdicts.
+//!
+//! "A user requests the individual validation results of other peers in
+//! the network and consolidates them — in case of an inconclusive vote or
+//! undesired outcome, the performance data of interest is validated
+//! independently, otherwise the decision of the network is used."
+//!
+//! "Another tuning parameter is the number of responses from peers deemed
+//! sufficient in order to decide on a vote" — that is
+//! [`QuorumConfig::responses_needed`], swept in `benches/sim_validation`.
+
+use crate::net::PeerId;
+use crate::stores::documents::Verdict;
+use crate::util::time::{Duration, Nanos};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct QuorumConfig {
+    /// How many peers to query.
+    pub fanout: usize,
+    /// Verdict-carrying responses required before tallying.
+    pub responses_needed: usize,
+    /// Fraction of responses that must agree for the network decision to
+    /// be adopted.
+    pub agreement: f64,
+    /// Give up waiting after this long and fall back to local validation.
+    pub timeout: Duration,
+}
+
+impl Default for QuorumConfig {
+    fn default() -> Self {
+        QuorumConfig {
+            fanout: 5,
+            responses_needed: 3,
+            agreement: 2.0 / 3.0,
+            timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Result of a vote.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VoteOutcome {
+    /// The network agrees; adopt this verdict (mean score attached).
+    Decided { verdict: Verdict, mean_score: f64, responses: usize },
+    /// Not enough agreement / information — validate locally.
+    Inconclusive { responses: usize },
+}
+
+/// State of one in-flight vote.
+#[derive(Clone, Debug)]
+pub struct VoteState {
+    pub started_at: Nanos,
+    asked: Vec<PeerId>,
+    answers: HashMap<PeerId, Option<(Verdict, f64)>>,
+}
+
+impl VoteState {
+    pub fn new(started_at: Nanos, asked: Vec<PeerId>) -> Self {
+        VoteState { started_at, asked, answers: HashMap::new() }
+    }
+
+    pub fn asked(&self) -> &[PeerId] {
+        &self.asked
+    }
+
+    /// Record an answer; ignores peers that were never asked.
+    pub fn record(&mut self, from: PeerId, verdict: Option<(Verdict, f64)>) {
+        if self.asked.contains(&from) {
+            self.answers.insert(from, verdict);
+        }
+    }
+
+    pub fn responses(&self) -> usize {
+        self.answers.len()
+    }
+
+    fn verdicts(&self) -> Vec<(Verdict, f64)> {
+        self.answers.values().filter_map(|v| *v).collect()
+    }
+
+    /// Tally if possible. `force` tallies with whatever arrived (timeout
+    /// path); otherwise requires `responses_needed` verdicts first.
+    pub fn tally(&self, cfg: &QuorumConfig, force: bool) -> Option<VoteOutcome> {
+        let verdicts = self.verdicts();
+        if !force {
+            if verdicts.len() < cfg.responses_needed {
+                return None;
+            }
+        } else if verdicts.is_empty() {
+            return Some(VoteOutcome::Inconclusive { responses: self.responses() });
+        }
+        // Majority verdict.
+        let mut counts: HashMap<u8, usize> = HashMap::new();
+        for (v, _) in &verdicts {
+            *counts.entry(*v as u8).or_insert(0) += 1;
+        }
+        let (&best, &n) = counts.iter().max_by_key(|(_, n)| **n).unwrap();
+        let frac = n as f64 / verdicts.len() as f64;
+        if frac >= cfg.agreement {
+            let verdict = match best {
+                0 => Verdict::Valid,
+                1 => Verdict::Invalid,
+                _ => Verdict::Inconclusive,
+            };
+            if verdict == Verdict::Inconclusive {
+                return Some(VoteOutcome::Inconclusive { responses: self.responses() });
+            }
+            let mean_score = verdicts
+                .iter()
+                .filter(|(v, _)| *v == verdict)
+                .map(|(_, s)| *s)
+                .sum::<f64>()
+                / n as f64;
+            Some(VoteOutcome::Decided { verdict, mean_score, responses: self.responses() })
+        } else {
+            Some(VoteOutcome::Inconclusive { responses: self.responses() })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn peers(n: usize) -> Vec<PeerId> {
+        let mut rng = Rng::new(9);
+        (0..n).map(|_| PeerId::from_rng(&mut rng)).collect()
+    }
+
+    #[test]
+    fn waits_for_quorum_then_decides() {
+        let cfg = QuorumConfig::default();
+        let ps = peers(5);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        v.record(ps[0], Some((Verdict::Valid, 0.9)));
+        assert!(v.tally(&cfg, false).is_none());
+        v.record(ps[1], Some((Verdict::Valid, 0.8)));
+        v.record(ps[2], Some((Verdict::Valid, 1.0)));
+        let out = v.tally(&cfg, false).unwrap();
+        let VoteOutcome::Decided { verdict, mean_score, responses } = out else { panic!() };
+        assert_eq!(verdict, Verdict::Valid);
+        assert!((mean_score - 0.9).abs() < 1e-9);
+        assert_eq!(responses, 3);
+    }
+
+    #[test]
+    fn split_vote_is_inconclusive() {
+        let cfg = QuorumConfig { agreement: 0.75, ..Default::default() };
+        let ps = peers(4);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        v.record(ps[0], Some((Verdict::Valid, 1.0)));
+        v.record(ps[1], Some((Verdict::Invalid, 0.0)));
+        v.record(ps[2], Some((Verdict::Valid, 1.0)));
+        let out = v.tally(&cfg, false).unwrap();
+        assert!(matches!(out, VoteOutcome::Inconclusive { .. }));
+    }
+
+    #[test]
+    fn empty_answers_dont_count_toward_quorum() {
+        let cfg = QuorumConfig::default();
+        let ps = peers(5);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        v.record(ps[0], None);
+        v.record(ps[1], None);
+        v.record(ps[2], None);
+        assert!(v.tally(&cfg, false).is_none(), "no verdicts yet");
+        // Timeout path: force-tally.
+        let out = v.tally(&cfg, true).unwrap();
+        assert!(matches!(out, VoteOutcome::Inconclusive { responses: 3 }));
+    }
+
+    #[test]
+    fn unasked_peer_ignored() {
+        let cfg = QuorumConfig { responses_needed: 1, ..Default::default() };
+        let ps = peers(3);
+        let stranger = peers(4)[3];
+        let mut v = VoteState::new(Nanos(0), ps);
+        v.record(stranger, Some((Verdict::Invalid, 0.0)));
+        assert_eq!(v.responses(), 0);
+        assert!(v.tally(&cfg, false).is_none());
+    }
+
+    #[test]
+    fn majority_invalid_detected() {
+        let cfg = QuorumConfig { responses_needed: 3, agreement: 0.6, ..Default::default() };
+        let ps = peers(5);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        v.record(ps[0], Some((Verdict::Invalid, 0.1)));
+        v.record(ps[1], Some((Verdict::Invalid, 0.2)));
+        v.record(ps[2], Some((Verdict::Valid, 0.9)));
+        let out = v.tally(&cfg, false).unwrap();
+        let VoteOutcome::Decided { verdict, .. } = out else { panic!() };
+        assert_eq!(verdict, Verdict::Invalid);
+    }
+}

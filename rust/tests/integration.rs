@@ -1,0 +1,251 @@
+//! End-to-end integration tests: full PeersDB nodes over the DES.
+//!
+//! These exercise the complete §III workflows — join/bootstrap,
+//! contribution, replication, collaborative validation, access control —
+//! across multi-region simulated clusters.
+
+use peersdb::blockstore::chunker::CHUNK_SIZE;
+use peersdb::net::Outbox;
+use peersdb::peersdb::{Node, NodeConfig, NodeEvent, ValidationSource};
+use peersdb::sim::harness::{assert_converged, build_cluster, contribute, drain_events, PeerSpec};
+use peersdb::sim::model::NetModel;
+use peersdb::sim::regions::{Region, ALL};
+use peersdb::stores::documents::Verdict;
+use peersdb::util::time::{Duration, Nanos};
+use peersdb::util::Rng;
+use peersdb::validation::{CostModel, StatsValidator};
+
+fn default_specs(n: usize, cfg_fn: impl Fn(usize) -> NodeConfig) -> Vec<PeerSpec> {
+    (0..n)
+        .map(|i| PeerSpec {
+            region: if i == 0 { Region::AsiaEast2 } else { ALL[i % ALL.len()] },
+            start_at: Nanos(Duration::from_millis(200).0 * i as u64),
+            cfg: cfg_fn(i),
+            ..Default::default()
+        })
+        .collect()
+}
+
+#[test]
+fn five_peer_cluster_bootstraps() {
+    let specs = default_specs(5, |_| NodeConfig::default());
+    let mut cluster = build_cluster(1, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(30));
+    let events = drain_events(&mut cluster);
+    let boots: Vec<usize> = events
+        .iter()
+        .filter(|(_, e)| matches!(e, NodeEvent::BootstrapDone { .. }))
+        .map(|(i, _)| *i)
+        .collect();
+    // All four non-root peers complete bootstrap.
+    assert_eq!(boots.len(), 4, "bootstrap events: {boots:?}");
+    for i in 0..5 {
+        assert!(cluster.node(i).is_bootstrapped(), "node {i}");
+    }
+}
+
+#[test]
+fn contribution_replicates_to_all_peers() {
+    let specs = default_specs(6, |_| NodeConfig::default());
+    let mut cluster = build_cluster(2, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+
+    let mut rng = Rng::new(99);
+    let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, 0, 120);
+    let root = contribute(&mut cluster, 2, &data, "spark-sort");
+    cluster.run_for(Duration::from_secs(30));
+
+    assert_converged(&mut cluster);
+    // Every peer replicated the data file itself (auto-pin) and can read it.
+    for i in 0..cluster.len() {
+        let got = cluster.node(i).get_file(&root);
+        assert_eq!(got.as_deref(), Some(&data[..]), "node {i} missing data");
+    }
+    let events = drain_events(&mut cluster);
+    let repl = events
+        .iter()
+        .filter(|(_, e)| matches!(e, NodeEvent::ContributionReplicated { .. }))
+        .count();
+    assert_eq!(repl, 5, "5 remote peers replicate");
+}
+
+#[test]
+fn multi_writer_concurrent_contributions_converge() {
+    let specs = default_specs(8, |_| NodeConfig::default());
+    let mut cluster = build_cluster(3, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+    let mut rng = Rng::new(5);
+    // Several peers contribute at the same instant (concurrent heads).
+    for idx in [1usize, 3, 5, 7, 2] {
+        let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, idx as u32 % 6, 60);
+        contribute(&mut cluster, idx, &data, "spark-grep");
+    }
+    cluster.run_for(Duration::from_secs(40));
+    assert_converged(&mut cluster);
+    assert_eq!(cluster.node(0).contributions.len(), 5);
+}
+
+#[test]
+fn late_joiner_syncs_full_history() {
+    let mut specs = default_specs(4, |_| NodeConfig::default());
+    // A fifth peer joins a minute later.
+    specs.push(PeerSpec {
+        region: Region::MeWest1,
+        start_at: Nanos(Duration::from_secs(60).0),
+        cfg: NodeConfig::default(),
+        ..Default::default()
+    });
+    let mut cluster = build_cluster(4, NetModel::default(), specs);
+    // Contribute before the late joiner starts.
+    cluster.run_for(Duration::from_secs(8));
+    let mut rng = Rng::new(7);
+    for i in 0..3 {
+        let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, i, 40);
+        contribute(&mut cluster, i as usize, &data, "flink-wordcount");
+        cluster.run_for(Duration::from_secs(2));
+    }
+    cluster.run_for(Duration::from_secs(120));
+    assert_converged(&mut cluster);
+    let late = cluster.node(4);
+    assert_eq!(late.contributions.len(), 3, "late joiner synced history");
+    assert!(late.is_bootstrapped());
+}
+
+#[test]
+fn wrong_passphrase_denied() {
+    let mut specs = default_specs(2, |_| NodeConfig::default());
+    specs[1].cfg.passphrase = "wrong-passphrase".into();
+    let mut cluster = build_cluster(5, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(20));
+    assert!(!cluster.node(1).is_bootstrapped());
+    // The joiner retries its handshake; every attempt is rejected.
+    assert!(cluster.node(0).metrics.counter("joins_rejected") >= 1);
+    assert_eq!(cluster.node(0).metrics.counter("joins_accepted"), 0);
+}
+
+#[test]
+fn private_data_never_served() {
+    let specs = default_specs(3, |_| NodeConfig::default());
+    let mut cluster = build_cluster(6, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+    // Node 1 stores a private file.
+    let secret = b"secret local monitoring data".to_vec();
+    let cid = cluster.with_node(1, {
+        let secret = secret.clone();
+        move |n: &mut Node, _now, _out: &mut Outbox<_>| n.put_private(&secret)
+    });
+    // Node 2 learns the CID out of band and tries to fetch it.
+    let owner = cluster.peer_id(1);
+    cluster.with_node(2, move |n: &mut Node, now, out: &mut Outbox<_>| {
+        n.fetch_cid(now, cid, vec![owner], out);
+    });
+    cluster.run_for(Duration::from_secs(30));
+    // The owner denied it; the requester never obtained the data.
+    assert!(cluster.node(2).get_file(&cid).is_none());
+    assert_eq!(cluster.node(1).metrics.counter("private_denied"), 1);
+    let events = drain_events(&mut cluster);
+    assert!(events
+        .iter()
+        .any(|(i, e)| *i == 1 && matches!(e, NodeEvent::PrivateDenied { .. })));
+}
+
+#[test]
+fn collaborative_validation_quorum_adopts_network_verdict() {
+    // Root + 6 peers; validation on; validators are StatsValidator.
+    let n = 7;
+    let mk_cfg = || NodeConfig {
+        auto_validate: true,
+        cost_model: CostModel::Linear { base_ns: 2_000_000, ns_per_kb: 50_000.0 },
+        ..NodeConfig::default()
+    };
+    let mut specs: Vec<PeerSpec> = (0..n)
+        .map(|i| PeerSpec {
+            region: ALL[i % ALL.len()],
+            start_at: Nanos(Duration::from_millis(100).0 * i as u64),
+            cfg: mk_cfg(),
+            validator: Some(Box::new(StatsValidator::default())),
+            ..Default::default()
+        })
+        .collect();
+    // A late joiner arrives after the network has validated everything:
+    // its quorum queries find stored verdicts and it adopts the network
+    // decision instead of validating locally (§III-C).
+    specs.push(PeerSpec {
+        region: Region::EuropeWest3,
+        start_at: Nanos(Duration::from_secs(150).0),
+        cfg: mk_cfg(),
+        validator: Some(Box::new(StatsValidator::default())),
+        ..Default::default()
+    });
+    let mut cluster = build_cluster(7, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+
+    let mut rng = Rng::new(11);
+    let (good, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, 1, 80);
+    let (bad, _) = peersdb::modeling::datagen::generate_corrupt_contribution(&mut rng, 1, 80, 0.9);
+    let good_cid = contribute(&mut cluster, 1, &good, "spark-kmeans");
+    cluster.run_for(Duration::from_secs(60));
+    let bad_cid = contribute(&mut cluster, 2, &bad, "spark-kmeans");
+    cluster.run_for(Duration::from_secs(240)); // includes the late joiner
+
+    let events = drain_events(&mut cluster);
+    let mut good_valid = 0;
+    let mut bad_invalid = 0;
+    let mut network_sourced = 0;
+    for (_, e) in &events {
+        if let NodeEvent::ValidationDone { data_cid, verdict, source, .. } = e {
+            if *data_cid == good_cid && *verdict == Verdict::Valid {
+                good_valid += 1;
+            }
+            if *data_cid == bad_cid && *verdict == Verdict::Invalid {
+                bad_invalid += 1;
+            }
+            if *source == ValidationSource::Network {
+                network_sourced += 1;
+            }
+        }
+    }
+    assert!(good_valid >= 5, "good contributions validated: {good_valid}");
+    assert!(bad_invalid >= 5, "bad contributions flagged: {bad_invalid}");
+    // Once early validators stored verdicts, later ones adopt them from
+    // the network instead of re-validating.
+    assert!(network_sourced >= 2, "network verdicts adopted: {network_sourced}");
+}
+
+#[test]
+fn chunked_large_file_replicates() {
+    let specs = default_specs(3, |_| NodeConfig::default());
+    let mut cluster = build_cluster(8, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+    let mut rng = Rng::new(13);
+    let mut big = vec![0u8; CHUNK_SIZE * 2 + 100];
+    rng.fill_bytes(&mut big);
+    let root = contribute(&mut cluster, 1, &big, "spark-sort");
+    cluster.run_for(Duration::from_secs(60));
+    for i in 0..3 {
+        assert_eq!(
+            cluster.node(i).get_file(&root).as_deref(),
+            Some(&big[..]),
+            "node {i}"
+        );
+    }
+}
+
+#[test]
+fn restart_resyncs_via_anti_entropy() {
+    let specs = default_specs(4, |_| NodeConfig::default());
+    let mut cluster = build_cluster(9, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+    // Take node 3 offline; contribute meanwhile.
+    cluster.set_offline(3);
+    let mut rng = Rng::new(17);
+    let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, 2, 50);
+    contribute(&mut cluster, 1, &data, "spark-pagerank");
+    cluster.run_for(Duration::from_secs(20));
+    assert_eq!(cluster.node(3).contributions.len(), 0);
+    // Node 3 returns: it rejoins (on_start) and syncs the missed entry.
+    cluster.set_online(3);
+    cluster.run_for(Duration::from_secs(60));
+    assert_eq!(cluster.node(3).contributions.len(), 1, "missed entry recovered");
+    assert_converged(&mut cluster);
+}

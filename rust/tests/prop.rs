@@ -1,0 +1,482 @@
+//! Property-based tests over the coordinator's invariants: CRDT
+//! convergence, routing correctness, codec roundtrips, batching/quorum
+//! state machines, chunker integrity, and simulator determinism.
+
+use peersdb::bitswap;
+use peersdb::blockstore::{chunker, BlockStore};
+use peersdb::cid::{Cid, Codec};
+use peersdb::codec::json::Json;
+use peersdb::dht::{self, Key};
+use peersdb::ipfs_log::Log;
+use peersdb::net::PeerId;
+use peersdb::peersdb::Message;
+use peersdb::pubsub;
+use peersdb::stores::documents::{ValidationRecord, Verdict};
+use peersdb::testkit::{check, check_with_rng};
+use peersdb::util::time::{Duration, Nanos};
+use peersdb::util::Rng;
+use peersdb::validation::quorum::{QuorumConfig, VoteOutcome, VoteState};
+use peersdb::validation::{BatchQueue, CostModel, Task};
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------------
+// CRDT log: convergence under arbitrary interleavings
+// ---------------------------------------------------------------------------
+
+/// A random multi-replica history: ops are appends at a replica or
+/// partial syncs (replica pulls all entries from another).
+#[derive(Debug, Clone)]
+struct History {
+    replicas: usize,
+    ops: Vec<(usize, usize)>, // (op kind selector, replica/pair index)
+}
+
+#[test]
+fn prop_log_replicas_converge() {
+    check_with_rng(
+        "log-convergence",
+        |r| History {
+            replicas: r.range(2, 5),
+            ops: (0..r.range(5, 40)).map(|_| (r.range(0, 100), r.range(0, 1000))).collect(),
+        },
+        |h, rng| {
+            let authors: Vec<PeerId> = (0..h.replicas).map(|_| PeerId::from_rng(rng)).collect();
+            let mut logs: Vec<Log> = (0..h.replicas).map(|_| Log::new()).collect();
+            for (kind, arg) in &h.ops {
+                let i = arg % h.replicas;
+                if kind % 3 != 0 {
+                    let payload = vec![(*kind % 256) as u8, (*arg % 256) as u8];
+                    logs[i].append(authors[i], payload);
+                } else {
+                    let j = (arg / 7) % h.replicas;
+                    if i != j {
+                        let src = logs[j].clone();
+                        logs[i].join(&src);
+                    }
+                }
+            }
+            // Full mesh sync twice → all converge.
+            for _ in 0..2 {
+                for i in 0..h.replicas {
+                    for j in 0..h.replicas {
+                        if i != j {
+                            let src = logs[j].clone();
+                            logs[i].join(&src);
+                        }
+                    }
+                }
+            }
+            let d0 = logs[0].digest();
+            for (i, l) in logs.iter().enumerate() {
+                if l.digest() != d0 {
+                    return Err(format!("replica {i} diverged"));
+                }
+                if l.heads() != logs[0].heads() {
+                    return Err(format!("replica {i} heads differ"));
+                }
+                // Causality: parents precede children in traversal order.
+                let mut seen = std::collections::HashSet::new();
+                for (cid, e) in l.traverse() {
+                    for p in &e.next {
+                        if l.get(p).is_some() && !seen.contains(p) {
+                            return Err("traversal violates causality".into());
+                        }
+                    }
+                    seen.insert(cid);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Kademlia: closest() agrees with brute force and is sorted
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_routing_table_closest_is_correct() {
+    check_with_rng(
+        "kademlia-closest",
+        |r| (r.range(1, 200), r.range(1, 25)),
+        |(n_peers, k), rng| {
+            let own = Key(rng.bytes32());
+            let mut rt = peersdb::dht::kbucket::RoutingTable::new(own);
+            let mut inserted = Vec::new();
+            for _ in 0..*n_peers {
+                let p = PeerId::from_rng(rng);
+                rt.touch(p, Nanos(0));
+                inserted.push(p);
+            }
+            let target = Key(rng.bytes32());
+            let got = rt.closest(&target, *k);
+            // Sorted by XOR distance.
+            for w in got.windows(2) {
+                if target.distance(&Key::from_peer(w[0])) > target.distance(&Key::from_peer(w[1])) {
+                    return Err("closest() not sorted".into());
+                }
+            }
+            // Agrees with brute force over *retained* peers.
+            let mut brute = rt.peers();
+            brute.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+            brute.truncate(*k);
+            if got != brute {
+                return Err("closest() != brute force".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Codec: roundtrips for random wire messages and JSON values
+// ---------------------------------------------------------------------------
+
+fn random_cid(rng: &mut Rng) -> Cid {
+    Cid::of_raw(&rng.bytes32())
+}
+
+fn random_message(rng: &mut Rng) -> Message {
+    match rng.range(0, 9) {
+        0 => Message::Dht(dht::Rpc::FindNode { req_id: rng.next_u64() >> 1, target: Key(rng.bytes32()) }),
+        1 => Message::Dht(dht::Rpc::GetProvidersReply {
+            req_id: rng.next_u64() >> 1,
+            providers: (0..rng.range(0, 5)).map(|_| PeerId::from_rng(rng)).collect(),
+            closer: (0..rng.range(0, 5)).map(|_| PeerId::from_rng(rng)).collect(),
+        }),
+        2 => Message::Bitswap(bitswap::Msg::Block {
+            req_id: rng.next_u64() >> 1,
+            cid: random_cid(rng),
+            data: {
+                let mut v = vec![0u8; rng.range(0, 2000)];
+                rng.fill_bytes(&mut v);
+                v
+            },
+        }),
+        3 => Message::Pubsub(pubsub::Msg::Publish {
+            topic: pubsub::Topic(rng.next_u64()),
+            origin: PeerId::from_rng(rng),
+            seq: rng.next_u64() >> 1,
+            hops: rng.range(0, 16) as u8,
+            data: vec![1, 2, 3],
+        }),
+        4 => Message::Join { passphrase: rng.bytes32() },
+        5 => Message::JoinAck {
+            accepted: rng.chance(0.5),
+            peers: (0..rng.range(0, 8)).map(|_| PeerId::from_rng(rng)).collect(),
+            heads: (0..rng.range(0, 8)).map(|_| random_cid(rng)).collect(),
+        },
+        6 => Message::HeadsReply { heads: (0..rng.range(0, 10)).map(|_| random_cid(rng)).collect() },
+        7 => Message::ValQuery { req_id: rng.next_u64() >> 1, cid: random_cid(rng) },
+        _ => Message::ValReply {
+            req_id: rng.next_u64() >> 1,
+            cid: random_cid(rng),
+            record: if rng.chance(0.5) {
+                Some(ValidationRecord {
+                    data_cid: random_cid(rng),
+                    verdict: [Verdict::Valid, Verdict::Invalid, Verdict::Inconclusive][rng.range(0, 3)],
+                    score: rng.f64(),
+                    validator: PeerId::from_rng(rng),
+                    validated_at: rng.next_u64() >> 1,
+                    cost_ns: rng.next_u64() >> 1,
+                })
+            } else {
+                None
+            },
+        },
+    }
+}
+
+#[test]
+fn prop_wire_messages_roundtrip() {
+    check_with_rng(
+        "wire-roundtrip",
+        |_| (),
+        |_, rng| {
+            let msg = random_message(rng);
+            let bytes = peersdb::codec::to_bytes(&msg);
+            let back: Message = peersdb::codec::from_bytes(&bytes)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if back != msg {
+                return Err("roundtrip mismatch".into());
+            }
+            // wire_size estimate must dominate the exact encoding.
+            if peersdb::net::WireSize::wire_size(&msg) + 16 < bytes.len() {
+                return Err("wire_size underestimates".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth > 3 { rng.range(0, 4) } else { rng.range(0, 6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.next_u32() as f64) / 8.0 - 1000.0),
+        3 => Json::Str((0..rng.range(0, 12)).map(|_| ('a'..='z').nth(rng.range(0, 26)).unwrap()).collect()),
+        4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth + 1)).collect()),
+        _ => {
+            let mut m = BTreeMap::new();
+            for _ in 0..rng.range(0, 5) {
+                let k: String = (0..rng.range(1, 8)).map(|_| ('a'..='z').nth(rng.range(0, 26)).unwrap()).collect();
+                m.insert(k, random_json(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check_with_rng(
+        "json-roundtrip",
+        |_| (),
+        |_, rng| {
+            let v = random_json(rng, 0);
+            let compact = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+            let pretty = Json::parse(&v.pretty()).map_err(|e| e.to_string())?;
+            if compact != v || pretty != v {
+                return Err("json roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Chunker: files of arbitrary size roundtrip and report integrity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chunker_roundtrip_and_has_file() {
+    check_with_rng(
+        "chunker-roundtrip",
+        |r| r.range(0, 3 * chunker::CHUNK_SIZE + 17),
+        |size, rng| {
+            let mut bs = BlockStore::new();
+            let mut data = vec![0u8; *size];
+            rng.fill_bytes(&mut data);
+            let res = chunker::add_file(&mut bs, &data);
+            if !chunker::has_file(&bs, &res.root) {
+                return Err("has_file false after add".into());
+            }
+            let back = chunker::get_file(&bs, &res.root).ok_or("get_file none")?;
+            if back != data {
+                return Err("content mismatch".into());
+            }
+            // Every listed block verifies against its CID.
+            for b in &res.blocks {
+                let blk = bs.get(b).ok_or("missing block")?;
+                if !b.verifies(blk) {
+                    return Err("block fails verification".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Quorum: decisions always satisfy the agreement threshold
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quorum_decisions_meet_agreement() {
+    check_with_rng(
+        "quorum-agreement",
+        |r| (r.range(1, 8), r.range(1, 8), r.f64_range(0.5, 1.0)),
+        |(fanout, needed, agreement), rng| {
+            let cfg = QuorumConfig {
+                fanout: *fanout,
+                responses_needed: *needed,
+                agreement: *agreement,
+                timeout: Duration::from_secs(5),
+            };
+            let peers: Vec<PeerId> = (0..*fanout).map(|_| PeerId::from_rng(rng)).collect();
+            let mut vote = VoteState::new(Nanos(0), peers.clone());
+            let mut verdicts = Vec::new();
+            for p in &peers {
+                if rng.chance(0.7) {
+                    let v = [Verdict::Valid, Verdict::Invalid][rng.range(0, 2)];
+                    verdicts.push(v);
+                    vote.record(*p, Some((v, rng.f64())));
+                } else {
+                    vote.record(*p, None);
+                }
+            }
+            for force in [false, true] {
+                if let Some(VoteOutcome::Decided { verdict, responses, .. }) = vote.tally(&cfg, force) {
+                    let n_match = verdicts.iter().filter(|v| **v == verdict).count();
+                    let frac = n_match as f64 / verdicts.len() as f64;
+                    if frac + 1e-9 < *agreement {
+                        return Err(format!(
+                            "decided {verdict:?} with only {frac:.2} agreement (< {agreement})"
+                        ));
+                    }
+                    if responses > peers.len() {
+                        return Err("responses exceed asked".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batch queue: no task lost, no task duplicated
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_queue_conserves_tasks() {
+    check_with_rng(
+        "batch-conservation",
+        |r| (r.range(1, 20), r.range(1, 50)),
+        |(batch_size, n_tasks), rng| {
+            let mut q = BatchQueue::new(*batch_size);
+            let cost = CostModel::Constant { ns: 10 };
+            let mut enqueued = Vec::new();
+            let mut completed = Vec::new();
+            let mut in_flight: Vec<u64> = Vec::new();
+            let mut t = 0u64;
+            for i in 0..*n_tasks {
+                let cid = Cid::of_raw(&(i as u64).to_le_bytes());
+                enqueued.push(cid);
+                q.enqueue(Task { data_cid: cid, size_bytes: rng.gen_range(10_000) });
+                t += 1;
+                // Randomly start/complete batches (one at a time enforced).
+                if let Some((id, _)) = q.maybe_start(Nanos(t), &cost, rng.chance(0.3)) {
+                    in_flight.push(id);
+                }
+                if rng.chance(0.5) {
+                    if let Some(id) = in_flight.pop() {
+                        let (tasks, _) = q.complete(id).ok_or("lost batch")?;
+                        completed.extend(tasks.into_iter().map(|t| t.data_cid));
+                    }
+                }
+            }
+            // Drain.
+            loop {
+                if let Some(id) = in_flight.pop() {
+                    let (tasks, _) = q.complete(id).ok_or("lost batch")?;
+                    completed.extend(tasks.into_iter().map(|t| t.data_cid));
+                    continue;
+                }
+                match q.maybe_start(Nanos(t), &cost, true) {
+                    Some((id, _)) => in_flight.push(id),
+                    None => {
+                        if q.pending_len() == 0 && q.in_flight_len() == 0 {
+                            break;
+                        }
+                        return Err("queue stuck".into());
+                    }
+                }
+            }
+            let mut a = enqueued.clone();
+            let mut b = completed.clone();
+            a.sort();
+            b.sort();
+            if a != b {
+                return Err(format!("conservation violated: {} in, {} out", a.len(), b.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Simulator: deterministic given a seed, even under churn and loss
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sim_runs_are_deterministic() {
+    use peersdb::peersdb::NodeConfig;
+    use peersdb::sim::harness::{build_cluster, contribute, PeerSpec};
+    use peersdb::sim::model::NetModel;
+    use peersdb::sim::regions::ALL;
+
+    check(
+        "sim-determinism",
+        |r| (r.next_u64(), r.range(3, 6)),
+        |(seed, n)| {
+            let run = || {
+                let specs: Vec<PeerSpec> = (0..*n)
+                    .map(|i| PeerSpec {
+                        region: ALL[i % ALL.len()],
+                        start_at: Nanos((i as u64) * 100_000_000),
+                        cfg: NodeConfig::default(),
+                        ..Default::default()
+                    })
+                    .collect();
+                let mut model = NetModel::default();
+                model.loss = 0.02; // failure injection: 2 % message loss
+                let mut cluster = build_cluster(*seed, model, specs);
+                cluster.run_for(Duration::from_secs(10));
+                let mut rng = Rng::new(seed ^ 7);
+                let (file, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, 0, 30);
+                contribute(&mut cluster, 1, &file, "spark-sort");
+                cluster.run_for(Duration::from_secs(30));
+                (
+                    cluster.stats.msgs_sent,
+                    cluster.stats.msgs_delivered,
+                    cluster.stats.msgs_dropped_loss,
+                    cluster.stats.bytes_sent,
+                    cluster.node(0).contributions.digest(),
+                )
+            };
+            let a = run();
+            let b = run();
+            if a != b {
+                return Err(format!("non-deterministic: {a:?} vs {b:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection: convergence despite message loss
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_convergence_under_loss() {
+    use peersdb::peersdb::NodeConfig;
+    use peersdb::sim::harness::{assert_converged, build_cluster, contribute, PeerSpec};
+    use peersdb::sim::model::NetModel;
+    use peersdb::sim::regions::ALL;
+
+    check(
+        "loss-convergence",
+        |r| (r.next_u64(), r.f64_range(0.0, 0.10)),
+        |(seed, loss)| {
+            let specs: Vec<PeerSpec> = (0..4)
+                .map(|i| PeerSpec {
+                    region: ALL[i % ALL.len()],
+                    start_at: Nanos((i as u64) * 200_000_000),
+                    cfg: NodeConfig::default(),
+                    ..Default::default()
+                })
+                .collect();
+            let mut model = NetModel::default();
+            model.loss = *loss;
+            let mut cluster = build_cluster(*seed, model, specs);
+            cluster.run_for(Duration::from_secs(15));
+            let mut rng = Rng::new(seed ^ 13);
+            for i in 0..3 {
+                let (file, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, i, 20);
+                contribute(&mut cluster, 1 + (i as usize % 3), &file, "spark-grep");
+                cluster.run_for(Duration::from_secs(5));
+            }
+            cluster.run_for(Duration::from_secs(240));
+            assert_converged(&mut cluster);
+            if cluster.node(0).contributions.len() != 3 {
+                return Err(format!(
+                    "expected 3 contributions, got {} (loss {loss:.2})",
+                    cluster.node(0).contributions.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,131 @@
+//! End-to-end runtime tests: AOT artifacts → PJRT → train/predict/score.
+//!
+//! Requires `make artifacts` (skips gracefully when missing so plain
+//! `cargo test` works before the first build).
+
+use peersdb::modeling::datagen::{generate_contribution, parse_contribution};
+use peersdb::modeling::features::{encode_batch, DIM};
+use peersdb::runtime::batching::padded_batches;
+use peersdb::runtime::PerfModel;
+use peersdb::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn load_train_predict_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = PerfModel::load(&dir).expect("load artifacts");
+    assert_eq!(model.meta.features, DIM);
+    assert!(model.param_count() > 4000, "MLP should have >4k params");
+
+    // Build a training set from synthetic contributions — the same
+    // parser/encoder path the collaborative workflow uses.
+    let mut rng = Rng::new(42);
+    let mut rows = Vec::new();
+    for wl in 0..6 {
+        let (file, _) = generate_contribution(&mut rng, wl, 200);
+        rows.extend(parse_contribution(&file).unwrap());
+    }
+    let (xs, ys) = encode_batch(&rows);
+    let batches = padded_batches(&xs, &ys, DIM, model.meta.batch);
+    assert!(batches.len() >= 4);
+
+    // Train a few epochs; loss must drop substantially.
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for epoch in 0..30 {
+        let mut epoch_loss = 0.0;
+        for (bx, by, bm) in &batches {
+            epoch_loss += model.train_step(bx, by, bm, 0.05).expect("train step");
+        }
+        epoch_loss /= batches.len() as f32;
+        if epoch == 0 {
+            first = epoch_loss;
+        }
+        last = epoch_loss;
+    }
+    assert!(
+        last < first * 0.25,
+        "loss did not converge: {first} -> {last}"
+    );
+
+    // Predictions should correlate with targets (log-space MAE sanity).
+    let (bx, by, bm) = &batches[0];
+    let preds = model.predict(bx).expect("predict");
+    let mut mae = 0.0;
+    let mut n = 0.0;
+    for i in 0..model.meta.batch {
+        if bm[i] > 0.0 {
+            mae += (preds[i] - by[i]).abs();
+            n += 1.0;
+        }
+    }
+    mae /= n;
+    assert!(mae < 0.5, "log-space MAE too high: {mae}");
+}
+
+#[test]
+fn knn_scores_separate_outliers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = PerfModel::load(&dir).expect("load artifacts");
+    let b = model.meta.batch;
+    let r = model.meta.refset;
+    let d = model.meta.features;
+    let mut rng = Rng::new(7);
+    // Reference set: plausible feature rows.
+    let mut refs = vec![0f32; r * d];
+    for v in refs.iter_mut() {
+        *v = rng.f64_range(0.0, 1.0) as f32;
+    }
+    // Queries: first half inliers, second half far outliers.
+    let mut xs = vec![0f32; b * d];
+    for i in 0..b {
+        for j in 0..d {
+            xs[i * d + j] = if i < b / 2 {
+                rng.f64_range(0.0, 1.0) as f32
+            } else {
+                rng.f64_range(20.0, 30.0) as f32
+            };
+        }
+    }
+    let scores = model.knn_score(&xs, &refs).expect("knn");
+    let inlier: f32 = scores[..b / 2].iter().sum::<f32>() / (b / 2) as f32;
+    let outlier: f32 = scores[b / 2..].iter().sum::<f32>() / (b / 2) as f32;
+    assert!(
+        outlier > inlier * 50.0,
+        "outliers not separated: {inlier} vs {outlier}"
+    );
+}
+
+#[test]
+fn reset_restores_deterministic_init() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = PerfModel::load(&dir).expect("load");
+    let before = model.export_params().unwrap();
+    // Train a bit, then reset.
+    let xs = vec![0.5f32; model.meta.batch * model.meta.features];
+    let ys = vec![1.0f32; model.meta.batch];
+    let mask = vec![1.0f32; model.meta.batch];
+    model.train_step(&xs, &ys, &mask, 0.1).unwrap();
+    let trained = model.export_params().unwrap();
+    assert_ne!(before, trained, "training must change params");
+    model.reset().unwrap();
+    assert_eq!(before, model.export_params().unwrap());
+}
+
+#[test]
+fn shape_mismatches_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = PerfModel::load(&dir).expect("load");
+    assert!(model.train_step(&[0.0; 8], &[0.0; 1], &[0.0; 1], 0.1).is_err());
+    assert!(model.predict(&[0.0; 7]).is_err());
+    assert!(model.knn_score(&vec![0.0; 256 * 8], &[0.0; 3]).is_err());
+}
