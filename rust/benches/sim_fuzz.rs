@@ -2,114 +2,109 @@
 //! reconnect during transmission".
 //!
 //! A cluster distributes a stream of contributions while links between
-//! random peer pairs flap. We sweep the churn intensity and report
-//! convergence success and completion-time inflation relative to the
-//! churn-free baseline.
+//! random peer pairs flap. The flap schedule is generated up front from
+//! the sweep seed and executed through the **scenario harness**
+//! (`peersdb::sim::scenario`), so every trial runs the same cluster-wide
+//! invariants as `tests/scenarios.rs` — log convergence, quorum safety,
+//! DHT routing health, and block availability — instead of an ad-hoc
+//! length check, and every trial is replayable bit-for-bit from its
+//! seed. We sweep the churn intensity and report convergence time
+//! inflation relative to the churn-free baseline.
 
-use peersdb::modeling::datagen;
-use peersdb::peersdb::NodeConfig;
-use peersdb::sim::harness::{self, PeerSpec};
 use peersdb::sim::model::NetModel;
-use peersdb::sim::regions::Region;
+use peersdb::sim::scenario::{self, Fault, Scenario};
 use peersdb::util::bench::{print_environment, Table};
-use peersdb::util::time::{Duration, Nanos};
+use peersdb::util::time::Duration;
 use peersdb::util::Rng;
 
 const PEERS: usize = 12;
 const FILES: usize = 30;
 
-/// Run one fuzz trial; returns (converged, virtual seconds to converge,
-/// messages dropped on blocked links).
-fn run_trial(flap_prob: f64, seed: u64) -> (bool, f64, u64) {
-    let specs: Vec<PeerSpec> = (0..PEERS)
-        .map(|i| PeerSpec {
-            region: Region::Local, // single-DC, as in Testground's docker runner
-            start_at: Nanos(Duration::from_millis(100).0 * i as u64),
-            cfg: NodeConfig { auto_validate: false, ..NodeConfig::default() },
-            ..Default::default()
-        })
-        .collect();
-    let mut cluster = harness::build_cluster(seed, NetModel::uniform(20.0, 512.0, 0.05), specs);
-    cluster.run_for(Duration::from_secs(10));
-
-    let mut rng = Rng::new(seed ^ 0xF122);
+/// Build one fuzz trial as a declarative scenario: contribution every
+/// two virtual seconds, link flaps sampled per round with `flap_prob`.
+fn fuzz_scenario(flap_prob: f64, seed: u64) -> Scenario {
+    let mut rng = Rng::new(seed ^ 0xF1A2);
+    let mut sc = Scenario::named("fuzz-flap", seed, PEERS);
+    sc.model = NetModel::uniform(20.0, 512.0, 0.05);
+    sc.cfg.auto_validate = false;
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
     let mut blocked: Vec<(usize, usize)> = Vec::new();
+    let mut t = 0u64;
     for i in 0..FILES {
         // Random link flaps before each contribution round.
         if rng.chance(flap_prob) {
             let a = rng.range(0, PEERS);
             let b = rng.range(0, PEERS);
             if a != b {
-                cluster.block_pair(a, b);
+                sc = sc.at(t, Fault::BlockPair { a, b });
                 blocked.push((a, b));
             }
         }
-        if rng.chance(flap_prob * 0.8) {
-            if !blocked.is_empty() {
-                let k = rng.range(0, blocked.len());
-                let (a, b) = blocked.swap_remove(k);
-                cluster.unblock_pair(a, b);
-            }
+        if rng.chance(flap_prob * 0.8) && !blocked.is_empty() {
+            let k = rng.range(0, blocked.len());
+            let (a, b) = blocked.swap_remove(k);
+            sc = sc.at(t, Fault::UnblockPair { a, b });
         }
-        let wl = (i % 6) as u32;
-        let (file, _) = datagen::generate_contribution(&mut rng, wl, 60);
-        harness::contribute(&mut cluster, rng.range(1, PEERS), &file, datagen::WORKLOADS[wl as usize]);
-        cluster.run_for(Duration::from_secs(2));
+        let node = 1 + rng.range(0, PEERS - 1);
+        sc = sc.at(t, Fault::Contribute { node, workload: (i % 6) as u32, rows: 60 });
+        t += 2;
     }
-    // Heal all links, allow anti-entropy to finish.
-    for (a, b) in blocked.drain(..) {
-        cluster.unblock_pair(a, b);
-    }
-    let t_heal = cluster.now();
-    let deadline = t_heal + Duration::from_secs(600);
-    let mut converged_at = None;
-    while cluster.now() < deadline {
-        cluster.run_for(Duration::from_secs(5));
-        let target = cluster.node(0).contributions.len();
-        let all = (0..PEERS).all(|i| {
-            cluster.node(i).contributions.len() == FILES && target == FILES
-        });
-        if all {
-            converged_at = Some(cluster.now());
-            break;
-        }
-    }
-    let dropped = cluster.stats.msgs_dropped_blocked;
-    match converged_at {
-        Some(t) => (true, (t - Nanos(0)).as_secs_f64(), dropped),
-        None => (false, f64::NAN, dropped),
-    }
+    sc
 }
 
 fn main() {
     print_environment("SIMULATION: HARDWARE & SOFTWARE SPECIFICATIONS (Table II analogue)");
-    println!("fuzz plan: {PEERS} peers, {FILES} contributions, random link disconnect/reconnect\n");
+    println!(
+        "fuzz plan: {PEERS} peers, {FILES} contributions, random link disconnect/reconnect\n\
+         (scenario harness: full invariant suite at quiesce — convergence,\n\
+          quorum safety, routing health, availability)\n"
+    );
 
     let mut table = Table::new(&[
         "flap prob/round", "converged", "virtual time [s]", "msgs dropped (blocked links)",
     ]);
     let mut baseline = f64::NAN;
     for (i, &p) in [0.0, 0.3, 0.6, 0.9].iter().enumerate() {
-        let (ok, t, dropped) = run_trial(p, 0xF0 + i as u64);
+        let sc = fuzz_scenario(p, 0xF0 + i as u64);
+        let report = match scenario::run(&sc) {
+            Ok(r) => r,
+            Err(e) => panic!("cluster failed invariants under churn p={p}: {e}"),
+        };
+        let t = report
+            .converged_at
+            .expect("quiesce poll records convergence")
+            .as_secs_f64();
         if i == 0 {
             baseline = t;
         }
+        if p > 0.0 {
+            assert!(
+                report.stats.msgs_dropped_blocked > 0,
+                "fuzz produced no drops at p={p} — churn not exercised"
+            );
+        }
         table.row(&[
             format!("{p:.1}"),
-            if ok { "yes".into() } else { "NO".into() },
+            "yes".into(),
             format!("{t:.0}"),
-            dropped.to_string(),
+            report.stats.msgs_dropped_blocked.to_string(),
         ]);
-        assert!(ok, "cluster failed to converge under churn p={p}");
     }
     table.print();
 
-    // Shape: heavier churn costs messages but never convergence.
-    let (_, t_heavy, dropped_heavy) = run_trial(0.9, 0xFF);
+    // Shape: heavier churn costs messages but never convergence — and a
+    // replay of the heaviest trial must be bit-identical.
+    let heavy = fuzz_scenario(0.9, 0xFF);
+    let a = scenario::run(&heavy).expect("heavy churn trial");
+    let b = scenario::run(&heavy).expect("heavy churn replay");
+    assert_eq!(a, b, "fuzz trial not deterministic");
+    let t_heavy = a.converged_at.unwrap().as_secs_f64();
     println!(
-        "baseline {baseline:.0}s vs heavy churn {t_heavy:.0}s (inflation {:.2}x), {dropped_heavy} drops",
-        t_heavy / baseline
+        "baseline {baseline:.0}s vs heavy churn {t_heavy:.0}s (inflation {:.2}x), {} drops",
+        t_heavy / baseline,
+        a.stats.msgs_dropped_blocked
     );
-    assert!(dropped_heavy > 0, "fuzz produced no drops — churn not exercised");
+    assert!(a.stats.msgs_dropped_blocked > 0, "fuzz produced no drops — churn not exercised");
     println!("sim_fuzz OK");
 }

@@ -16,7 +16,7 @@ use crate::cid::Cid;
 use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
 use crate::net::PeerId;
 use crate::util::time::{Duration, Nanos};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Bitswap wire messages.
 #[derive(Clone, Debug, PartialEq)]
@@ -77,8 +77,9 @@ impl Msg {
     }
 }
 
-/// Identifier of an in-flight fetch session.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Identifier of an in-flight fetch session. Ordered so engine state
+/// keyed by it can be swept deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct FetchId(pub u64);
 
 /// Completion events drained by the owner.
@@ -122,7 +123,9 @@ pub struct Engine {
     cfg: BitswapConfig,
     next_req: u64,
     next_fetch: u64,
-    fetches: HashMap<FetchId, Fetch>,
+    /// Ordered: the timeout sweep in [`Engine::tick`] iterates this, and
+    /// its emission order must be reproducible across runs.
+    fetches: BTreeMap<FetchId, Fetch>,
     /// req_id → fetch
     req_index: HashMap<u64, FetchId>,
     pub events: Vec<BitswapEvent>,
@@ -141,7 +144,7 @@ impl Engine {
             cfg,
             next_req: 1,
             next_fetch: 1,
-            fetches: HashMap::new(),
+            fetches: BTreeMap::new(),
             req_index: HashMap::new(),
             events: Vec::new(),
             blocks_received: 0,

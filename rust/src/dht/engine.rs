@@ -163,16 +163,20 @@ struct ProviderRecord {
 }
 
 /// The Kademlia engine. One per node.
+///
+/// Iterated collections (pending RPCs, provider sets) are ordered maps:
+/// timeout sweeps and provider replies must not depend on hash-map
+/// iteration order, or two runs of the same seed would diverge.
 pub struct Engine {
     own: PeerId,
     pub table: RoutingTable,
     cfg: DhtConfig,
     next_req: u64,
     next_lookup: u64,
-    pending: HashMap<u64, PendingRpc>,
+    pending: BTreeMap<u64, PendingRpc>,
     lookups: HashMap<LookupId, Lookup>,
     /// key → provider → record
-    providers: HashMap<Key, HashMap<PeerId, ProviderRecord>>,
+    providers: HashMap<Key, BTreeMap<PeerId, ProviderRecord>>,
     /// Completed-lookup events for the owner to drain.
     pub events: Vec<DhtEvent>,
     /// RPC counters (for experiment metrics).
@@ -191,7 +195,7 @@ impl Engine {
             cfg,
             next_req: 1,
             next_lookup: 1,
-            pending: HashMap::new(),
+            pending: BTreeMap::new(),
             lookups: HashMap::new(),
             providers: HashMap::new(),
             events: Vec::new(),

@@ -45,11 +45,13 @@ impl KBucket {
             self.contacts.push(Contact { peer, last_seen: now });
         } else {
             // Optimistic eviction of the least-recently-seen contact.
+            // Ties break on peer id — the same order [`KBucket::stalest`]
+            // reports, so the eviction victim is always predictable.
             let stalest = self
                 .contacts
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, c)| c.last_seen)
+                .min_by_key(|(_, c)| (c.last_seen, c.peer))
                 .map(|(i, _)| i)
                 .unwrap();
             self.contacts[stalest] = Contact { peer, last_seen: now };
@@ -62,6 +64,16 @@ impl KBucket {
 
     pub fn peers(&self) -> impl Iterator<Item = PeerId> + '_ {
         self.contacts.iter().map(|c| c.peer)
+    }
+
+    /// The least-recently-seen contact — the next eviction victim.
+    /// Uses the same `(last_seen, peer)` order as [`KBucket::touch`]'s
+    /// eviction, so the prediction holds even under timestamp ties.
+    pub fn stalest(&self) -> Option<PeerId> {
+        self.contacts
+            .iter()
+            .min_by_key(|c| (c.last_seen, c.peer))
+            .map(|c| c.peer)
     }
 }
 
@@ -132,6 +144,35 @@ impl RoutingTable {
     /// All peers currently in the table.
     pub fn peers(&self) -> Vec<PeerId> {
         self.buckets.iter().flat_map(|b| b.peers()).collect()
+    }
+
+    /// Structural invariants, asserted by scenario harnesses and property
+    /// tests after arbitrary touch/remove interleavings:
+    ///
+    /// 1. no bucket exceeds `K` contacts,
+    /// 2. the own id never appears in the table,
+    /// 3. every contact sits in the bucket its XOR distance selects,
+    /// 4. no peer appears twice.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            if b.len() > K {
+                return Err(format!("bucket {i} over capacity ({} > {K})", b.len()));
+            }
+            for p in b.peers() {
+                match self.own.bucket_index(&Key::from_peer(p)) {
+                    None => return Err(format!("own id {p:?} stored in bucket {i}")),
+                    Some(j) if j != i => {
+                        return Err(format!("{p:?} in bucket {i}, belongs in {j}"))
+                    }
+                    Some(_) => {}
+                }
+                if !seen.insert(p) {
+                    return Err(format!("duplicate contact {p:?}"));
+                }
+            }
+        }
+        Ok(())
     }
 }
 

@@ -21,8 +21,18 @@
 //!
 //! The performance-modeling workflows (the downstream consumer that
 //! motivates the layer) call AOT-compiled JAX/Pallas computations through
-//! [`runtime`] (PJRT via the `xla` crate); Python never runs at request
-//! time.
+//! `runtime` (PJRT via the `xla` crate; behind the `pjrt` feature so the
+//! data layer builds in offline environments); Python never runs at
+//! request time.
+//!
+//! Evaluation is driven by the **scenario subsystem**
+//! ([`sim::scenario`]): declarative, timed fault schedules (partitions,
+//! regional outages, crash/restart churn, flash-crowd joins, root-peer
+//! CPU strain, byzantine validators) executed against a simulated
+//! cluster, with a cluster-wide invariant checker (log convergence,
+//! quorum safety, DHT routing health, block availability) asserted at
+//! checkpoints and at quiesce. Scenario runs are deterministic: the same
+//! seed reproduces the identical [`sim::SimStats`].
 //!
 //! ```text
 //!  api (http/shell)      examples/, benches/
@@ -53,6 +63,7 @@ pub mod modeling;
 pub mod net;
 pub mod peersdb;
 pub mod pubsub;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod stores;

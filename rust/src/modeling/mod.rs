@@ -19,5 +19,6 @@
 
 pub mod datagen;
 pub mod features;
+#[cfg(feature = "pjrt")]
 pub mod validator;
 pub mod workflow;

@@ -14,12 +14,16 @@
 //! benefit.
 
 use crate::modeling::datagen::{parse_contribution, TraceRow};
+#[cfg(feature = "pjrt")]
 use crate::modeling::features::{encode_batch, DIM};
 use crate::peersdb::Node;
+#[cfg(feature = "pjrt")]
 use crate::runtime::batching::padded_batches;
+#[cfg(feature = "pjrt")]
 use crate::runtime::PerfModel;
 use crate::stores::documents::Verdict;
 use crate::util::Rng;
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// Assemble training rows from a node's replicated contributions
@@ -48,6 +52,7 @@ pub fn assemble_from_node(node: &Node, workload: Option<&str>, private_cids: &[c
 }
 
 /// Outcome of one train+evaluate run.
+#[cfg(feature = "pjrt")]
 #[derive(Clone, Debug)]
 pub struct Report {
     pub train_rows: usize,
@@ -62,6 +67,7 @@ pub struct Report {
 }
 
 /// Train the model on `train` and evaluate on `test`.
+#[cfg(feature = "pjrt")]
 pub fn train_and_eval(
     model: &mut PerfModel,
     train: &[TraceRow],
@@ -100,6 +106,7 @@ pub fn train_and_eval(
 }
 
 /// Evaluate RMSE (log space) and MAPE (runtime space) on held-out rows.
+#[cfg(feature = "pjrt")]
 pub fn evaluate(model: &PerfModel, test: &[TraceRow]) -> Result<(f64, f64)> {
     let (xs, ys) = encode_batch(test);
     let mut se = 0.0f64;
@@ -133,6 +140,7 @@ pub fn split(rows: &[TraceRow], test_frac: f64, rng: &mut Rng) -> (Vec<TraceRow>
 /// The collaboration experiment: compare a model trained only on one
 /// peer's local data against one trained on everything the distribution
 /// layer replicated. Returns (local report, collaborative report).
+#[cfg(feature = "pjrt")]
 pub fn collaboration_benefit(
     model: &mut PerfModel,
     local_rows: &[TraceRow],

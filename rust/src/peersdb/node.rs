@@ -18,9 +18,10 @@ use crate::util::time::{Duration, Nanos};
 use crate::util::Rng;
 use crate::validation::{BatchQueue, CostModel, IdentityValidator, Task, Validator};
 use crate::validation::quorum::{QuorumConfig, VoteOutcome, VoteState};
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// Node configuration (the paper's Helm-chart parametrization).
+#[derive(Clone, Debug)]
 pub struct NodeConfig {
     pub passphrase: String,
     pub store_name: String,
@@ -190,8 +191,9 @@ pub struct Node {
     /// Purposes remembered across provider-lookup retries.
     retry_purposes: HashMap<Cid, FetchPurpose>,
 
-    // Validation bookkeeping.
-    votes: HashMap<Cid, VoteState>,
+    // Validation bookkeeping. Votes are swept by expiry time — ordered
+    // map so the sweep (and everything it triggers) is deterministic.
+    votes: BTreeMap<Cid, VoteState>,
     val_req_index: HashMap<u64, Cid>,
 
     pub events: Vec<NodeEvent>,
@@ -202,8 +204,9 @@ pub struct Node {
     /// When validation began per CID (for the verdict-latency metric).
     validation_started: HashMap<Cid, Nanos>,
     /// Contributions whose data files are not yet fully local
-    /// (incremental — the anti-entropy sweep iterates only this).
-    incomplete_data: HashMap<Cid, PeerId>,
+    /// (incremental — the anti-entropy sweep iterates only this; ordered
+    /// so retry order, and thus RNG consumption, is reproducible).
+    incomplete_data: BTreeMap<Cid, PeerId>,
 }
 
 impl Node {
@@ -249,14 +252,14 @@ impl Node {
             bootstrap_lookup: None,
             contribution_meta: HashMap::new(),
             retry_purposes: HashMap::new(),
-            votes: HashMap::new(),
+            votes: BTreeMap::new(),
             val_req_index: HashMap::new(),
             events: Vec::new(),
             metrics: Metrics::new(),
             tick_count: 0,
             deferred_val_replies: Vec::new(),
             validation_started: HashMap::new(),
-            incomplete_data: HashMap::new(),
+            incomplete_data: BTreeMap::new(),
             cfg,
         }
     }
@@ -347,6 +350,13 @@ impl Node {
     /// Manually trigger validation of a replicated contribution.
     pub fn validate(&mut self, now: Nanos, data_cid: Cid, out: &mut Outbox<Message>) {
         self.begin_validation(now, data_cid, out);
+    }
+
+    /// Swap the local validation routine. Used by fault-injection
+    /// scenarios to turn a peer byzantine mid-run; affects only verdicts
+    /// computed after the swap.
+    pub fn set_validator(&mut self, v: Box<dyn Validator>) {
+        self.validator = v;
     }
 
     /// Ask a specific peer for its heads (anti-entropy).

@@ -14,7 +14,10 @@ use crate::util::Rng;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 
 /// Aggregate transport statistics for a simulation run.
-#[derive(Clone, Debug, Default)]
+///
+/// `Eq` so scenario harnesses can assert bit-identical replays: two runs
+/// of the same scenario from the same seed must produce equal stats.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SimStats {
     pub msgs_sent: u64,
     pub msgs_delivered: u64,
@@ -84,6 +87,9 @@ pub struct Cluster<R: Runner> {
     blocked: HashSet<(usize, usize)>,
     /// CPU availability per physical machine (pods share).
     machines: Vec<Nanos>,
+    /// Per-machine CPU slowdown multipliers (≥ 1; scenario fault
+    /// injection — models the root peer under strain).
+    cpu_factor: Vec<u32>,
     pub stats: SimStats,
 }
 
@@ -99,6 +105,7 @@ impl<R: Runner> Cluster<R> {
             rng: Rng::new(seed ^ 0x5157_0CA5_7E11_0DE5),
             blocked: HashSet::new(),
             machines: Vec::new(),
+            cpu_factor: Vec::new(),
             stats: SimStats::default(),
         }
     }
@@ -133,6 +140,9 @@ impl<R: Runner> Cluster<R> {
     ) -> usize {
         while self.machines.len() <= machine {
             self.machines.push(Nanos::ZERO);
+        }
+        while self.cpu_factor.len() <= machine {
+            self.cpu_factor.push(1);
         }
         let id = runner.id();
         let idx = self.nodes.len();
@@ -171,6 +181,11 @@ impl<R: Runner> Cluster<R> {
 
     pub fn is_online(&self, idx: usize) -> bool {
         self.nodes[idx].online
+    }
+
+    /// Physical machine node `idx` runs on.
+    pub fn machine_of(&self, idx: usize) -> usize {
+        self.nodes[idx].machine
     }
 
     fn push(&mut self, at: Nanos, ev: Ev<R>) {
@@ -214,6 +229,27 @@ impl<R: Runner> Cluster<R> {
     pub fn unblock_pair(&mut self, a: usize, b: usize) {
         self.unblock_link(a, b);
         self.unblock_link(b, a);
+    }
+
+    /// Heal every blocked link at once (scenario quiesce).
+    pub fn unblock_all(&mut self) {
+        self.blocked.clear();
+    }
+
+    /// Slow a machine's CPU by an integral factor (1 = nominal). Models
+    /// the paper's root-peer CPU-strain artifact as an injectable fault.
+    pub fn set_cpu_factor(&mut self, machine: usize, factor: u32) {
+        while self.cpu_factor.len() <= machine {
+            self.cpu_factor.push(1);
+        }
+        self.cpu_factor[machine] = factor.max(1);
+    }
+
+    /// Restore every machine to nominal speed.
+    pub fn reset_cpu_factors(&mut self) {
+        for f in &mut self.cpu_factor {
+            *f = 1;
+        }
     }
 
     // ----- injection --------------------------------------------------------
@@ -310,6 +346,7 @@ impl<R: Runner> Cluster<R> {
                 // on one machine queue behind each other.
                 let cost = slot.runner.processing_cost(&msg);
                 let machine = slot.machine;
+                let cost = cost * self.cpu_factor.get(machine).copied().unwrap_or(1) as u64;
                 let begin = self.machines[machine].max(self.now);
                 let done = begin + cost;
                 self.machines[machine] = done;
@@ -546,5 +583,31 @@ mod tests {
     #[test]
     fn wire_size_default_via_encode() {
         assert_eq!(WireSize::wire_size(&300u64), 2); // varint
+    }
+
+    #[test]
+    fn cpu_factor_multiplies_processing_cost() {
+        // The same ping-pong under a 1000× slowdown of node b's machine
+        // takes strictly longer than the nominal run.
+        let (mut c1, _, _) = mk(9);
+        c1.run_until_idle();
+        let nominal = c1.now();
+        let (mut c2, _, b) = mk(9);
+        c2.set_cpu_factor(c2.machine_of(b), 1000);
+        c2.run_until_idle();
+        assert!(c2.now() > nominal, "{} !> {}", c2.now(), nominal);
+    }
+
+    #[test]
+    fn unblock_all_heals_partition() {
+        let (mut c, a, b) = mk(10);
+        c.block_pair(a, b);
+        c.run_until_idle();
+        assert!(c.node(b).got.is_empty());
+        c.unblock_all();
+        c.set_offline(a);
+        c.set_online(a); // restart → new ping round over healed links
+        c.run_until_idle();
+        assert!(!c.node(b).got.is_empty());
     }
 }

@@ -84,6 +84,28 @@ pub fn paper_cluster(
     build_cluster(seed, NetModel::default(), specs)
 }
 
+/// Join one additional peer to a running cluster *now*, bootstrapping
+/// through node 0 (the root). This is how scenarios model flash-crowd
+/// arrivals and late joiners without rebuilding the cluster. Returns the
+/// new node's index.
+pub fn join_peer(
+    cluster: &mut Cluster<Node>,
+    region: Region,
+    mut cfg: NodeConfig,
+    validator: Option<Box<dyn Validator>>,
+    rng: &mut Rng,
+) -> usize {
+    cfg.bootstrap = Some(cluster.peer_id(0));
+    let id = crate::net::PeerId::from_rng(rng);
+    let node_seed = rng.next_u64();
+    let node = match validator {
+        Some(v) => Node::with_validator(id, cfg, node_seed, v),
+        None => Node::new(id, cfg, node_seed),
+    };
+    let now = cluster.now();
+    cluster.add_node(node, region, now)
+}
+
 /// Drain accumulated [`NodeEvent`]s from every node.
 pub fn drain_events(cluster: &mut Cluster<Node>) -> Vec<(usize, NodeEvent)> {
     let mut all = Vec::new();

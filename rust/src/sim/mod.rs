@@ -12,12 +12,27 @@
 //!   (which reproduces the paper's root-peer CPU-strain artifact),
 //! * optional jitter, packet loss, link blocking (fuzz/churn), and
 //! * deterministic execution from a single seed.
+//!
+//! On top of the raw driver sits the **scenario subsystem**
+//! ([`scenario`]): declarative fault schedules — partition/heal,
+//! regional outage, crash/restart churn, flash-crowd joins, root-peer
+//! CPU strain, byzantine validator injection, loss spikes — executed
+//! against a [`Cluster`] of full PeersDB nodes, with a cluster-wide
+//! invariant checker (contribution-log convergence, quorum safety, DHT
+//! routing-table health, block availability ≥ replication target)
+//! asserted at mid-run checkpoints and at quiesce. The same seed always
+//! reproduces the identical [`SimStats`], so every scenario doubles as a
+//! regression reproduction recipe; `tests/scenarios.rs` holds the named
+//! bank and `benches/sim_fuzz.rs` reuses the invariants under randomized
+//! link flapping.
 
 pub mod des;
 pub mod harness;
 pub mod model;
 pub mod regions;
+pub mod scenario;
 
 pub use des::{Cluster, SimStats};
 pub use model::{LatencySpec, NetModel};
 pub use regions::Region;
+pub use scenario::{Fault, InvariantConfig, Scenario, ScenarioReport, TimedFault};

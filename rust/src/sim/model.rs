@@ -54,6 +54,13 @@ impl NetModel {
         }
     }
 
+    /// Same model with a message-loss probability — the degraded-network
+    /// knob scenario schedules flip at run time.
+    pub fn with_loss(mut self, loss: f64) -> NetModel {
+        self.loss = loss.clamp(0.0, 1.0);
+        self
+    }
+
     /// Sampled one-way delay between two regions (base + jitter).
     pub fn sample_latency(&self, from: Region, to: Region, rng: &mut Rng) -> Duration {
         let base_ms = match self.latency {

@@ -3,9 +3,10 @@
 //!
 //! A property is a function from a generated case to `Result<(), String>`.
 //! [`check`] runs many cases from a seeded generator; on failure it
-//! reports the case's seed so the exact input can be replayed with
-//! `PEERSDB_PROP_SEED=<seed>`. No shrinking — cases are kept small by
-//! construction instead.
+//! reports the case's seed and prints a ready-to-paste replay command
+//! (`PEERSDB_PROP_SEED=<seed> PEERSDB_PROP_CASES=1 cargo test <name>`)
+//! that re-executes exactly the failing case. No shrinking — cases are
+//! kept small by construction instead.
 
 use crate::util::Rng;
 
@@ -35,7 +36,9 @@ pub fn check<T: std::fmt::Debug>(
         let case = gen(&mut rng);
         if let Err(msg) = prop(&case) {
             panic!(
-                "property '{name}' failed (case {i}, PEERSDB_PROP_SEED={seed}):\n  {msg}\n  case: {case:?}"
+                "property '{name}' failed (case {i}, PEERSDB_PROP_SEED={seed}):\n  \
+                 {msg}\n  case: {case:?}\n  \
+                 replay: PEERSDB_PROP_SEED={seed} PEERSDB_PROP_CASES=1 cargo test {name}"
             );
         }
     }

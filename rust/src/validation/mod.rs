@@ -136,6 +136,32 @@ impl Validator for StatsValidator {
     }
 }
 
+/// Adversarial validator for fault-injection scenarios: computes the
+/// honest structural verdict, then *inverts* it — valid data is reported
+/// invalid and vice versa. Deterministic (so scenario replays are exact),
+/// and the worst case short of a colluding majority: every lie is
+/// maximally wrong.
+pub struct ByzantineValidator {
+    inner: StatsValidator,
+}
+
+impl Default for ByzantineValidator {
+    fn default() -> Self {
+        ByzantineValidator { inner: StatsValidator::default() }
+    }
+}
+
+impl Validator for ByzantineValidator {
+    fn validate(&mut self, data: &[u8]) -> (Verdict, f64) {
+        let (v, s) = self.inner.validate(data);
+        match v {
+            Verdict::Valid => (Verdict::Invalid, 1.0 - s),
+            Verdict::Invalid => (Verdict::Valid, 1.0 - s),
+            Verdict::Inconclusive => (Verdict::Inconclusive, s),
+        }
+    }
+}
+
 /// One queued local-validation work item.
 #[derive(Clone, Debug)]
 pub struct Task {
@@ -248,6 +274,19 @@ mod tests {
         let mut v = IdentityValidator;
         assert_eq!(v.validate(b"anything"), (Verdict::Valid, 1.0));
         assert_eq!(v.validate(b""), (Verdict::Valid, 1.0));
+    }
+
+    #[test]
+    fn byzantine_validator_inverts_honest_verdict() {
+        let mut rng = crate::util::Rng::new(5);
+        let (good, _) = crate::modeling::datagen::generate_contribution(&mut rng, 0, 40);
+        let (bad, _) = crate::modeling::datagen::generate_corrupt_contribution(&mut rng, 0, 40, 0.9);
+        let mut honest = StatsValidator::default();
+        let mut liar = ByzantineValidator::default();
+        assert_eq!(honest.validate(&good).0, Verdict::Valid);
+        assert_eq!(liar.validate(&good).0, Verdict::Invalid);
+        assert_eq!(honest.validate(&bad).0, Verdict::Invalid);
+        assert_eq!(liar.validate(&bad).0, Verdict::Valid);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use crate::net::PeerId;
 use crate::stores::documents::Verdict;
 use crate::util::time::{Duration, Nanos};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 #[derive(Clone, Debug)]
 pub struct QuorumConfig {
@@ -25,6 +25,13 @@ pub struct QuorumConfig {
     pub agreement: f64,
     /// Give up waiting after this long and fall back to local validation.
     pub timeout: Duration,
+    /// Minimum verdict-carrying responses a *timeout* tally may decide
+    /// on (the non-timeout path always waits for `responses_needed`).
+    /// The default of 1 keeps the prototype's eager behaviour; raising
+    /// it to 2 makes a single byzantine responder unable to sneak a lie
+    /// through a sparsely-answered vote (with `agreement` > 0.5, one
+    /// honest verdict then always blocks the lie).
+    pub min_force_verdicts: usize,
 }
 
 impl Default for QuorumConfig {
@@ -34,6 +41,7 @@ impl Default for QuorumConfig {
             responses_needed: 3,
             agreement: 2.0 / 3.0,
             timeout: Duration::from_secs(5),
+            min_force_verdicts: 1,
         }
     }
 }
@@ -52,12 +60,15 @@ pub enum VoteOutcome {
 pub struct VoteState {
     pub started_at: Nanos,
     asked: Vec<PeerId>,
-    answers: HashMap<PeerId, Option<(Verdict, f64)>>,
+    /// Keyed deterministically: tallies (and their float means) must not
+    /// depend on map iteration order — the simulator's reproducibility
+    /// guarantee reaches down to here.
+    answers: BTreeMap<PeerId, Option<(Verdict, f64)>>,
 }
 
 impl VoteState {
     pub fn new(started_at: Nanos, asked: Vec<PeerId>) -> Self {
-        VoteState { started_at, asked, answers: HashMap::new() }
+        VoteState { started_at, asked, answers: BTreeMap::new() }
     }
 
     pub fn asked(&self) -> &[PeerId] {
@@ -87,11 +98,12 @@ impl VoteState {
             if verdicts.len() < cfg.responses_needed {
                 return None;
             }
-        } else if verdicts.is_empty() {
+        } else if verdicts.len() < cfg.min_force_verdicts.max(1) {
             return Some(VoteOutcome::Inconclusive { responses: self.responses() });
         }
-        // Majority verdict.
-        let mut counts: HashMap<u8, usize> = HashMap::new();
+        // Majority verdict. BTreeMap keeps ties deterministic (the last
+        // maximum in key order wins).
+        let mut counts: BTreeMap<u8, usize> = BTreeMap::new();
         for (v, _) in &verdicts {
             *counts.entry(*v as u8).or_insert(0) += 1;
         }
@@ -180,6 +192,21 @@ mod tests {
         v.record(stranger, Some((Verdict::Invalid, 0.0)));
         assert_eq!(v.responses(), 0);
         assert!(v.tally(&cfg, false).is_none());
+    }
+
+    #[test]
+    fn min_force_verdicts_blocks_lone_answer() {
+        let cfg = QuorumConfig { min_force_verdicts: 2, ..Default::default() };
+        let ps = peers(5);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        v.record(ps[0], Some((Verdict::Invalid, 0.0))); // a lone (possibly lying) voice
+        let out = v.tally(&cfg, true).unwrap();
+        assert!(matches!(out, VoteOutcome::Inconclusive { .. }));
+        // A second verdict satisfies the floor; a 1-1 split still fails
+        // the agreement threshold, so no lie can be adopted.
+        v.record(ps[1], Some((Verdict::Valid, 1.0)));
+        let out = v.tally(&cfg, true).unwrap();
+        assert!(matches!(out, VoteOutcome::Inconclusive { .. }));
     }
 
     #[test]

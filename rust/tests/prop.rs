@@ -3,9 +3,10 @@
 //! state machines, chunker integrity, and simulator determinism.
 
 use peersdb::bitswap;
-use peersdb::blockstore::{chunker, BlockStore};
+use peersdb::blockstore::{chunker, BlockStore, Pin};
 use peersdb::cid::{Cid, Codec};
 use peersdb::codec::json::Json;
+use peersdb::dht::kbucket::{KBucket, RoutingTable, K};
 use peersdb::dht::{self, Key};
 use peersdb::ipfs_log::Log;
 use peersdb::net::PeerId;
@@ -34,7 +35,7 @@ struct History {
 #[test]
 fn prop_log_replicas_converge() {
     check_with_rng(
-        "log-convergence",
+        "log_replicas_converge",
         |r| History {
             replicas: r.range(2, 5),
             ops: (0..r.range(5, 40)).map(|_| (r.range(0, 100), r.range(0, 1000))).collect(),
@@ -97,11 +98,11 @@ fn prop_log_replicas_converge() {
 #[test]
 fn prop_routing_table_closest_is_correct() {
     check_with_rng(
-        "kademlia-closest",
+        "routing_table_closest",
         |r| (r.range(1, 200), r.range(1, 25)),
         |(n_peers, k), rng| {
             let own = Key(rng.bytes32());
-            let mut rt = peersdb::dht::kbucket::RoutingTable::new(own);
+            let mut rt = RoutingTable::new(own);
             let mut inserted = Vec::new();
             for _ in 0..*n_peers {
                 let p = PeerId::from_rng(rng);
@@ -122,6 +123,85 @@ fn prop_routing_table_closest_is_correct() {
             brute.truncate(*k);
             if got != brute {
                 return Err("closest() != brute force".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// k-buckets: capacity, LRU eviction order, no self-insertion, placement
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kbucket_lru_eviction_and_capacity() {
+    check_with_rng(
+        "kbucket_lru",
+        |r| r.range(1, 120),
+        |n_ops, rng| {
+            let pool: Vec<PeerId> = (0..2 * K).map(|_| PeerId::from_rng(rng)).collect();
+            let mut b = KBucket::default();
+            let mut t = 0u64;
+            for _ in 0..*n_ops {
+                t += 1 + rng.gen_range(5); // strictly increasing → no LRU ties
+                let p = pool[rng.range(0, pool.len())];
+                if rng.chance(0.15) {
+                    b.remove(&p);
+                    if b.contains(&p) {
+                        return Err("removed contact still present".into());
+                    }
+                    continue;
+                }
+                let evicting = b.len() == K && !b.contains(&p);
+                let victim = if evicting { b.stalest() } else { None };
+                b.touch(p, peersdb::util::time::Nanos(t));
+                if !b.contains(&p) {
+                    return Err("touched contact missing".into());
+                }
+                if b.len() > K {
+                    return Err(format!("bucket over capacity: {}", b.len()));
+                }
+                if let Some(v) = victim {
+                    if b.contains(&v) {
+                        return Err("full bucket evicted someone other than the stalest".into());
+                    }
+                    if b.len() != K {
+                        return Err("eviction changed the bucket size".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_routing_table_structural_invariants() {
+    check_with_rng(
+        "routing_table_structural",
+        |r| (r.range(1, 300), r.range(0, 40)),
+        |(touches, removes), rng| {
+            let me = PeerId::from_rng(rng);
+            let mut rt = RoutingTable::new(Key::from_peer(me));
+            let mut known = vec![me]; // the own id is touched too — it must never stick
+            for i in 0..*touches {
+                let p = if rng.chance(0.3) {
+                    known[rng.range(0, known.len())]
+                } else {
+                    let p = PeerId::from_rng(rng);
+                    known.push(p);
+                    p
+                };
+                rt.touch(p, Nanos(i as u64));
+            }
+            for _ in 0..*removes {
+                rt.remove(&known[rng.range(0, known.len())]);
+            }
+            // Capacity, placement (each contact in the bucket its XOR
+            // distance to `me` selects), uniqueness, no self-insertion.
+            rt.check_invariants()?;
+            if rt.contains(&me) {
+                return Err("own id present in routing table".into());
             }
             Ok(())
         },
@@ -190,7 +270,7 @@ fn random_message(rng: &mut Rng) -> Message {
 #[test]
 fn prop_wire_messages_roundtrip() {
     check_with_rng(
-        "wire-roundtrip",
+        "wire_messages_roundtrip",
         |_| (),
         |_, rng| {
             let msg = random_message(rng);
@@ -230,7 +310,7 @@ fn random_json(rng: &mut Rng, depth: usize) -> Json {
 #[test]
 fn prop_json_roundtrip() {
     check_with_rng(
-        "json-roundtrip",
+        "json_roundtrip",
         |_| (),
         |_, rng| {
             let v = random_json(rng, 0);
@@ -251,7 +331,7 @@ fn prop_json_roundtrip() {
 #[test]
 fn prop_chunker_roundtrip_and_has_file() {
     check_with_rng(
-        "chunker-roundtrip",
+        "chunker_roundtrip",
         |r| r.range(0, 3 * chunker::CHUNK_SIZE + 17),
         |size, rng| {
             let mut bs = BlockStore::new();
@@ -277,6 +357,39 @@ fn prop_chunker_roundtrip_and_has_file() {
     );
 }
 
+#[test]
+fn prop_chunker_detects_any_missing_chunk() {
+    check_with_rng(
+        "chunker_detects_any_missing_chunk",
+        |r| r.range(chunker::CHUNK_SIZE + 1, 4 * chunker::CHUNK_SIZE),
+        |size, rng| {
+            let mut bs = BlockStore::new();
+            let mut data = vec![0u8; *size];
+            rng.fill_bytes(&mut data);
+            let res = chunker::add_file(&mut bs, &data);
+            if res.blocks.len() < 3 {
+                return Err("multi-chunk file expected".into());
+            }
+            // Drop one random chunk (never the manifest root) by pinning
+            // everything else and collecting garbage.
+            let drop_idx = 1 + rng.range(0, res.blocks.len() - 1);
+            for (i, b) in res.blocks.iter().enumerate() {
+                if i != drop_idx {
+                    bs.pin(b, Pin::Local);
+                }
+            }
+            bs.gc();
+            if chunker::has_file(&bs, &res.root) {
+                return Err("has_file despite a missing chunk".into());
+            }
+            if chunker::get_file(&bs, &res.root).is_some() {
+                return Err("get_file reassembled a file with a hole".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Quorum: decisions always satisfy the agreement threshold
 // ---------------------------------------------------------------------------
@@ -284,7 +397,7 @@ fn prop_chunker_roundtrip_and_has_file() {
 #[test]
 fn prop_quorum_decisions_meet_agreement() {
     check_with_rng(
-        "quorum-agreement",
+        "quorum_decisions",
         |r| (r.range(1, 8), r.range(1, 8), r.f64_range(0.5, 1.0)),
         |(fanout, needed, agreement), rng| {
             let cfg = QuorumConfig {
@@ -292,6 +405,7 @@ fn prop_quorum_decisions_meet_agreement() {
                 responses_needed: *needed,
                 agreement: *agreement,
                 timeout: Duration::from_secs(5),
+                min_force_verdicts: 1,
             };
             let peers: Vec<PeerId> = (0..*fanout).map(|_| PeerId::from_rng(rng)).collect();
             let mut vote = VoteState::new(Nanos(0), peers.clone());
@@ -331,7 +445,7 @@ fn prop_quorum_decisions_meet_agreement() {
 #[test]
 fn prop_batch_queue_conserves_tasks() {
     check_with_rng(
-        "batch-conservation",
+        "batch_queue_conserves",
         |r| (r.range(1, 20), r.range(1, 50)),
         |(batch_size, n_tasks), rng| {
             let mut q = BatchQueue::new(*batch_size);
@@ -397,7 +511,7 @@ fn prop_sim_runs_are_deterministic() {
     use peersdb::sim::regions::ALL;
 
     check(
-        "sim-determinism",
+        "sim_runs_are_deterministic",
         |r| (r.next_u64(), r.range(3, 6)),
         |(seed, n)| {
             let run = || {
@@ -447,7 +561,7 @@ fn prop_convergence_under_loss() {
     use peersdb::sim::regions::ALL;
 
     check(
-        "loss-convergence",
+        "convergence_under_loss",
         |r| (r.next_u64(), r.f64_range(0.0, 0.10)),
         |(seed, loss)| {
             let specs: Vec<PeerSpec> = (0..4)

@@ -1,7 +1,11 @@
 //! End-to-end runtime tests: AOT artifacts → PJRT → train/predict/score.
 //!
 //! Requires `make artifacts` (skips gracefully when missing so plain
-//! `cargo test` works before the first build).
+//! `cargo test` works before the first build) and the `pjrt` feature
+//! (PJRT via the external `xla` crate, absent from the offline crate
+//! set) — the whole file is compiled out otherwise.
+
+#![cfg(feature = "pjrt")]
 
 use peersdb::modeling::datagen::{generate_contribution, parse_contribution};
 use peersdb::modeling::features::{encode_batch, DIM};
