@@ -30,10 +30,14 @@ fn main() {
     });
 
     // --- codec ---
+    let payload = peersdb::util::Blob::from(data_9k.clone());
+    bench_ns("blob: clone 9 KB payload (refcount bump)", 2_000_000, || {
+        std::hint::black_box(payload.clone());
+    });
     let msg = Message::Bitswap(peersdb::bitswap::Msg::Block {
         req_id: 42,
         cid: Cid::of_raw(b"x"),
-        data: data_9k.clone(),
+        data: payload.clone(),
     });
     bench_ns("codec: encode 9 KB bitswap block msg", 50_000, || {
         std::hint::black_box(peersdb::codec::to_bytes(&msg));
@@ -42,7 +46,7 @@ fn main() {
     bench_ns("codec: decode 9 KB bitswap block msg", 50_000, || {
         std::hint::black_box(peersdb::codec::from_bytes::<Message>(&encoded).unwrap());
     });
-    bench_ns("codec: wire_size estimate (O(1) path)", 1_000_000, || {
+    bench_ns("codec: exact wire_size (O(1) path)", 1_000_000, || {
         std::hint::black_box(WireSize::wire_size(&msg));
     });
 

@@ -1,0 +1,88 @@
+//! Self-timing DES throughput baseline over the named scenario bank.
+//!
+//! Runs every scenario in `peersdb::sim::bank` (the seven fault
+//! scenarios plus the 100-peer multi-region scale-out) in this process,
+//! measuring wall time and events/second, and emits the results as
+//! `BENCH_sim.json` — the machine-readable perf-trajectory artifact CI
+//! uploads on every run. Each record also carries the run's `SimStats`
+//! checksum: because scenario runs are deterministic, the checksum is a
+//! behavioral fingerprint — comparing two artifacts tells you whether a
+//! change moved *performance* (events/sec) or *behavior* (checksum),
+//! which is the cross-version half of the replay-determinism guard.
+
+use peersdb::codec::Json;
+use peersdb::sim::bank;
+use peersdb::sim::scenario;
+use peersdb::util::bench::{print_environment, Table};
+
+fn main() {
+    print_environment("SIM SCALE: DES THROUGHPUT BASELINE (perf trajectory)");
+    println!(
+        "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves)\n",
+        bank::all().len()
+    );
+
+    let mut table = Table::new(&[
+        "scenario", "peers", "events", "wall ms", "Kevents/s", "virtual s", "stats checksum",
+    ]);
+    let mut records: Vec<Json> = Vec::new();
+    let mut total_events = 0u64;
+    let mut total_wall = 0.0f64;
+
+    for sc in bank::all() {
+        let name = sc.name;
+        let t0 = std::time::Instant::now();
+        let report = match scenario::run(&sc) {
+            Ok(r) => r,
+            Err(e) => panic!("bank scenario '{name}' failed invariants: {e}"),
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let events = report.stats.events_processed;
+        let eps = events as f64 / wall.max(1e-9);
+        let checksum = format!("{:016x}", report.stats.checksum());
+        total_events += events;
+        total_wall += wall;
+
+        table.row(&[
+            name.to_string(),
+            report.peers.to_string(),
+            events.to_string(),
+            format!("{:.0}", wall * 1e3),
+            format!("{:.0}", eps / 1e3),
+            format!("{:.0}", report.end.as_secs_f64()),
+            checksum.clone(),
+        ]);
+        records.push(
+            Json::obj()
+                .set("name", name)
+                .set("peers", report.peers)
+                .set("contributions", report.contributions)
+                .set("events_processed", events)
+                .set("msgs_sent", report.stats.msgs_sent)
+                .set("bytes_sent", report.stats.bytes_sent)
+                .set("wall_ms", wall * 1e3)
+                .set("events_per_sec", eps)
+                .set("virtual_secs", report.end.as_secs_f64())
+                .set("stats_checksum", checksum),
+        );
+    }
+    table.print();
+    println!(
+        "aggregate: {} events in {:.2}s wall  →  {:.0} Kevents/s",
+        total_events,
+        total_wall,
+        total_events as f64 / total_wall.max(1e-9) / 1e3
+    );
+
+    let doc = Json::obj()
+        .set("bench", "sim_scale")
+        .set("version", env!("CARGO_PKG_VERSION"))
+        .set(
+            "aggregate_events_per_sec",
+            total_events as f64 / total_wall.max(1e-9),
+        )
+        .set("scenarios", Json::Arr(records));
+    std::fs::write("BENCH_sim.json", doc.pretty()).expect("write BENCH_sim.json");
+    println!("wrote BENCH_sim.json");
+    println!("sim_scale OK");
+}

@@ -13,18 +13,21 @@
 //! latency, bandwidth, churn).
 
 use crate::cid::Cid;
-use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
-use crate::net::PeerId;
+use crate::codec::bin::{bytes_len, varint_len, Decode, DecodeError, Encode, Reader, Writer};
+use crate::net::{PeerId, WireSize};
 use crate::util::time::{Duration, Nanos};
+use crate::util::Blob;
 use std::collections::{BTreeMap, HashMap};
 
-/// Bitswap wire messages.
+/// Bitswap wire messages. Block payloads are refcounted [`Blob`]s: the
+/// serving node moves its stored allocation onto the wire and the
+/// fetching node stores the same allocation — zero payload copies.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Request the block `cid`.
     Want { req_id: u64, cid: Cid },
     /// The requested block.
-    Block { req_id: u64, cid: Cid, data: Vec<u8> },
+    Block { req_id: u64, cid: Cid, data: Blob },
     /// Peer does not have (or will not serve) the block.
     DontHave { req_id: u64, cid: Cid },
 }
@@ -59,7 +62,7 @@ impl Decode for Msg {
             1 => Msg::Block {
                 req_id: r.get_varint()?,
                 cid: Cid::decode(r)?,
-                data: r.get_bytes()?.to_vec(),
+                data: Blob::decode(r)?,
             },
             2 => Msg::DontHave { req_id: r.get_varint()?, cid: Cid::decode(r)? },
             _ => return Err(DecodeError("bad bitswap tag")),
@@ -67,12 +70,14 @@ impl Decode for Msg {
     }
 }
 
-impl Msg {
-    /// O(1) wire-size estimate (block payload dominates).
-    pub fn size_estimate(&self) -> usize {
+impl WireSize for Msg {
+    /// Exact encoded length in O(1): tag + varint req_id + 33-byte CID
+    /// (+ length-prefixed payload for `Block`). Property-tested against
+    /// the real encoding in `tests/prop.rs`.
+    fn wire_size(&self) -> usize {
         match self {
-            Msg::Want { .. } | Msg::DontHave { .. } => 1 + 9 + 33,
-            Msg::Block { data, .. } => 1 + 9 + 33 + 5 + data.len(),
+            Msg::Want { req_id, .. } | Msg::DontHave { req_id, .. } => 1 + varint_len(*req_id) + 33,
+            Msg::Block { req_id, data, .. } => 1 + varint_len(*req_id) + 33 + bytes_len(data.len()),
         }
     }
 }
@@ -85,8 +90,9 @@ pub struct FetchId(pub u64);
 /// Completion events drained by the owner.
 #[derive(Clone, Debug)]
 pub enum BitswapEvent {
-    /// Block received and verified.
-    Fetched { id: FetchId, cid: Cid, data: Vec<u8>, from: PeerId },
+    /// Block received and verified (the payload is the wire allocation,
+    /// shared — not copied — into the event).
+    Fetched { id: FetchId, cid: Cid, data: Blob, from: PeerId },
     /// All candidates exhausted without success.
     Exhausted { id: FetchId, cid: Cid },
 }
@@ -292,10 +298,10 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    fn setup() -> (Engine, Vec<PeerId>, Cid, Vec<u8>) {
+    fn setup() -> (Engine, Vec<PeerId>, Cid, Blob) {
         let mut rng = Rng::new(1);
         let peers: Vec<PeerId> = (0..4).map(|_| PeerId::from_rng(&mut rng)).collect();
-        let data = b"performance trace".to_vec();
+        let data = Blob::from(&b"performance trace"[..]);
         let cid = Cid::of_raw(&data);
         (Engine::new(BitswapConfig::default()), peers, cid, data)
     }
@@ -310,7 +316,7 @@ mod tests {
         ] {
             let b = crate::codec::to_bytes(&m);
             assert_eq!(crate::codec::from_bytes::<Msg>(&b).unwrap(), m);
-            assert!(m.size_estimate() >= b.len());
+            assert_eq!(m.wire_size(), b.len(), "wire_size must be exact");
         }
     }
 
@@ -330,13 +336,25 @@ mod tests {
     }
 
     #[test]
+    fn fetched_event_shares_wire_allocation() {
+        let (mut e, peers, cid, data) = setup();
+        let mut out = Sends::new();
+        e.fetch(Nanos(0), cid, peers.clone(), &mut out);
+        let (to, Msg::Want { req_id, .. }) = out[0].clone() else { panic!() };
+        e.on_msg(Nanos(1), to, Msg::Block { req_id, cid, data: data.clone() }, &mut out);
+        let Some(BitswapEvent::Fetched { data: got, .. }) = e.events.pop() else { panic!() };
+        // Wire payload → event without a byte copy.
+        assert!(Blob::ptr_eq(&got, &data));
+    }
+
+    #[test]
     fn tampered_block_rejected_and_rotates() {
         let (mut e, peers, cid, data) = setup();
         let mut out = Sends::new();
         e.fetch(Nanos(0), cid, peers.clone(), &mut out);
         let (to, Msg::Want { req_id, .. }) = out[0].clone() else { panic!() };
         out.clear();
-        e.on_msg(Nanos(1), to, Msg::Block { req_id, cid, data: b"EVIL".to_vec() }, &mut out);
+        e.on_msg(Nanos(1), to, Msg::Block { req_id, cid, data: b"EVIL".to_vec().into() }, &mut out);
         assert_eq!(e.tamper_detected, 1);
         // Rotated to candidate #3 (spray refilled).
         assert_eq!(out.len(), 1);

@@ -55,7 +55,7 @@ pub struct AddResult {
 /// Add a file to the blockstore, chunking when necessary.
 pub fn add_file(bs: &mut BlockStore, data: &[u8]) -> AddResult {
     if data.len() <= CHUNK_SIZE {
-        let root = bs.put(Codec::Raw, data.to_vec());
+        let root = bs.put(Codec::Raw, data);
         return AddResult {
             root,
             blocks: vec![root],
@@ -63,7 +63,7 @@ pub fn add_file(bs: &mut BlockStore, data: &[u8]) -> AddResult {
     }
     let mut chunks = Vec::new();
     for chunk in data.chunks(CHUNK_SIZE) {
-        chunks.push(bs.put(Codec::Raw, chunk.to_vec()));
+        chunks.push(bs.put(Codec::Raw, chunk));
     }
     let manifest = Manifest {
         total_len: data.len() as u64,

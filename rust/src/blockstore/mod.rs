@@ -11,7 +11,9 @@
 pub mod chunker;
 
 use crate::cid::{Cid, Codec};
-use std::collections::{BTreeSet, HashMap};
+use crate::util::{Blob, FxHashMap};
+use std::collections::hash_map::Entry;
+use std::collections::BTreeSet;
 
 /// Why a block is pinned.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,7 +26,9 @@ pub enum Pin {
 
 #[derive(Clone, Debug)]
 struct BlockMeta {
-    data: Vec<u8>,
+    /// Shared with every protocol layer currently holding this block —
+    /// see [`crate::util::bytes`] for the ownership model.
+    data: Blob,
     pin: Option<Pin>,
     /// True if the block must not be served to remote peers (§III-B
     /// "a middleware can be employed that denies external CID requests").
@@ -38,7 +42,7 @@ struct BlockMeta {
 /// a disk-backed implementation would expose.
 #[derive(Default)]
 pub struct BlockStore {
-    blocks: HashMap<Cid, BlockMeta>,
+    blocks: FxHashMap<Cid, BlockMeta>,
     bytes_stored: usize,
 }
 
@@ -47,45 +51,54 @@ impl BlockStore {
         Self::default()
     }
 
-    /// Insert a block, returning its CID. Idempotent (deduplicating).
-    pub fn put(&mut self, codec: Codec, data: Vec<u8>) -> Cid {
-        let cid = Cid::of(codec, &data);
-        if !self.blocks.contains_key(&cid) {
+    /// Single-lookup deduplicating insert shared by every `put` flavor.
+    fn insert_new(&mut self, cid: Cid, data: Blob) {
+        if let Entry::Vacant(slot) = self.blocks.entry(cid) {
             self.bytes_stored += data.len();
-            self.blocks.insert(
-                cid,
-                BlockMeta {
-                    data,
-                    pin: None,
-                    private: false,
-                },
-            );
+            slot.insert(BlockMeta {
+                data,
+                pin: None,
+                private: false,
+            });
         }
+    }
+
+    /// Insert a block, returning its CID. Idempotent (deduplicating).
+    /// The content is hashed exactly once, by `Cid::of`.
+    pub fn put(&mut self, codec: Codec, data: impl Into<Blob>) -> Cid {
+        let data = data.into();
+        let cid = Cid::of(codec, &data);
+        self.insert_new(cid, data);
         cid
     }
 
-    /// Insert a block under a CID already known to match (verified fetch).
-    /// Returns `false` if verification fails.
-    pub fn put_verified(&mut self, cid: Cid, data: Vec<u8>) -> bool {
+    /// Insert a block under a claimed CID, verifying the content against
+    /// it. Returns `false` (and stores nothing) if verification fails.
+    pub fn put_verified(&mut self, cid: Cid, data: impl Into<Blob>) -> bool {
+        let data = data.into();
         if !cid.verifies(&data) {
             return false;
         }
-        if !self.blocks.contains_key(&cid) {
-            self.bytes_stored += data.len();
-            self.blocks.insert(
-                cid,
-                BlockMeta {
-                    data,
-                    pin: None,
-                    private: false,
-                },
-            );
-        }
+        self.insert_new(cid, data);
         true
     }
 
+    /// Insert a block whose content the *caller* has already verified
+    /// against `cid` (the bitswap engine checks every received block
+    /// before surfacing it). Skips the redundant re-hash so a fetched
+    /// block is hashed once per transfer, not twice.
+    pub fn put_trusted(&mut self, cid: Cid, data: Blob) {
+        debug_assert!(cid.verifies(&data), "put_trusted with unverified content");
+        self.insert_new(cid, data);
+    }
+
     pub fn get(&self, cid: &Cid) -> Option<&[u8]> {
-        self.blocks.get(cid).map(|b| b.data.as_slice())
+        self.blocks.get(cid).map(|b| &b.data[..])
+    }
+
+    /// Refcounted handle to a block's bytes (O(1), no copy).
+    pub fn get_blob(&self, cid: &Cid) -> Option<Blob> {
+        self.blocks.get(cid).map(|b| b.data.clone())
     }
 
     pub fn has(&self, cid: &Cid) -> bool {
@@ -169,7 +182,16 @@ impl BlockStore {
     /// access-control middleware of §III-B.
     pub fn get_public(&self, cid: &Cid) -> Option<&[u8]> {
         match self.blocks.get(cid) {
-            Some(b) if !b.private => Some(b.data.as_slice()),
+            Some(b) if !b.private => Some(&b.data[..]),
+            _ => None,
+        }
+    }
+
+    /// [`BlockStore::get_public`], but returning a refcounted handle the
+    /// bitswap server can move straight onto the wire without copying.
+    pub fn get_public_blob(&self, cid: &Cid) -> Option<Blob> {
+        match self.blocks.get(cid) {
+            Some(b) if !b.private => Some(b.data.clone()),
             _ => None,
         }
     }
@@ -230,6 +252,20 @@ mod tests {
         assert!(bs.get_public(&c).is_none()); // remote access denied
         bs.set_private(&c, false);
         assert!(bs.get_public(&c).is_some());
+    }
+
+    #[test]
+    fn put_trusted_shares_the_allocation() {
+        use crate::util::Blob;
+        let mut bs = BlockStore::new();
+        let data = Blob::from(&b"verified upstream"[..]);
+        let cid = Cid::of_raw(&data);
+        bs.put_trusted(cid, data.clone());
+        assert!(bs.has(&cid));
+        // The store holds the same allocation, not a copy.
+        let held = bs.get_blob(&cid).unwrap();
+        assert!(Blob::ptr_eq(&held, &data));
+        assert_eq!(bs.bytes_stored(), data.len());
     }
 
     #[test]

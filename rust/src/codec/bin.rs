@@ -189,6 +189,26 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Exact encoded length of an unsigned LEB128 varint — the arithmetic
+/// twin of [`Writer::put_varint`], used by the O(1) `WireSize`
+/// implementations so the simulator's bandwidth model never has to
+/// encode a message just to measure it.
+#[inline]
+pub fn varint_len(v: u64) -> usize {
+    if v == 0 {
+        1
+    } else {
+        (64 - v.leading_zeros() as usize + 6) / 7
+    }
+}
+
+/// Exact encoded length of a length-prefixed byte string
+/// ([`Writer::put_bytes`]).
+#[inline]
+pub fn bytes_len(n: usize) -> usize {
+    varint_len(n as u64) + n
+}
+
 /// Types encodable to the canonical binary format.
 pub trait Encode {
     fn encode(&self, w: &mut Writer);
@@ -358,6 +378,18 @@ mod tests {
             let b = to_bytes(&v);
             assert_eq!(from_bytes::<u64>(&b).unwrap(), v);
         }
+    }
+
+    #[test]
+    fn varint_len_matches_encoding() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, 300, u32::MAX as u64, u64::MAX] {
+            let mut w = Writer::new();
+            w.put_varint(v);
+            assert_eq!(varint_len(v), w.len(), "varint_len({v})");
+        }
+        assert_eq!(bytes_len(0), 1);
+        assert_eq!(bytes_len(127), 128);
+        assert_eq!(bytes_len(128), 130);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 pub mod bin;
 pub mod json;
 
-pub use bin::{Decode, Encode, Reader, Writer};
+pub use bin::{bytes_len, varint_len, Decode, Encode, Reader, Writer};
 pub use json::Json;
 
 /// Encode any `Encode` value to a fresh buffer.

@@ -6,10 +6,10 @@
 //! message. Completed lookups surface as [`DhtEvent`]s drained by the
 //! owner after each call.
 
-use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use crate::codec::bin::{varint_len, Decode, DecodeError, Encode, Reader, Writer};
 use crate::dht::kbucket::{RoutingTable, K};
 use crate::dht::key::Key;
-use crate::net::PeerId;
+use crate::net::{PeerId, WireSize};
 use crate::util::time::{Duration, Nanos};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
@@ -85,6 +85,31 @@ impl Decode for Rpc {
             6 => Rpc::AddProvider { key: Key::decode(r)?, provider: PeerId::decode(r)? },
             _ => return Err(DecodeError("bad dht rpc tag")),
         })
+    }
+}
+
+impl WireSize for Rpc {
+    /// Exact encoded length in O(1): tag + varint req_id, 32-byte keys
+    /// and peer ids, varint-prefixed peer lists. Property-tested against
+    /// the real encoding in `tests/prop.rs`.
+    fn wire_size(&self) -> usize {
+        match self {
+            Rpc::Ping { req_id } | Rpc::Pong { req_id } => 1 + varint_len(*req_id),
+            Rpc::FindNode { req_id, .. } | Rpc::GetProviders { req_id, .. } => {
+                1 + varint_len(*req_id) + 32
+            }
+            Rpc::FindNodeReply { req_id, closer } => {
+                1 + varint_len(*req_id) + varint_len(closer.len() as u64) + closer.len() * 32
+            }
+            Rpc::GetProvidersReply { req_id, providers, closer } => {
+                1 + varint_len(*req_id)
+                    + varint_len(providers.len() as u64)
+                    + providers.len() * 32
+                    + varint_len(closer.len() as u64)
+                    + closer.len() * 32
+            }
+            Rpc::AddProvider { .. } => 1 + 32 + 32,
+        }
     }
 }
 

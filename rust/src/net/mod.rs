@@ -59,9 +59,14 @@ impl Decode for PeerId {
     }
 }
 
-/// Wire-size estimation, used by the simulator's bandwidth model. The
-/// default encodes the message; hot message types override with an O(1)
-/// computation.
+/// Wire-size computation, used by the simulator's bandwidth model on
+/// every simulated send. All protocol messages (dht, bitswap, pubsub,
+/// peersdb) override with an O(1) computation that is *exact* — equal to
+/// the encoded length, property-tested in `tests/prop.rs` — so
+/// `Cluster::dispatch` never allocates a `Writer` and the bandwidth
+/// model charges precisely what the codec would emit. The default
+/// (encode and measure) remains as a correct-by-construction fallback
+/// for ad-hoc test runners.
 pub trait WireSize: Encode {
     fn wire_size(&self) -> usize {
         let mut w = Writer::new();
@@ -200,4 +205,8 @@ mod tests {
     }
 }
 
-impl WireSize for u64 {}
+impl WireSize for u64 {
+    fn wire_size(&self) -> usize {
+        crate::codec::bin::varint_len(*self)
+    }
+}

@@ -15,7 +15,7 @@ use crate::pubsub::{self, Topic};
 use crate::stores::documents::{ValidationRecord, ValidationsStore, Verdict};
 use crate::stores::{Contribution, ContributionsStore, KvStore, StoreAddress};
 use crate::util::time::{Duration, Nanos};
-use crate::util::Rng;
+use crate::util::{Blob, Rng};
 use crate::validation::{BatchQueue, CostModel, IdentityValidator, Task, Validator};
 use crate::validation::quorum::{QuorumConfig, VoteOutcome, VoteState};
 use std::collections::{BTreeMap, HashMap, HashSet};
@@ -497,17 +497,16 @@ impl Node {
         self.wrap_bitswap(sends, out);
     }
 
-    fn on_entry_fetched(&mut self, now: Nanos, cid: Cid, data: Vec<u8>, from: PeerId, out: &mut Outbox<Message>) {
+    fn on_entry_fetched(&mut self, now: Nanos, cid: Cid, data: Blob, from: PeerId, out: &mut Outbox<Message>) {
         self.entry_fetches.remove(&cid);
         let Ok(entry) = crate::codec::from_bytes::<Entry>(&data) else {
             self.metrics.inc("entry_decode_failures");
             return;
         };
-        // Store + pin the entry block so we can serve it onward.
-        if !self.bs.put_verified(cid, data) {
-            self.metrics.inc("entry_verify_failures");
-            return;
-        }
+        // Store + pin the entry block so we can serve it onward. The
+        // bitswap engine already verified the content against the CID,
+        // so the store can adopt the wire allocation as-is.
+        self.bs.put_trusted(cid, data);
         self.bs.pin(&cid, Pin::Replica);
         let parents = entry.next.clone();
         if self.contributions.join_entry(cid, entry) != Join::Added {
@@ -543,14 +542,12 @@ impl Node {
         now: Nanos,
         purpose: FetchPurpose,
         cid: Cid,
-        data: Vec<u8>,
+        data: Blob,
         from: PeerId,
         out: &mut Outbox<Message>,
     ) {
-        if !self.bs.put_verified(cid, data) {
-            self.metrics.inc("data_verify_failures");
-            return;
-        }
+        // Verified upstream by the bitswap engine; adopt the allocation.
+        self.bs.put_trusted(cid, data);
         self.bs.pin(&cid, Pin::Replica);
         match purpose {
             FetchPurpose::DataRoot { data_cid } => {
@@ -973,12 +970,13 @@ impl Runner for Node {
                 self.wrap_dht(sends, out);
             }
             Message::Bitswap(bitswap::Msg::Want { req_id, cid }) => {
-                // Server side: access-controlled blockstore read.
-                match self.bs.get_public(&cid) {
+                // Server side: access-controlled blockstore read. The
+                // reply carries the stored allocation by refcount — no
+                // payload copy between store and wire.
+                match self.bs.get_public_blob(&cid) {
                     Some(data) => {
                         self.metrics.inc("blocks_served");
                         self.metrics.add("bytes_served", data.len() as u64);
-                        let data = data.to_vec();
                         out.send(from, Message::Bitswap(bitswap::Msg::Block { req_id, cid, data }));
                     }
                     None => {

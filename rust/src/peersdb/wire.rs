@@ -4,7 +4,7 @@
 
 use crate::bitswap;
 use crate::cid::Cid;
-use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use crate::codec::bin::{varint_len, Decode, DecodeError, Encode, Reader, Writer};
 use crate::dht;
 use crate::net::{PeerId, WireSize};
 use crate::pubsub;
@@ -100,31 +100,40 @@ impl Decode for Message {
 }
 
 impl WireSize for Message {
+    /// *Exact* encoded length, O(1) for every variant — the simulator's
+    /// bandwidth model charges precisely the bytes the codec would emit,
+    /// and `Cluster::dispatch` never allocates a `Writer` to find out.
+    /// Exactness is property-tested in `tests/prop.rs`
+    /// (`prop_wire_size_is_exact`).
     fn wire_size(&self) -> usize {
-        // O(1) estimates for the high-volume variants; exact encoding for
-        // the rare control messages.
         match self {
-            Message::Bitswap(m) => 1 + m.size_estimate(),
-            Message::Pubsub(m) => 1 + m.size_estimate(),
-            Message::Dht(r) => 1 + dht_size_estimate(r),
-            other => {
-                let mut w = Writer::new();
-                other.encode(&mut w);
-                w.len()
+            Message::Dht(r) => 1 + r.wire_size(),
+            Message::Bitswap(m) => 1 + m.wire_size(),
+            Message::Pubsub(m) => 1 + m.wire_size(),
+            Message::Join { .. } => 1 + 32,
+            Message::JoinAck { peers, heads, .. } => {
+                1 + 1
+                    + varint_len(peers.len() as u64)
+                    + peers.len() * 32
+                    + varint_len(heads.len() as u64)
+                    + heads.len() * 33
+            }
+            Message::HeadsRequest => 1,
+            Message::HeadsReply { heads } => {
+                1 + varint_len(heads.len() as u64) + heads.len() * 33
+            }
+            Message::ValQuery { req_id, .. } => 1 + varint_len(*req_id) + 33,
+            Message::ValReply { req_id, record, .. } => {
+                1 + varint_len(*req_id) + 33 + 1 + record.as_ref().map_or(0, validation_record_len)
             }
         }
     }
 }
 
-fn dht_size_estimate(r: &dht::Rpc) -> usize {
-    use dht::Rpc::*;
-    match r {
-        Ping { .. } | Pong { .. } => 10,
-        FindNode { .. } | GetProviders { .. } => 10 + 32,
-        FindNodeReply { closer, .. } => 10 + 2 + closer.len() * 32,
-        GetProvidersReply { providers, closer, .. } => 10 + 4 + (providers.len() + closer.len()) * 32,
-        AddProvider { .. } => 1 + 32 + 32,
-    }
+/// Exact encoded length of a [`ValidationRecord`]: CID (33) + verdict
+/// byte + f64 score + validator id (32) + two varints.
+fn validation_record_len(r: &ValidationRecord) -> usize {
+    33 + 1 + 8 + 32 + varint_len(r.validated_at) + varint_len(r.cost_ns)
 }
 
 #[cfg(test)]
@@ -163,16 +172,18 @@ mod tests {
         for m in msgs {
             let b = crate::codec::to_bytes(&m);
             assert_eq!(crate::codec::from_bytes::<Message>(&b).unwrap(), m);
-            assert!(m.wire_size() >= b.len() || matches!(m, Message::Dht(_)), "estimate too small");
+            assert_eq!(m.wire_size(), b.len(), "wire_size must be exact for {m:?}");
         }
     }
 
     #[test]
-    fn wire_size_estimates_cover_encoding() {
+    fn wire_size_exact_for_large_block() {
         let cid = Cid::of_raw(b"block");
-        let m = Message::Bitswap(bitswap::Msg::Block { req_id: 1, cid, data: vec![0; 9000] });
-        let exact = crate::codec::to_bytes(&m).len();
-        let est = m.wire_size();
-        assert!(est >= exact && est < exact + 64, "est={est} exact={exact}");
+        let m = Message::Bitswap(bitswap::Msg::Block {
+            req_id: 1,
+            cid,
+            data: vec![0; 9000].into(),
+        });
+        assert_eq!(m.wire_size(), crate::codec::to_bytes(&m).len());
     }
 }

@@ -5,8 +5,8 @@
 //! their neighbors; published messages flood along subscribed links with
 //! a seen-cache for deduplication and a hop limit as a safety valve.
 
-use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
-use crate::net::PeerId;
+use crate::codec::bin::{bytes_len, varint_len, Decode, DecodeError, Encode, Reader, Writer};
+use crate::net::{PeerId, WireSize};
 use crate::util::time::{Duration, Nanos};
 use std::collections::{BTreeSet, HashMap};
 
@@ -85,11 +85,16 @@ impl Decode for Msg {
     }
 }
 
-impl Msg {
-    pub fn size_estimate(&self) -> usize {
+impl WireSize for Msg {
+    /// Exact encoded length in O(1) (topics are fixed 8-byte hashes;
+    /// `Publish` adds origin, varint seq, hop byte and the payload).
+    /// Property-tested against the real encoding in `tests/prop.rs`.
+    fn wire_size(&self) -> usize {
         match self {
-            Msg::Subscriptions { topics } => 2 + topics.len() * 8,
-            Msg::Publish { data, .. } => 1 + 8 + 32 + 9 + 1 + 5 + data.len(),
+            Msg::Subscriptions { topics } => 1 + varint_len(topics.len() as u64) + topics.len() * 8,
+            Msg::Publish { seq, data, .. } => {
+                1 + 8 + 32 + varint_len(*seq) + 1 + bytes_len(data.len())
+            }
         }
     }
 }
@@ -301,7 +306,7 @@ mod tests {
         };
         let b = crate::codec::to_bytes(&m);
         assert_eq!(crate::codec::from_bytes::<Msg>(&b).unwrap(), m);
-        assert!(m.size_estimate() >= b.len());
+        assert_eq!(m.wire_size(), b.len(), "wire_size must be exact");
     }
 
     #[test]

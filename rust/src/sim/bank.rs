@@ -1,0 +1,221 @@
+//! The named scenario bank, as library data.
+//!
+//! `tests/scenarios.rs` (assertions + replay checks) and
+//! `benches/sim_scale.rs` (the self-timing perf baseline that emits
+//! `BENCH_sim.json`) both consume the same definitions, so a scenario's
+//! shape can never drift between its correctness test and its perf
+//! measurement. Seeds and schedules are stable identifiers: changing one
+//! invalidates recorded `SimStats` checksums, which is exactly the
+//! signal the perf-trajectory artifact is meant to carry.
+
+use crate::peersdb::NodeConfig;
+use crate::sim::regions::Region;
+use crate::sim::scenario::{Fault, Scenario};
+use crate::util::time::Duration;
+use crate::validation::CostModel;
+
+/// 1. Network partition during active contribution traffic.
+pub fn partition_heal() -> Scenario {
+    let mut sc = Scenario::named("partition-heal", 101, 8);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 40 })
+        // Split the cluster down the middle, root on side A.
+        .at(5, Fault::Partition { a: vec![0, 1, 2, 3], b: vec![4, 5, 6, 7] })
+        // Both sides keep contributing while partitioned.
+        .at(7, Fault::Contribute { node: 2, workload: 1, rows: 40 })
+        .at(9, Fault::Contribute { node: 5, workload: 2, rows: 40 })
+        .at(11, Fault::Contribute { node: 6, workload: 3, rows: 40 })
+        // Mid-partition, safety invariants must still hold.
+        .at(20, Fault::Checkpoint)
+        .at(30, Fault::Heal)
+        .at(35, Fault::Contribute { node: 7, workload: 4, rows: 40 })
+}
+
+/// 2. Regional outage and recovery (EuropeWest3 hosts peers 1 and 7).
+pub fn regional_outage() -> Scenario {
+    let mut sc = Scenario::named("regional-outage", 202, 10);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(5, Fault::Outage { region: Region::EuropeWest3 })
+        // The rest of the world keeps publishing during the outage.
+        .at(8, Fault::Contribute { node: 2, workload: 1, rows: 30 })
+        .at(12, Fault::Contribute { node: 4, workload: 2, rows: 30 })
+        .at(20, Fault::Checkpoint)
+        .at(40, Fault::Recover { region: Region::EuropeWest3 })
+        .at(45, Fault::Contribute { node: 7, workload: 3, rows: 30 })
+}
+
+/// 3. Crash/restart churn while data flows.
+pub fn crash_churn() -> Scenario {
+    let mut sc = Scenario::named("crash-churn", 303, 8);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(2, Fault::Crash { node: 3 })
+        .at(4, Fault::Contribute { node: 2, workload: 1, rows: 30 })
+        .at(8, Fault::Crash { node: 5 })
+        .at(10, Fault::Contribute { node: 6, workload: 2, rows: 30 })
+        .at(14, Fault::Restart { node: 3 })
+        .at(16, Fault::Contribute { node: 3, workload: 3, rows: 30 })
+        .at(20, Fault::Crash { node: 1 })
+        .at(25, Fault::Restart { node: 5 })
+        .at(30, Fault::Checkpoint)
+        .at(35, Fault::Restart { node: 1 })
+        .at(40, Fault::Contribute { node: 7, workload: 4, rows: 30 })
+}
+
+/// 4. Flash-crowd join: the cluster doubles mid-run.
+pub fn flash_crowd() -> Scenario {
+    let mut sc = Scenario::named("flash-crowd", 404, 5);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(3, Fault::Contribute { node: 2, workload: 1, rows: 30 })
+        // Five newcomers join through the root at the same instant.
+        .at(10, Fault::FlashCrowd { n: 5, region: Region::UsWest1 })
+        // Traffic continues while they bootstrap.
+        .at(12, Fault::Contribute { node: 3, workload: 2, rows: 30 })
+        .at(30, Fault::Checkpoint)
+}
+
+/// 5a. The CPU-strain comparison baseline (same schedule, nominal CPU).
+pub fn cpu_nominal() -> Scenario {
+    cpu_schedule("cpu-nominal")
+}
+
+/// 5b. Root-peer CPU strain (the paper's §IV-A artifact, injected):
+/// the same schedule under a 5000× slowdown of the root's machine.
+pub fn cpu_strain() -> Scenario {
+    cpu_schedule("cpu-strain").at_ms(0, Fault::CpuStrain { node: 0, factor: 5000 })
+}
+
+fn cpu_schedule(name: &'static str) -> Scenario {
+    let mut sc = Scenario::named(name, 505, 8);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 60 })
+        .at(4, Fault::Contribute { node: 4, workload: 1, rows: 60 })
+        .at(8, Fault::Contribute { node: 6, workload: 2, rows: 60 })
+        .at(60, Fault::CpuRelief { node: 0 })
+}
+
+/// 6. Byzantine validator: a lying minority must not poison verdicts.
+pub fn byzantine_minority() -> Scenario {
+    let mut sc = Scenario::named("byzantine-minority", 606, 8);
+    sc.quiesce = Duration::from_secs(400);
+    sc.stats_validators = true;
+    sc.byzantine = vec![3];
+    sc.cfg = NodeConfig {
+        auto_validate: true,
+        cost_model: CostModel::Linear { base_ns: 2_000_000, ns_per_kb: 50_000.0 },
+        ..NodeConfig::default()
+    };
+    // With a verdict floor of 2 on timeout tallies and >50% agreement, a
+    // single liar can never push a wrong verdict through a vote.
+    sc.cfg.quorum.min_force_verdicts = 2;
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 60 })
+        .at(5, Fault::Contribute { node: 2, workload: 1, rows: 60 })
+        .at(10, Fault::ContributeCorrupt { node: 3, workload: 2, rows: 60, frac: 0.9 })
+        .at(15, Fault::Contribute { node: 5, workload: 3, rows: 60 })
+        .at(20, Fault::ContributeCorrupt { node: 6, workload: 4, rows: 60, frac: 0.9 })
+}
+
+/// 7. Kitchen sink: loss spike + flapping links + churn, one schedule.
+pub fn kitchen_sink() -> Scenario {
+    let mut sc = Scenario::named("kitchen-sink", 707, 9);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.at(0, Fault::SetLoss { loss: 0.05 })
+        .at(1, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(3, Fault::BlockPair { a: 2, b: 5 })
+        .at(5, Fault::Contribute { node: 5, workload: 1, rows: 30 })
+        .at(7, Fault::Crash { node: 4 })
+        .at(9, Fault::Contribute { node: 6, workload: 2, rows: 30 })
+        .at(11, Fault::UnblockPair { a: 2, b: 5 })
+        .at(13, Fault::BlockPair { a: 1, b: 8 })
+        .at(15, Fault::Restart { node: 4 })
+        .at(18, Fault::Contribute { node: 8, workload: 3, rows: 30 })
+        .at(25, Fault::Checkpoint)
+}
+
+/// 8. Multi-region scale-out — the ROADMAP's "paper experiment 2 at
+/// 10×": 25 initial peers rotated across all six GCP regions, then three
+/// staggered flash crowds of 25 (Oregon, Frankfurt, Hong Kong) land
+/// while contribution traffic continues, for 100 peers total. Bootstrap
+/// time per wave is the measurement; the standard invariant set (log
+/// convergence, quorum safety, routing health, availability ≥ 3) is the
+/// pass condition. This cluster size is what the zero-copy block plane
+/// and the allocation-free DES hot path exist for.
+pub fn multi_region_scale_out() -> Scenario {
+    let mut sc = Scenario::named("multi-region-scale-out", 909, 25);
+    sc.quiesce = Duration::from_secs(900);
+    sc.quiesce_poll = Duration::from_secs(10);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 20 })
+        .at(2, Fault::Contribute { node: 4, workload: 1, rows: 20 })
+        // Wave 1: nodes 25..50.
+        .at(5, Fault::FlashCrowd { n: 25, region: Region::UsWest1 })
+        .at(20, Fault::Contribute { node: 7, workload: 2, rows: 20 })
+        // Wave 2: nodes 50..75, with more history to sync.
+        .at(40, Fault::FlashCrowd { n: 25, region: Region::EuropeWest3 })
+        .at(55, Fault::Contribute { node: 10, workload: 3, rows: 20 })
+        // Wave 3: nodes 75..100.
+        .at(80, Fault::FlashCrowd { n: 25, region: Region::AsiaEast2 })
+        .at(95, Fault::Contribute { node: 13, workload: 4, rows: 20 })
+        .at(100, Fault::Contribute { node: 30, workload: 5, rows: 20 })
+        .at(110, Fault::Checkpoint)
+}
+
+/// Number of initial peers / flash-crowd wave size in
+/// [`multi_region_scale_out`] (the bootstrap-scaling assertions slice
+/// node indices by this).
+pub const SCALE_OUT_WAVE: usize = 25;
+
+/// Every replayable bank scenario, in canonical order: the seven
+/// original fault scenarios plus the multi-region scale-out headline.
+pub fn all() -> Vec<Scenario> {
+    vec![
+        partition_heal(),
+        regional_outage(),
+        crash_churn(),
+        flash_crowd(),
+        cpu_strain(),
+        byzantine_minority(),
+        kitchen_sink(),
+        multi_region_scale_out(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_names_and_seeds_are_unique() {
+        let bank = all();
+        let mut names: Vec<&str> = bank.iter().map(|s| s.name).collect();
+        let mut seeds: Vec<u64> = bank.iter().map(|s| s.seed).collect();
+        names.sort();
+        names.dedup();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(names.len(), bank.len(), "duplicate scenario name");
+        assert_eq!(seeds.len(), bank.len(), "duplicate scenario seed");
+    }
+
+    #[test]
+    fn scale_out_reaches_target_size() {
+        let sc = multi_region_scale_out();
+        let joins: usize = sc
+            .events
+            .iter()
+            .map(|e| match e.fault {
+                Fault::FlashCrowd { n, .. } => n,
+                _ => 0,
+            })
+            .sum();
+        assert!(sc.peers + joins >= 100, "scale-out must reach 100 peers");
+        assert_eq!(sc.peers, SCALE_OUT_WAVE);
+    }
+}

@@ -10,8 +10,8 @@ use crate::net::{Outbox, PeerId, Runner};
 use crate::sim::model::NetModel;
 use crate::sim::regions::Region;
 use crate::util::time::{Duration, Nanos};
-use crate::util::Rng;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use crate::util::{FxHashMap, FxHashSet, Rng};
+use std::collections::BinaryHeap;
 
 /// Aggregate transport statistics for a simulation run.
 ///
@@ -27,6 +27,31 @@ pub struct SimStats {
     pub bytes_sent: u64,
     pub events_processed: u64,
     pub timers_fired: u64,
+}
+
+impl SimStats {
+    /// FNV-1a digest over every counter — a compact fingerprint for
+    /// replay-determinism guards and the `BENCH_sim.json` trajectory
+    /// artifact (two runs of one scenario must produce equal checksums).
+    pub fn checksum(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in [
+            self.msgs_sent,
+            self.msgs_delivered,
+            self.msgs_dropped_offline,
+            self.msgs_dropped_blocked,
+            self.msgs_dropped_loss,
+            self.bytes_sent,
+            self.events_processed,
+            self.timers_fired,
+        ] {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
 }
 
 struct NodeSlot<R> {
@@ -77,19 +102,27 @@ impl<R: Runner> Ord for Queued<R> {
 /// A simulated cluster of runner nodes.
 pub struct Cluster<R: Runner> {
     nodes: Vec<NodeSlot<R>>,
-    index: HashMap<PeerId, usize>,
+    /// Sender-address resolution on every simulated send; FxHash over
+    /// the uniformly random ids keeps it cheap at hundreds of peers.
+    index: FxHashMap<PeerId, usize>,
     queue: BinaryHeap<Queued<R>>,
     now: Nanos,
     seq: u64,
     pub model: NetModel,
     rng: Rng,
     /// Directionally blocked links (fuzz / partition experiments).
-    blocked: HashSet<(usize, usize)>,
+    /// Empty outside fault windows — dispatch skips the probe entirely
+    /// then.
+    blocked: FxHashSet<(usize, usize)>,
     /// CPU availability per physical machine (pods share).
     machines: Vec<Nanos>,
     /// Per-machine CPU slowdown multipliers (≥ 1; scenario fault
     /// injection — models the root peer under strain).
     cpu_factor: Vec<u32>,
+    /// Reusable outbox: event handlers borrow it via `mem::take`, and
+    /// `dispatch` drains it, so the steady-state event loop performs no
+    /// per-event `Vec` allocations once the capacity has warmed up.
+    scratch: Outbox<R::Msg>,
     pub stats: SimStats,
 }
 
@@ -97,15 +130,16 @@ impl<R: Runner> Cluster<R> {
     pub fn new(model: NetModel, seed: u64) -> Self {
         Cluster {
             nodes: Vec::new(),
-            index: HashMap::new(),
+            index: FxHashMap::default(),
             queue: BinaryHeap::new(),
             now: Nanos::ZERO,
             seq: 0,
             model,
             rng: Rng::new(seed ^ 0x5157_0CA5_7E11_0DE5),
-            blocked: HashSet::new(),
+            blocked: FxHashSet::default(),
             machines: Vec::new(),
             cpu_factor: Vec::new(),
+            scratch: Outbox::new(),
             stats: SimStats::default(),
         }
     }
@@ -258,25 +292,30 @@ impl<R: Runner> Cluster<R> {
     /// resulting sends/timers through the network model. This is how
     /// experiment harnesses inject API calls (put/get/query).
     pub fn with_node<T>(&mut self, idx: usize, f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) -> T) -> T {
-        let mut out = Outbox::new();
+        let mut out = std::mem::take(&mut self.scratch);
         let now = self.now;
         let r = f(&mut self.nodes[idx].runner, now, &mut out);
-        self.dispatch(idx, out);
+        self.dispatch(idx, &mut out);
+        self.scratch = out;
         r
     }
 
     // ----- core loop ---------------------------------------------------------
 
-    fn dispatch(&mut self, from_idx: usize, out: Outbox<R::Msg>) {
+    /// Route everything a handler queued. Drains `out` (so the caller's
+    /// scratch buffer keeps its capacity for the next event) and charges
+    /// the bandwidth model via the O(1) `WireSize` — no serialization,
+    /// no allocation per send.
+    fn dispatch(&mut self, from_idx: usize, out: &mut Outbox<R::Msg>) {
         let from_online = self.nodes[from_idx].online;
         let from_id = self.nodes[from_idx].runner.id();
         let from_region = self.nodes[from_idx].region;
-        for (token, after) in out.timers {
+        for (token, after) in out.timers.drain(..) {
             let epoch = self.nodes[from_idx].epoch;
             let at = self.now + after;
             self.push(at, Ev::Timer { node: from_idx, epoch, token });
         }
-        for (to, msg) in out.sends {
+        for (to, msg) in out.sends.drain(..) {
             if !from_online {
                 self.stats.msgs_dropped_offline += 1;
                 continue;
@@ -295,7 +334,7 @@ impl<R: Runner> Cluster<R> {
                 self.push(at, Ev::Deliver { to: to_idx, epoch, from: from_id, msg });
                 continue;
             }
-            if self.blocked.contains(&(from_idx, to_idx)) {
+            if !self.blocked.is_empty() && self.blocked.contains(&(from_idx, to_idx)) {
                 self.stats.msgs_dropped_blocked += 1;
                 continue;
             }
@@ -330,9 +369,10 @@ impl<R: Runner> Cluster<R> {
                 if !slot.online || slot.epoch != epoch {
                     return true;
                 }
-                let mut out = Outbox::new();
+                let mut out = std::mem::take(&mut self.scratch);
                 slot.runner.on_start(self.now, &mut out);
-                self.dispatch(node, out);
+                self.dispatch(node, &mut out);
+                self.scratch = out;
             }
             Ev::Deliver { to, epoch, from, msg } => {
                 let slot = &mut self.nodes[to];
@@ -351,14 +391,15 @@ impl<R: Runner> Cluster<R> {
                 let done = begin + cost;
                 self.machines[machine] = done;
                 let slot = &mut self.nodes[to];
-                let mut out = Outbox::new();
+                let mut out = std::mem::take(&mut self.scratch);
                 slot.runner.on_message(done, from, msg, &mut out);
                 self.stats.msgs_delivered += 1;
                 // Outbound work is timestamped at processing completion.
                 let saved = self.now;
                 self.now = done;
-                self.dispatch(to, out);
+                self.dispatch(to, &mut out);
                 self.now = saved;
+                self.scratch = out;
             }
             Ev::Timer { node, epoch, token } => {
                 let slot = &mut self.nodes[node];
@@ -366,9 +407,10 @@ impl<R: Runner> Cluster<R> {
                     return true;
                 }
                 self.stats.timers_fired += 1;
-                let mut out = Outbox::new();
+                let mut out = std::mem::take(&mut self.scratch);
                 slot.runner.on_timer(self.now, token, &mut out);
-                self.dispatch(node, out);
+                self.dispatch(node, &mut out);
+                self.scratch = out;
             }
         }
         true
@@ -581,8 +623,17 @@ mod tests {
     }
 
     #[test]
-    fn wire_size_default_via_encode() {
+    fn wire_size_matches_varint_encoding() {
         assert_eq!(WireSize::wire_size(&300u64), 2); // varint
+        assert_eq!(WireSize::wire_size(&300u64), crate::codec::to_bytes(&300u64).len());
+    }
+
+    #[test]
+    fn sim_stats_checksum_distinguishes_runs() {
+        let a = SimStats { msgs_sent: 1, ..SimStats::default() };
+        let b = SimStats { msgs_sent: 2, ..SimStats::default() };
+        assert_eq!(a.checksum(), a.clone().checksum());
+        assert_ne!(a.checksum(), b.checksum());
     }
 
     #[test]

@@ -22,10 +22,13 @@
 //! routing-table health, block availability ≥ replication target)
 //! asserted at mid-run checkpoints and at quiesce. The same seed always
 //! reproduces the identical [`SimStats`], so every scenario doubles as a
-//! regression reproduction recipe; `tests/scenarios.rs` holds the named
-//! bank and `benches/sim_fuzz.rs` reuses the invariants under randomized
-//! link flapping.
+//! regression reproduction recipe. The named bank lives in [`bank`]
+//! (shared by `tests/scenarios.rs` and the self-timing
+//! `benches/sim_scale.rs`, which emits `BENCH_sim.json`);
+//! `benches/sim_fuzz.rs` reuses the invariants under randomized link
+//! flapping.
 
+pub mod bank;
 pub mod des;
 pub mod harness;
 pub mod model;

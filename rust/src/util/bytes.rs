@@ -1,0 +1,181 @@
+//! Refcounted immutable byte buffers — the zero-copy block plane.
+//!
+//! # Ownership model
+//!
+//! A [`Blob`] is an `Arc<[u8]>` newtype: one heap allocation, shared by
+//! reference count, never mutated after construction. That immutability
+//! is what makes sharing sound across the layers that handle block
+//! payloads:
+//!
+//! * the **blockstore** keeps a `Blob` per block (`BlockMeta.data`);
+//! * the **bitswap server** answers a `Want` by cloning the stored
+//!   `Blob` into `Msg::Block` — a refcount bump, not a byte copy;
+//! * the **simulated wire** moves the message (and thus the same
+//!   allocation) through the event queue;
+//! * the **fetching client** verifies the payload against its CID and
+//!   stores the very same allocation via `BlockStore::put_trusted`.
+//!
+//! A block is therefore copied into memory exactly once (at `put` /
+//! decode time) and hashed for verification exactly once per transfer,
+//! no matter how many protocol layers it crosses. Content addressing
+//! stays sound because nothing can mutate the shared bytes: a `Blob`
+//! hands out only `&[u8]`.
+//!
+//! Decoding from a real wire ([`Decode`]) necessarily copies once, from
+//! the receive buffer into a fresh allocation; everything after that is
+//! again by refcount. `Clone` is O(1); equality compares contents (with
+//! an identity fast path); [`Blob::ptr_eq`] observes sharing directly,
+//! which the zero-copy property tests use.
+
+use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
+use std::sync::Arc;
+
+/// Immutable, cheaply clonable byte buffer. See the module docs for the
+/// ownership model.
+#[derive(Clone)]
+pub struct Blob(Arc<[u8]>);
+
+impl Blob {
+    /// The empty blob (no allocation is shared, but none is needed).
+    pub fn empty() -> Blob {
+        Blob(Arc::from(&[][..]))
+    }
+
+    /// True when both handles share the same allocation (O(1) clones).
+    pub fn ptr_eq(a: &Blob, b: &Blob) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+}
+
+impl Default for Blob {
+    fn default() -> Self {
+        Blob::empty()
+    }
+}
+
+impl std::ops::Deref for Blob {
+    type Target = [u8];
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl AsRef<[u8]> for Blob {
+    #[inline]
+    fn as_ref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl From<Vec<u8>> for Blob {
+    fn from(v: Vec<u8>) -> Blob {
+        Blob(Arc::from(v))
+    }
+}
+
+impl From<&[u8]> for Blob {
+    fn from(s: &[u8]) -> Blob {
+        Blob(Arc::from(s))
+    }
+}
+
+impl<const N: usize> From<&[u8; N]> for Blob {
+    fn from(s: &[u8; N]) -> Blob {
+        Blob(Arc::from(&s[..]))
+    }
+}
+
+impl PartialEq for Blob {
+    fn eq(&self, other: &Blob) -> bool {
+        Blob::ptr_eq(self, other) || self[..] == other[..]
+    }
+}
+impl Eq for Blob {}
+
+impl PartialEq<[u8]> for Blob {
+    fn eq(&self, other: &[u8]) -> bool {
+        self[..] == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Blob {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Blob> for Vec<u8> {
+    fn eq(&self, other: &Blob) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl std::hash::Hash for Blob {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self[..].hash(state);
+    }
+}
+
+impl std::fmt::Debug for Blob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.len().min(8);
+        write!(f, "Blob({} B, {}…)", self.len(), crate::util::hex::encode(&self[..n]))
+    }
+}
+
+impl Encode for Blob {
+    fn encode(&self, w: &mut Writer) {
+        w.put_bytes(self);
+    }
+}
+
+impl Decode for Blob {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        // The one unavoidable copy: receive buffer → owned allocation.
+        Ok(Blob::from(r.get_bytes()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{from_bytes, to_bytes};
+
+    #[test]
+    fn clone_is_zero_copy() {
+        let b = Blob::from(b"shared payload".to_vec());
+        let c = b.clone();
+        assert!(Blob::ptr_eq(&b, &c));
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn equality_compares_contents() {
+        let a = Blob::from(&b"same"[..]);
+        let b = Blob::from(&b"same"[..]);
+        assert!(!Blob::ptr_eq(&a, &b));
+        assert_eq!(a, b);
+        assert_ne!(a, Blob::from(&b"diff"[..]));
+        assert_eq!(a, b"same".to_vec());
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        for data in [&b""[..], &b"x"[..], &[7u8; 300][..]] {
+            let blob = Blob::from(data);
+            let bytes = to_bytes(&blob);
+            let back: Blob = from_bytes(&bytes).unwrap();
+            assert_eq!(back, blob);
+        }
+    }
+
+    #[test]
+    fn derefs_as_slice() {
+        let b = Blob::from(&b"abc"[..]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(&b[1..], b"bc");
+        assert!(!b.is_empty());
+        assert!(Blob::empty().is_empty());
+    }
+}

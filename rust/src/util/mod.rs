@@ -6,11 +6,15 @@
 //! simulation experiments.
 
 pub mod bench;
+pub mod bytes;
+pub mod fxhash;
 pub mod hex;
 pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod time;
 
+pub use bytes::Blob;
+pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;
 pub use time::{Duration, Nanos};

@@ -4,7 +4,7 @@
 
 use peersdb::bitswap;
 use peersdb::blockstore::{chunker, BlockStore, Pin};
-use peersdb::cid::{Cid, Codec};
+use peersdb::cid::Cid;
 use peersdb::codec::json::Json;
 use peersdb::dht::kbucket::{KBucket, RoutingTable, K};
 use peersdb::dht::{self, Key};
@@ -216,40 +216,68 @@ fn random_cid(rng: &mut Rng) -> Cid {
     Cid::of_raw(&rng.bytes32())
 }
 
+fn random_peers(rng: &mut Rng, max: usize) -> Vec<PeerId> {
+    (0..rng.range(0, max)).map(|_| PeerId::from_rng(rng)).collect()
+}
+
+/// Every `Message` variant (and, through the first three arms, every
+/// dht/bitswap/pubsub sub-variant) with randomized field contents — the
+/// generator behind both the roundtrip and the wire-size-exactness
+/// properties, so a new message variant that misses either codec or
+/// `WireSize` is caught here.
 fn random_message(rng: &mut Rng) -> Message {
-    match rng.range(0, 9) {
-        0 => Message::Dht(dht::Rpc::FindNode { req_id: rng.next_u64() >> 1, target: Key(rng.bytes32()) }),
-        1 => Message::Dht(dht::Rpc::GetProvidersReply {
-            req_id: rng.next_u64() >> 1,
-            providers: (0..rng.range(0, 5)).map(|_| PeerId::from_rng(rng)).collect(),
-            closer: (0..rng.range(0, 5)).map(|_| PeerId::from_rng(rng)).collect(),
+    let req_id = rng.next_u64() >> 1;
+    match rng.range(0, 18) {
+        0 => Message::Dht(dht::Rpc::Ping { req_id }),
+        1 => Message::Dht(dht::Rpc::Pong { req_id }),
+        2 => Message::Dht(dht::Rpc::FindNode { req_id, target: Key(rng.bytes32()) }),
+        3 => Message::Dht(dht::Rpc::FindNodeReply { req_id, closer: random_peers(rng, 8) }),
+        4 => Message::Dht(dht::Rpc::GetProviders { req_id, key: Key(rng.bytes32()) }),
+        5 => Message::Dht(dht::Rpc::GetProvidersReply {
+            req_id,
+            providers: random_peers(rng, 5),
+            closer: random_peers(rng, 5),
         }),
-        2 => Message::Bitswap(bitswap::Msg::Block {
-            req_id: rng.next_u64() >> 1,
+        6 => Message::Dht(dht::Rpc::AddProvider {
+            key: Key(rng.bytes32()),
+            provider: PeerId::from_rng(rng),
+        }),
+        7 => Message::Bitswap(bitswap::Msg::Want { req_id, cid: random_cid(rng) }),
+        8 => Message::Bitswap(bitswap::Msg::Block {
+            req_id,
             cid: random_cid(rng),
             data: {
                 let mut v = vec![0u8; rng.range(0, 2000)];
                 rng.fill_bytes(&mut v);
-                v
+                v.into()
             },
         }),
-        3 => Message::Pubsub(pubsub::Msg::Publish {
+        9 => Message::Bitswap(bitswap::Msg::DontHave { req_id, cid: random_cid(rng) }),
+        10 => Message::Pubsub(pubsub::Msg::Subscriptions {
+            topics: (0..rng.range(0, 6)).map(|_| pubsub::Topic(rng.next_u64())).collect(),
+        }),
+        11 => Message::Pubsub(pubsub::Msg::Publish {
             topic: pubsub::Topic(rng.next_u64()),
             origin: PeerId::from_rng(rng),
             seq: rng.next_u64() >> 1,
             hops: rng.range(0, 16) as u8,
-            data: vec![1, 2, 3],
+            data: {
+                let mut v = vec![0u8; rng.range(0, 200)];
+                rng.fill_bytes(&mut v);
+                v
+            },
         }),
-        4 => Message::Join { passphrase: rng.bytes32() },
-        5 => Message::JoinAck {
+        12 => Message::Join { passphrase: rng.bytes32() },
+        13 => Message::JoinAck {
             accepted: rng.chance(0.5),
-            peers: (0..rng.range(0, 8)).map(|_| PeerId::from_rng(rng)).collect(),
+            peers: random_peers(rng, 8),
             heads: (0..rng.range(0, 8)).map(|_| random_cid(rng)).collect(),
         },
-        6 => Message::HeadsReply { heads: (0..rng.range(0, 10)).map(|_| random_cid(rng)).collect() },
-        7 => Message::ValQuery { req_id: rng.next_u64() >> 1, cid: random_cid(rng) },
+        14 => Message::HeadsRequest,
+        15 => Message::HeadsReply { heads: (0..rng.range(0, 10)).map(|_| random_cid(rng)).collect() },
+        16 => Message::ValQuery { req_id, cid: random_cid(rng) },
         _ => Message::ValReply {
-            req_id: rng.next_u64() >> 1,
+            req_id,
             cid: random_cid(rng),
             record: if rng.chance(0.5) {
                 Some(ValidationRecord {
@@ -280,9 +308,71 @@ fn prop_wire_messages_roundtrip() {
             if back != msg {
                 return Err("roundtrip mismatch".into());
             }
-            // wire_size estimate must dominate the exact encoding.
-            if peersdb::net::WireSize::wire_size(&msg) + 16 < bytes.len() {
-                return Err("wire_size underestimates".into());
+            Ok(())
+        },
+    );
+}
+
+/// The simulator's bandwidth model charges `wire_size()` bytes per send
+/// without encoding anything, so the O(1) computation must equal the
+/// encoded length *exactly* for every message shape — any drift after a
+/// format change silently skews every bandwidth figure the reproduction
+/// reports.
+#[test]
+fn prop_wire_size_is_exact() {
+    check_with_rng(
+        "wire_size_is_exact",
+        |_| (),
+        |_, rng| {
+            let msg = random_message(rng);
+            let exact = peersdb::codec::to_bytes(&msg).len();
+            let computed = peersdb::net::WireSize::wire_size(&msg);
+            if computed != exact {
+                return Err(format!("wire_size {computed} != encoded {exact} for {msg:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Blob: codec roundtrip and zero-copy clone/store semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_blob_codec_roundtrip_and_sharing() {
+    use peersdb::util::Blob;
+
+    check_with_rng(
+        "blob_codec_roundtrip",
+        |r| r.range(0, 4096),
+        |size, rng| {
+            let mut data = vec![0u8; *size];
+            rng.fill_bytes(&mut data);
+            let blob = Blob::from(data.clone());
+            if blob != data {
+                return Err("Blob construction changed contents".into());
+            }
+            // Codec roundtrip (one copy off the wire, then shared).
+            let bytes = peersdb::codec::to_bytes(&blob);
+            let back: Blob = peersdb::codec::from_bytes(&bytes)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if back != blob {
+                return Err("roundtrip mismatch".into());
+            }
+            // Clones alias the same allocation (the zero-copy property).
+            let clone = blob.clone();
+            if !Blob::ptr_eq(&clone, &blob) {
+                return Err("clone did not share the allocation".into());
+            }
+            // A blockstore round-trip through the verified-fetch path
+            // must adopt the allocation rather than copy it.
+            let mut bs = BlockStore::new();
+            let cid = Cid::of_raw(&blob);
+            bs.put_trusted(cid, blob.clone());
+            let held = bs.get_blob(&cid).ok_or("stored blob missing")?;
+            if !Blob::ptr_eq(&held, &blob) {
+                return Err("blockstore copied the payload".into());
             }
             Ok(())
         },
