@@ -39,9 +39,9 @@ fn main() -> anyhow::Result<()> {
         // A cluster where `sharing` peers contribute their (single-
         // workload) traces; peer 1 then assembles whatever replicated.
         let n = sharing + 2; // root + observers
-        let mut cluster = harness::paper_cluster(0xC0 + sharing as u64, n, Duration::from_millis(300), |_| {
-            NodeConfig::default()
-        });
+        let stagger = Duration::from_millis(300);
+        let mut cluster =
+            harness::paper_cluster(0xC0 + sharing as u64, n, stagger, |_| NodeConfig::default());
         cluster.run_for(Duration::from_secs(15));
         let mut rng = Rng::new(0xFEED + sharing as u64);
         for peer in 1..=sharing {
@@ -55,7 +55,8 @@ fn main() -> anyhow::Result<()> {
         cluster.run_for(Duration::from_secs(60));
         let rows = workflow::assemble_from_node(cluster.node(1), None, &[]);
         let mut rng2 = Rng::new(1);
-        let report = workflow::train_and_eval(&mut model, &rows, &test_rows, EPOCHS, 0.05, &mut rng2)?;
+        let report =
+            workflow::train_and_eval(&mut model, &rows, &test_rows, EPOCHS, 0.05, &mut rng2)?;
         table.row(&[
             sharing.to_string(),
             report.train_rows.to_string(),

@@ -115,7 +115,8 @@ fn main() {
         overall.max()
     );
     println!(
-        "transport totals: {} msgs delivered, {:.1} MiB sent; {:.1}s wall-clock for {:.0}s simulated",
+        "transport totals: {} msgs delivered, {:.1} MiB sent; \
+         {:.1}s wall-clock for {:.0}s simulated",
         cluster.stats.msgs_delivered,
         cluster.stats.bytes_sent as f64 / 1048576.0,
         wall,

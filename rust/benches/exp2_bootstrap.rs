@@ -102,7 +102,10 @@ fn main() {
     let slope = stats::slope(&xs, &ys);
     let first_q = ys[..ys.len() / 4].iter().sum::<f64>() / (ys.len() / 4) as f64;
     let last_q = ys[ys.len() * 3 / 4..].iter().sum::<f64>() / (ys.len() - ys.len() * 3 / 4) as f64;
-    println!("trend: slope {slope:+.4} s/join; first-quartile mean {first_q:.2}s vs last-quartile mean {last_q:.2}s");
+    println!(
+        "trend: slope {slope:+.4} s/join; first-quartile mean {first_q:.2}s \
+         vs last-quartile mean {last_q:.2}s"
+    );
 
     // Paper observation 2: a geographically nearby peer that already
     // holds the data speeds up joining — compare joins where the region

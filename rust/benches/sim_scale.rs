@@ -1,7 +1,8 @@
 //! Self-timing DES throughput baseline over the named scenario bank.
 //!
-//! Runs every scenario in `peersdb::sim::bank` (the seven fault
-//! scenarios plus the 100-peer multi-region scale-out) in this process,
+//! Runs every scenario in `peersdb::sim::bank` (the seven original
+//! fault scenarios, the 100-peer multi-region scale-out, the half-open
+//! asymmetric region, and the adversarial eclipse) in this process,
 //! measuring wall time and events/second, and emits the results as
 //! `BENCH_sim.json` — the machine-readable perf-trajectory artifact CI
 //! uploads on every run. Each record also carries the run's `SimStats`
@@ -18,7 +19,8 @@ use peersdb::util::bench::{print_environment, Table};
 fn main() {
     print_environment("SIM SCALE: DES THROUGHPUT BASELINE (perf trajectory)");
     println!(
-        "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves)\n",
+        "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves), \
+         asymmetric half-open region, and adversarial eclipse\n",
         bank::all().len()
     );
 

@@ -88,8 +88,8 @@ fn async_vs_blocking() {
                 ..Default::default()
             })
             .collect();
-        let mut cluster =
-            harness::build_cluster(0x51 + blocking as u64, NetModel::uniform(5.0, 1024.0, 0.0), specs);
+        let model = NetModel::uniform(5.0, 1024.0, 0.0);
+        let mut cluster = harness::build_cluster(0x51 + blocking as u64, model, specs);
         cluster.run_for(Duration::from_secs(5));
         // Node 1 receives a stream of contributions to validate...
         let mut rng = Rng::new(3);
@@ -129,7 +129,11 @@ fn async_vs_blocking() {
             let _ = i;
         }
         table.row(&[
-            if blocking { "blocking (ablation)".into() } else { "async (paper design)".to_string() },
+            if blocking {
+                "blocking (ablation)".into()
+            } else {
+                "async (paper design)".to_string()
+            },
             format!("{:.1}", lat.p50()),
             format!("{:.1}", lat.p95()),
             format!("{:.1}", lat.max()),

@@ -80,7 +80,8 @@ fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body:
         _ => "Internal Server Error",
     };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
     let _ = stream.write_all(head.as_bytes());
@@ -146,7 +147,8 @@ impl HttpServer {
                     match route(&req) {
                         Err(e) => write_response(&mut stream, 404, "text/plain", e.as_bytes()),
                         Ok(api_req) => {
-                            let resp = node.call_sync(move |n, now, out| dispatch(n, now, api_req, out));
+                            let resp =
+                                node.call_sync(move |n, now, out| dispatch(n, now, api_req, out));
                             match resp {
                                 ApiResponse::Json(j) => write_response(
                                     &mut stream,
@@ -193,10 +195,16 @@ pub fn http_post(addr: SocketAddr, path: &str, body: &[u8]) -> std::io::Result<(
     http_call(addr, "POST", path, body)
 }
 
-fn http_call(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+fn http_call(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)?;
     let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
     stream.write_all(req.as_bytes())?;

@@ -48,7 +48,12 @@ pub enum ApiResponse {
 
 /// Execute a request against the node. `now`/`out` come from the driver
 /// (timer wheel + transport), exactly like any other node callback.
-pub fn dispatch(node: &mut Node, now: Nanos, req: ApiRequest, out: &mut Outbox<Message>) -> ApiResponse {
+pub fn dispatch(
+    node: &mut Node,
+    now: Nanos,
+    req: ApiRequest,
+    out: &mut Outbox<Message>,
+) -> ApiResponse {
     match req {
         ApiRequest::Status => {
             let j = Json::obj()
@@ -159,7 +164,8 @@ mod tests {
         let r = dispatch(&mut n, Nanos(2), ApiRequest::GetFile { cid }, &mut out);
         assert_eq!(r, ApiResponse::Bytes(b"rows".to_vec()));
 
-        let r = dispatch(&mut n, Nanos(3), ApiRequest::Query { workload: Some("spark-sort".into()) }, &mut out);
+        let query = ApiRequest::Query { workload: Some("spark-sort".into()) };
+        let r = dispatch(&mut n, Nanos(3), query, &mut out);
         let ApiResponse::Json(j) = r else { panic!() };
         assert_eq!(j.path("contributions").unwrap().as_arr().unwrap().len(), 1);
     }

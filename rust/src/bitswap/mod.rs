@@ -161,7 +161,13 @@ impl Engine {
     }
 
     /// Start fetching `cid` from the given provider candidates.
-    pub fn fetch(&mut self, now: Nanos, cid: Cid, candidates: Vec<PeerId>, out: &mut Sends) -> FetchId {
+    pub fn fetch(
+        &mut self,
+        now: Nanos,
+        cid: Cid,
+        candidates: Vec<PeerId>,
+        out: &mut Sends,
+    ) -> FetchId {
         let id = FetchId(self.next_fetch);
         self.next_fetch += 1;
         self.fetches.insert(

@@ -207,6 +207,14 @@ pub struct Engine {
     /// RPC counters (for experiment metrics).
     pub rpcs_sent: u64,
     pub rpcs_timed_out: u64,
+    /// Adversarial wire-layer hook (eclipse-attack scenarios): when set,
+    /// every *served* `FindNodeReply`/`GetProvidersReply` lists exactly
+    /// these colluding peers instead of the honest routing-table view.
+    /// Client-side behaviour (lookups this engine runs) is unchanged —
+    /// the attacker lies to others, not to itself.
+    forge: Option<Vec<PeerId>>,
+    /// Replies whose contents were forged (attack-visibility metric).
+    pub replies_forged: u64,
 }
 
 /// Outgoing RPCs accumulate here; the node wraps them in its wire type.
@@ -226,6 +234,8 @@ impl Engine {
             events: Vec::new(),
             rpcs_sent: 0,
             rpcs_timed_out: 0,
+            forge: None,
+            replies_forged: 0,
         }
     }
 
@@ -233,7 +243,36 @@ impl Engine {
         self.own
     }
 
-    fn send(&mut self, to: PeerId, rpc: Rpc, lookup: Option<LookupId>, now: Nanos, out: &mut Sends) {
+    /// Install (or with `None` clear) the forged colluder set: while set,
+    /// every reply this engine serves to a `FindNode`/`GetProviders`
+    /// request claims the colluders are the closest peers / providers.
+    /// This is the byzantine wire-wrapping hook behind the
+    /// `adversarial-eclipse` scenario (`sim::bank`).
+    pub fn set_forgery(&mut self, colluders: Option<Vec<PeerId>>) {
+        self.forge = colluders;
+    }
+
+    /// Whether this engine currently forges its replies.
+    pub fn is_forging(&self) -> bool {
+        self.forge.is_some()
+    }
+
+    /// The forged peer list for a reply to `from`, if forging is active.
+    fn forged_peers(&mut self, from: PeerId) -> Option<Vec<PeerId>> {
+        let lie: Vec<PeerId> =
+            self.forge.as_ref()?.iter().copied().filter(|p| *p != from).collect();
+        self.replies_forged += 1;
+        Some(lie)
+    }
+
+    fn send(
+        &mut self,
+        to: PeerId,
+        rpc: Rpc,
+        lookup: Option<LookupId>,
+        now: Nanos,
+        out: &mut Sends,
+    ) {
         if let Some(req_id) = match &rpc {
             Rpc::Ping { req_id }
             | Rpc::FindNode { req_id, .. }
@@ -265,19 +304,31 @@ impl Engine {
                 self.pending.remove(&req_id);
             }
             Rpc::FindNode { req_id, target } => {
-                let mut closer = self.table.closest(&target, self.cfg.k);
-                closer.retain(|p| *p != from);
+                let closer = match self.forged_peers(from) {
+                    Some(lie) => lie,
+                    None => {
+                        let mut closer = self.table.closest(&target, self.cfg.k);
+                        closer.retain(|p| *p != from);
+                        closer
+                    }
+                };
                 out.push((from, Rpc::FindNodeReply { req_id, closer }));
             }
             Rpc::GetProviders { req_id, key } => {
                 self.expire_providers(now, &key);
-                let providers: Vec<PeerId> = self
-                    .providers
-                    .get(&key)
-                    .map(|m| m.keys().copied().collect())
-                    .unwrap_or_default();
-                let mut closer = self.table.closest(&key, self.cfg.k);
-                closer.retain(|p| *p != from);
+                let (providers, closer) = match self.forged_peers(from) {
+                    Some(lie) => (lie.clone(), lie),
+                    None => {
+                        let providers: Vec<PeerId> = self
+                            .providers
+                            .get(&key)
+                            .map(|m| m.keys().copied().collect())
+                            .unwrap_or_default();
+                        let mut closer = self.table.closest(&key, self.cfg.k);
+                        closer.retain(|p| *p != from);
+                        (providers, closer)
+                    }
+                };
                 out.push((from, Rpc::GetProvidersReply { req_id, providers, closer }));
             }
             Rpc::AddProvider { key, provider } => {
@@ -341,7 +392,13 @@ impl Engine {
         self.start_lookup(now, key, LookupKind::FindNode, out)
     }
 
-    fn start_lookup(&mut self, now: Nanos, target: Key, kind: LookupKind, out: &mut Sends) -> LookupId {
+    fn start_lookup(
+        &mut self,
+        now: Nanos,
+        target: Key,
+        kind: LookupKind,
+        out: &mut Sends,
+    ) -> LookupId {
         let id = LookupId(self.next_lookup);
         self.next_lookup += 1;
         let mut lk = Lookup {
@@ -510,7 +567,11 @@ mod tests {
     use crate::util::Rng;
 
     /// Drive a set of engines to quiescence by synchronously routing RPCs.
-    fn settle(engines: &mut HashMap<PeerId, Engine>, mut queue: Vec<(PeerId, PeerId, Rpc)>, now: Nanos) {
+    fn settle(
+        engines: &mut HashMap<PeerId, Engine>,
+        mut queue: Vec<(PeerId, PeerId, Rpc)>,
+        now: Nanos,
+    ) {
         let mut hops = 0;
         while let Some((from, to, rpc)) = queue.pop() {
             hops += 1;
@@ -638,7 +699,8 @@ mod tests {
         let mut rng = Rng::new(8);
         let own = PeerId::from_rng(&mut rng);
         let other = PeerId::from_rng(&mut rng);
-        let mut e = Engine::new(own, DhtConfig { provider_ttl: Duration::from_secs(10), ..Default::default() });
+        let cfg = DhtConfig { provider_ttl: Duration::from_secs(10), ..Default::default() };
+        let mut e = Engine::new(own, cfg);
         let key = Key(rng.bytes32());
         let mut out = Sends::new();
         e.on_rpc(Nanos(0), other, Rpc::AddProvider { key, provider: other }, &mut out);
@@ -649,6 +711,48 @@ mod tests {
         let (_, reply) = out.pop().unwrap();
         let Rpc::GetProvidersReply { providers, .. } = reply else { panic!() };
         assert!(providers.is_empty());
+    }
+
+    #[test]
+    fn forged_replies_substitute_peer_lists() {
+        let now = Nanos(0);
+        let (ids, mut engines) = mk_engines(6, 31);
+        mesh(&ids, &mut engines, now);
+        let attacker = ids[0];
+        let colluders = vec![ids[1], ids[2]];
+        engines.get_mut(&attacker).unwrap().set_forgery(Some(colluders.clone()));
+        let seeker = ids[5];
+        let mut rng = Rng::new(9);
+        let key = Key(rng.bytes32());
+        let mut out = Sends::new();
+        engines
+            .get_mut(&attacker)
+            .unwrap()
+            .on_rpc(now, seeker, Rpc::GetProviders { req_id: 1, key }, &mut out);
+        let (_, reply) = out.pop().unwrap();
+        let Rpc::GetProvidersReply { providers, closer, .. } = reply else { panic!() };
+        assert_eq!(providers, colluders, "forged providers");
+        assert_eq!(closer, colluders, "forged closer set");
+        // FindNode is forged too; a requesting colluder is filtered out.
+        let mut out = Sends::new();
+        engines
+            .get_mut(&attacker)
+            .unwrap()
+            .on_rpc(now, ids[1], Rpc::FindNode { req_id: 2, target: key }, &mut out);
+        let (_, reply) = out.pop().unwrap();
+        let Rpc::FindNodeReply { closer, .. } = reply else { panic!() };
+        assert_eq!(closer, vec![ids[2]]);
+        let e = engines.get_mut(&attacker).unwrap();
+        assert_eq!(e.replies_forged, 2);
+        // Clearing the forgery restores honest replies.
+        e.set_forgery(None);
+        assert!(!e.is_forging());
+        let mut out = Sends::new();
+        e.on_rpc(now, seeker, Rpc::FindNode { req_id: 3, target: key }, &mut out);
+        let (_, reply) = out.pop().unwrap();
+        let Rpc::FindNodeReply { closer, .. } = reply else { panic!() };
+        assert!(closer.len() > 2, "honest reply must reflect the real table");
+        assert_eq!(engines.get(&attacker).unwrap().replies_forged, 2);
     }
 
     #[test]

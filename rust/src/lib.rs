@@ -9,6 +9,10 @@
 //!
 //! ## Architecture
 //!
+//! `ARCHITECTURE.md` at the repository root maps every paper section to
+//! its module, inventories the fault-scenario bank, and documents the
+//! seed-replay workflow. The short version:
+//!
 //! The crate is organized around **sans-io protocol cores**: every
 //! protocol (Kademlia DHT, bitswap block exchange, IPFS-Log replication,
 //! pubsub, collaborative validation) is a deterministic state machine that

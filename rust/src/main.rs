@@ -121,12 +121,17 @@ fn cmd_demo(args: &peersdb::cli::Args) -> Result<(), String> {
         let wl = (i % 6) as u32;
         let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, wl, 80);
         let idx = 1 + (i % (peers - 1));
-        harness::contribute(&mut cluster, idx, &data, peersdb::modeling::datagen::WORKLOADS[wl as usize]);
+        let workload = peersdb::modeling::datagen::WORKLOADS[wl as usize];
+        harness::contribute(&mut cluster, idx, &data, workload);
         cluster.run_for(Duration::from_millis(700));
     }
     cluster.run_for(Duration::from_secs(60));
     harness::assert_converged(&mut cluster);
-    println!("\nall {} stores converged ({} contributions each)", peers, cluster.node(0).contributions.len());
+    println!(
+        "\nall {} stores converged ({} contributions each)",
+        peers,
+        cluster.node(0).contributions.len()
+    );
     let repl = cluster
         .node(1)
         .metrics
@@ -134,6 +139,10 @@ fn cmd_demo(args: &peersdb::cli::Args) -> Result<(), String> {
         .map(|s| s.mean())
         .unwrap_or(f64::NAN);
     println!("node-1 mean replication latency: {repl:.1} ms");
-    println!("transport: {} msgs, {:.1} MiB", cluster.stats.msgs_delivered, cluster.stats.bytes_sent as f64 / 1048576.0);
+    println!(
+        "transport: {} msgs, {:.1} MiB",
+        cluster.stats.msgs_delivered,
+        cluster.stats.bytes_sent as f64 / 1048576.0
+    );
     Ok(())
 }

@@ -138,7 +138,11 @@ pub fn parse_contribution(data: &[u8]) -> Option<Vec<TraceRow>> {
 /// Generate a realistic contribution: `n_rows` observations of one
 /// workload, gzip-encoded (sizes land near the paper's ≈9 KB average for
 /// n_rows ≈ 120).
-pub fn generate_contribution(rng: &mut Rng, workload_id: u32, n_rows: usize) -> (Vec<u8>, Vec<TraceRow>) {
+pub fn generate_contribution(
+    rng: &mut Rng,
+    workload_id: u32,
+    n_rows: usize,
+) -> (Vec<u8>, Vec<TraceRow>) {
     let rows: Vec<TraceRow> = (0..n_rows).map(|_| sample_row(rng, workload_id)).collect();
     (encode_contribution(workload_id, &rows), rows)
 }

@@ -29,7 +29,11 @@ use anyhow::Result;
 /// Assemble training rows from a node's replicated contributions
 /// (skipping any the validations store flags as invalid), joined with
 /// locally-held private files.
-pub fn assemble_from_node(node: &Node, workload: Option<&str>, private_cids: &[crate::cid::Cid]) -> Vec<TraceRow> {
+pub fn assemble_from_node(
+    node: &Node,
+    workload: Option<&str>,
+    private_cids: &[crate::cid::Cid],
+) -> Vec<TraceRow> {
     let mut rows = Vec::new();
     for c in node.query_contributions(|c| workload.map(|w| c.workload == w).unwrap_or(true)) {
         if node.verdict(&c.data_cid) == Some(Verdict::Invalid) {

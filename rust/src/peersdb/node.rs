@@ -359,6 +359,16 @@ impl Node {
         self.validator = v;
     }
 
+    /// Install (or with `None` clear) adversarial DHT reply forging:
+    /// while set, every `FindNodeReply`/`GetProvidersReply` this node
+    /// serves lists exactly `colluders` instead of its honest view. The
+    /// wire-wrapping hook behind `sim::scenario`'s eclipse faults; all
+    /// other protocol behaviour (replication, validation, pubsub) stays
+    /// honest.
+    pub fn set_dht_forgery(&mut self, colluders: Option<Vec<PeerId>>) {
+        self.dht.set_forgery(colluders);
+    }
+
     /// Ask a specific peer for its heads (anti-entropy).
     pub fn sync_with(&mut self, peer: PeerId, out: &mut Outbox<Message>) {
         out.send(peer, Message::HeadsRequest);
@@ -366,7 +376,13 @@ impl Node {
 
     /// Fetch an arbitrary block by CID (e.g. one whose CID was learned out
     /// of band). Replicated data lands in the blockstore as a root fetch.
-    pub fn fetch_cid(&mut self, now: Nanos, cid: Cid, candidates: Vec<PeerId>, out: &mut Outbox<Message>) {
+    pub fn fetch_cid(
+        &mut self,
+        now: Nanos,
+        cid: Cid,
+        candidates: Vec<PeerId>,
+        out: &mut Outbox<Message>,
+    ) {
         self.fetch_data(now, cid, candidates, out);
     }
 
@@ -419,7 +435,13 @@ impl Node {
     // ======================================================================
 
     /// Begin fetching a log entry we do not have.
-    fn fetch_entry(&mut self, now: Nanos, cid: Cid, candidates: Vec<PeerId>, out: &mut Outbox<Message>) {
+    fn fetch_entry(
+        &mut self,
+        now: Nanos,
+        cid: Cid,
+        candidates: Vec<PeerId>,
+        out: &mut Outbox<Message>,
+    ) {
         if self.contributions.contains_entry(&cid) || self.entry_fetches.contains_key(&cid) {
             return;
         }
@@ -432,7 +454,13 @@ impl Node {
     }
 
     /// Begin fetching a contribution's data file.
-    fn fetch_data(&mut self, now: Nanos, data_cid: Cid, candidates: Vec<PeerId>, out: &mut Outbox<Message>) {
+    fn fetch_data(
+        &mut self,
+        now: Nanos,
+        data_cid: Cid,
+        candidates: Vec<PeerId>,
+        out: &mut Outbox<Message>,
+    ) {
         if chunker::has_file(&self.bs, &data_cid) || self.data_fetches.contains_key(&data_cid) {
             return;
         }
@@ -455,7 +483,13 @@ impl Node {
     }
 
     /// Set up the chunk window for a file whose root block is local.
-    fn schedule_chunks(&mut self, now: Nanos, root: Cid, source: PeerId, out: &mut Outbox<Message>) {
+    fn schedule_chunks(
+        &mut self,
+        now: Nanos,
+        root: Cid,
+        source: PeerId,
+        out: &mut Outbox<Message>,
+    ) {
         let children = chunker::child_blocks(self.bs.get(&root).expect("root present"));
         let pending: Vec<Cid> = children.into_iter().filter(|c| !self.bs.has(c)).collect();
         if pending.is_empty() {
@@ -497,7 +531,14 @@ impl Node {
         self.wrap_bitswap(sends, out);
     }
 
-    fn on_entry_fetched(&mut self, now: Nanos, cid: Cid, data: Blob, from: PeerId, out: &mut Outbox<Message>) {
+    fn on_entry_fetched(
+        &mut self,
+        now: Nanos,
+        cid: Cid,
+        data: Blob,
+        from: PeerId,
+        out: &mut Outbox<Message>,
+    ) {
         self.entry_fetches.remove(&cid);
         let Ok(entry) = crate::codec::from_bytes::<Entry>(&data) else {
             self.metrics.inc("entry_decode_failures");
@@ -696,7 +737,15 @@ impl Node {
         self.events.push(NodeEvent::ValidationDone { data_cid, verdict, score, source });
     }
 
-    fn on_val_reply(&mut self, now: Nanos, from: PeerId, req_id: u64, cid: Cid, record: Option<ValidationRecord>, out: &mut Outbox<Message>) {
+    fn on_val_reply(
+        &mut self,
+        now: Nanos,
+        from: PeerId,
+        req_id: u64,
+        cid: Cid,
+        record: Option<ValidationRecord>,
+        out: &mut Outbox<Message>,
+    ) {
         if self.val_req_index.remove(&req_id).is_none() {
             return;
         }

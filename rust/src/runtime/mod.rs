@@ -63,8 +63,9 @@ impl PerfModel {
     /// `artifacts/`), then initialize parameters.
     pub fn load(dir: impl AsRef<Path>) -> Result<PerfModel> {
         let dir = dir.as_ref();
-        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
+        let meta_text = std::fs::read_to_string(dir.join("meta.json")).with_context(|| {
+            format!("reading {}/meta.json (run `make artifacts`)", dir.display())
+        })?;
         let meta_json =
             Json::parse(&meta_text).map_err(|e| anyhow!("parsing meta.json: {e}"))?;
         let meta = Meta::from_json(&meta_json)?;

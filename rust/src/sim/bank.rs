@@ -10,7 +10,7 @@
 
 use crate::peersdb::NodeConfig;
 use crate::sim::regions::Region;
-use crate::sim::scenario::{Fault, Scenario};
+use crate::sim::scenario::{EclipseInvariant, Fault, Scenario};
 use crate::util::time::Duration;
 use crate::validation::CostModel;
 
@@ -172,8 +172,107 @@ pub fn multi_region_scale_out() -> Scenario {
 /// node indices by this).
 pub const SCALE_OUT_WAVE: usize = 25;
 
+/// Core cluster size in [`asymmetric_region_halfopen`] (indices
+/// `0..HALFOPEN_CORE`; the root is index 0).
+pub const HALFOPEN_CORE: usize = 10;
+/// Size of the half-open region's flash crowd in
+/// [`asymmetric_region_halfopen`] (indices `HALFOPEN_CORE..`).
+pub const HALFOPEN_REGION: usize = 25;
+
+/// 9. Asymmetric region half-open — the directional-fault headline. A
+/// 25-peer region lands as one flash crowd and is *immediately* put
+/// behind a half-open NAT-style link: every joiner can reach the core
+/// (its `Join`s, RPCs, and announcements arrive), but nothing comes back
+/// — `JoinAck`s, DHT replies, and blocks from the core are all dropped
+/// on the directed core→region links. The symmetric `Partition` fault
+/// cannot express this: the root *sees* the whole region knocking the
+/// entire time. Bootstrap for the region stalls on join-retry until the
+/// link heals at t+60 s, after which every joiner must still converge —
+/// the bounded-staleness claim the test quantifies via `bootstrap_ms`.
+pub fn asymmetric_region_halfopen() -> Scenario {
+    let mut sc = Scenario::named("asymmetric-region-halfopen", 1111, HALFOPEN_CORE);
+    sc.quiesce = Duration::from_secs(900);
+    sc.quiesce_poll = Duration::from_secs(10);
+    let core: Vec<usize> = (0..HALFOPEN_CORE).collect();
+    let region: Vec<usize> = (HALFOPEN_CORE..HALFOPEN_CORE + HALFOPEN_REGION).collect();
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 20 })
+        // The region lands as one wave…
+        .at(5, Fault::FlashCrowd { n: HALFOPEN_REGION, region: Region::UsWest1 })
+        // …and the same instant goes half-open (declaration order breaks
+        // the tie, so the joiners exist when the fault applies): the
+        // region sees the core, the core cannot answer.
+        .at(5, Fault::AsymmetricPartition { a: region, b: core })
+        // The core keeps publishing while the region is stalled.
+        .at(10, Fault::Contribute { node: 2, workload: 1, rows: 20 })
+        .at(20, Fault::Checkpoint)
+        .at(30, Fault::Contribute { node: 4, workload: 2, rows: 20 })
+        .at(60, Fault::Heal)
+        // A freshly-admitted region peer contributes after the heal.
+        .at(70, Fault::Contribute { node: HALFOPEN_CORE + 2, workload: 3, rows: 20 })
+}
+
+/// Victim node index in [`adversarial_eclipse`].
+pub const ECLIPSE_VICTIM: usize = 1;
+/// Colluding attacker indices in [`adversarial_eclipse`].
+pub const ECLIPSE_ATTACKERS: [usize; 3] = [3, 6, 9];
+/// Virtual second (after warmup) at which [`adversarial_eclipse`] heals;
+/// everything scheduled earlier is the attack window (the detection test
+/// truncates the schedule here to show the invariant firing).
+pub const ECLIPSE_HEAL_SECS: u64 = 45;
+
+/// 10. Adversarial eclipse — the byzantine-wire headline. Three
+/// colluders forge every DHT reply they serve (`FindNodeReply` /
+/// `GetProvidersReply` list only each other) while an asymmetric
+/// partition makes the victim's honest RPCs time out (requests arrive,
+/// replies die). The timeouts evict every honest peer from the victim's
+/// routing table; only the always-answering colluders survive, so each
+/// lookup the victim starts is attacker-seeded — a full eclipse. After
+/// the heal the forging stops and honest lookups and announcements must
+/// repopulate the victim's view: the [`EclipseInvariant`] (victim's
+/// neighborhood view intersects the honest closest set) is asserted at
+/// quiesce, alongside the standard convergence/availability set. Probes
+/// the assumption, inherited from C3O-style collaborative optimization,
+/// that every participant can trust what the discovery layer tells it.
+pub fn adversarial_eclipse() -> Scenario {
+    let mut sc = Scenario::named("adversarial-eclipse", 1212, 12);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.invariants.eclipse = Some(EclipseInvariant {
+        victim: ECLIPSE_VICTIM,
+        attackers: ECLIPSE_ATTACKERS.to_vec(),
+    });
+    let colluders: Vec<usize> = ECLIPSE_ATTACKERS.to_vec();
+    let honest_world: Vec<usize> = (0..12)
+        .filter(|i| *i != ECLIPSE_VICTIM && !ECLIPSE_ATTACKERS.contains(i))
+        .collect();
+    let mut sc = sc.at(0, Fault::Contribute { node: 2, workload: 0, rows: 20 });
+    for &a in &ECLIPSE_ATTACKERS {
+        sc = sc.at(5, Fault::ForgeDhtReplies { node: a, colluders: colluders.clone() });
+    }
+    sc = sc
+        // The victim reaches the honest world, but no reply returns —
+        // every honest RPC it sends from here on times out.
+        .at(5, Fault::AsymmetricPartition { a: vec![ECLIPSE_VICTIM], b: honest_world })
+        // Victim activity drives the eviction: each provide-lookup
+        // queries its whole table, and the honest entries time out.
+        .at(8, Fault::Contribute { node: ECLIPSE_VICTIM, workload: 1, rows: 20 })
+        .at(25, Fault::Contribute { node: ECLIPSE_VICTIM, workload: 2, rows: 20 })
+        // Mid-attack, the *safety* invariants must still hold.
+        .at(40, Fault::Checkpoint)
+        .at(ECLIPSE_HEAL_SECS, Fault::Heal);
+    for &a in &ECLIPSE_ATTACKERS {
+        sc = sc.at(ECLIPSE_HEAL_SECS, Fault::StopForging { node: a });
+    }
+    // Honest traffic after the heal gives the victim's view a way back:
+    // provide-lookups query it (it answers, touching the requesters) and
+    // announcements let it fetch from honest authors.
+    sc.at(50, Fault::Contribute { node: 4, workload: 3, rows: 20 })
+        .at(55, Fault::Contribute { node: 7, workload: 4, rows: 20 })
+}
+
 /// Every replayable bank scenario, in canonical order: the seven
-/// original fault scenarios plus the multi-region scale-out headline.
+/// original fault scenarios, the multi-region scale-out headline, and
+/// the two directional-plane scenarios (half-open region, eclipse).
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -184,6 +283,8 @@ pub fn all() -> Vec<Scenario> {
         byzantine_minority(),
         kitchen_sink(),
         multi_region_scale_out(),
+        asymmetric_region_halfopen(),
+        adversarial_eclipse(),
     ]
 }
 
@@ -202,6 +303,59 @@ mod tests {
         seeds.dedup();
         assert_eq!(names.len(), bank.len(), "duplicate scenario name");
         assert_eq!(seeds.len(), bank.len(), "duplicate scenario seed");
+    }
+
+    #[test]
+    fn eclipse_shape_is_consistent() {
+        let sc = adversarial_eclipse();
+        let ec = sc.invariants.eclipse.as_ref().expect("eclipse invariant configured");
+        assert_eq!(ec.victim, ECLIPSE_VICTIM);
+        assert!(!ec.attackers.contains(&ec.victim), "victim cannot collude");
+        // Every forging fault names an attacker from the invariant's list,
+        // colludes only with attackers, and is healed before quiesce.
+        let mut forged = Vec::new();
+        let mut stopped = Vec::new();
+        for ev in &sc.events {
+            match &ev.fault {
+                Fault::ForgeDhtReplies { node, colluders } => {
+                    assert!(ec.attackers.contains(node));
+                    assert!(colluders.iter().all(|c| ec.attackers.contains(c)));
+                    forged.push(*node);
+                }
+                Fault::StopForging { node } => stopped.push(*node),
+                _ => {}
+            }
+        }
+        forged.sort();
+        stopped.sort();
+        assert_eq!(forged, ec.attackers.to_vec(), "all attackers forge");
+        assert_eq!(forged, stopped, "every forger is stopped before quiesce");
+    }
+
+    #[test]
+    fn halfopen_region_reaches_target_size() {
+        let sc = asymmetric_region_halfopen();
+        let joins: usize = sc
+            .events
+            .iter()
+            .map(|e| match e.fault {
+                Fault::FlashCrowd { n, .. } => n,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(sc.peers, HALFOPEN_CORE);
+        assert_eq!(joins, HALFOPEN_REGION);
+        // The asymmetric fault covers exactly region→core.
+        let asym = sc
+            .events
+            .iter()
+            .find_map(|e| match &e.fault {
+                Fault::AsymmetricPartition { a, b } => Some((a.clone(), b.clone())),
+                _ => None,
+            })
+            .expect("half-open fault present");
+        assert_eq!(asym.0, (HALFOPEN_CORE..HALFOPEN_CORE + HALFOPEN_REGION).collect::<Vec<_>>());
+        assert_eq!(asym.1, (0..HALFOPEN_CORE).collect::<Vec<_>>());
     }
 
     #[test]

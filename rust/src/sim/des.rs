@@ -5,12 +5,26 @@
 //! (messages queue behind one another), which is what reproduces the
 //! paper's observation that the root peer's CPU strain inflates
 //! replication maxima in its region.
+//!
+//! ## The directed link-state plane
+//!
+//! Connectivity faults are expressed per *directed* link: every
+//! `(src, dst)` node pair can carry a [`LinkState`] override — a
+//! `blocked` flag, a loss-probability override, and a latency
+//! multiplier — consulted on every dispatch. Symmetric faults
+//! ([`Cluster::block_pair`]) are just the two directed entries, which is
+//! what lets scenarios express *asymmetric* partitions (A reaches B, B
+//! cannot reach A — the half-open NAT-style failure of a region that can
+//! dial out but not be dialed) and per-link slow/lossy paths. The table
+//! is FxHash-keyed and default-empty: outside fault windows the dispatch
+//! hot path pays a single `is_empty()` branch, preserving the
+//! allocation-free fast path the 100-peer scale-out scenario relies on.
 
 use crate::net::{Outbox, PeerId, Runner};
 use crate::sim::model::NetModel;
 use crate::sim::regions::Region;
 use crate::util::time::{Duration, Nanos};
-use crate::util::{FxHashMap, FxHashSet, Rng};
+use crate::util::{FxHashMap, Rng};
 use std::collections::BinaryHeap;
 
 /// Aggregate transport statistics for a simulation run.
@@ -51,6 +65,34 @@ impl SimStats {
             }
         }
         h
+    }
+}
+
+/// Per-directed-link override consulted on every simulated send from
+/// `src` to `dst`. Absence of an entry means the nominal [`NetModel`]
+/// applies; a default-valued entry is indistinguishable from absence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkState {
+    /// Messages on this directed link are silently dropped.
+    pub blocked: bool,
+    /// Loss probability for this link, overriding [`NetModel::loss`].
+    pub loss: Option<f64>,
+    /// Multiplier applied to the sampled propagation latency (1.0 =
+    /// nominal). Values > 1 model a slow link; exactly 1.0 is a no-op on
+    /// the sampled value (property-tested in `tests/prop.rs`).
+    pub latency_factor: f64,
+}
+
+impl Default for LinkState {
+    fn default() -> Self {
+        LinkState { blocked: false, loss: None, latency_factor: 1.0 }
+    }
+}
+
+impl LinkState {
+    /// True when the entry carries no override and can be pruned.
+    fn is_default(&self) -> bool {
+        !self.blocked && self.loss.is_none() && self.latency_factor == 1.0
     }
 }
 
@@ -110,10 +152,10 @@ pub struct Cluster<R: Runner> {
     seq: u64,
     pub model: NetModel,
     rng: Rng,
-    /// Directionally blocked links (fuzz / partition experiments).
-    /// Empty outside fault windows — dispatch skips the probe entirely
-    /// then.
-    blocked: FxHashSet<(usize, usize)>,
+    /// The directed link-state plane: per-(src, dst) overrides (blocked
+    /// flag, loss override, latency multiplier). Empty outside fault
+    /// windows — dispatch skips the probe entirely then.
+    links: FxHashMap<(usize, usize), LinkState>,
     /// CPU availability per physical machine (pods share).
     machines: Vec<Nanos>,
     /// Per-machine CPU slowdown multipliers (≥ 1; scenario fault
@@ -136,7 +178,7 @@ impl<R: Runner> Cluster<R> {
             seq: 0,
             model,
             rng: Rng::new(seed ^ 0x5157_0CA5_7E11_0DE5),
-            blocked: FxHashSet::default(),
+            links: FxHashMap::default(),
             machines: Vec::new(),
             cpu_factor: Vec::new(),
             scratch: Outbox::new(),
@@ -246,15 +288,36 @@ impl<R: Runner> Cluster<R> {
         }
     }
 
-    /// Block the directed link a→b (messages silently dropped).
+    fn link_entry(&mut self, a: usize, b: usize) -> &mut LinkState {
+        self.links.entry((a, b)).or_default()
+    }
+
+    /// Drop the (a, b) entry again if it no longer carries an override,
+    /// so the hot path's `is_empty()` fast-out recovers after heals.
+    fn prune_link(&mut self, a: usize, b: usize) {
+        if self.links.get(&(a, b)).is_some_and(|l| l.is_default()) {
+            self.links.remove(&(a, b));
+        }
+    }
+
+    /// Block the directed link a→b (messages silently dropped). The
+    /// reverse direction b→a is unaffected — this is the primitive
+    /// behind asymmetric partitions.
     pub fn block_link(&mut self, a: usize, b: usize) {
-        self.blocked.insert((a, b));
+        self.link_entry(a, b).blocked = true;
     }
 
+    /// Unblock the directed link a→b (other overrides are kept).
     pub fn unblock_link(&mut self, a: usize, b: usize) {
-        self.blocked.remove(&(a, b));
+        if let Some(l) = self.links.get_mut(&(a, b)) {
+            l.blocked = false;
+        }
+        self.prune_link(a, b);
     }
 
+    /// Block both directions of the a↔b link (symmetric partition
+    /// building block; equivalent to two [`Cluster::block_link`] calls —
+    /// property-tested in `tests/prop.rs`).
     pub fn block_pair(&mut self, a: usize, b: usize) {
         self.block_link(a, b);
         self.block_link(b, a);
@@ -265,9 +328,47 @@ impl<R: Runner> Cluster<R> {
         self.unblock_link(b, a);
     }
 
-    /// Heal every blocked link at once (scenario quiesce).
+    /// Override the loss probability of the directed link a→b (`None`
+    /// restores the cluster-wide [`NetModel::loss`]).
+    pub fn set_link_loss(&mut self, a: usize, b: usize, loss: Option<f64>) {
+        self.link_entry(a, b).loss = loss.map(|p| p.clamp(0.0, 1.0));
+        self.prune_link(a, b);
+    }
+
+    /// Scale the sampled propagation latency of the directed link a→b by
+    /// `factor` (1.0 = nominal). This call never prunes, so an
+    /// explicitly-set unit factor exercises the probe path — but a unit
+    /// factor *is* the no-override state, and the entry is dropped by
+    /// the next heal touching this link ([`Cluster::unblock_link`],
+    /// [`Cluster::unblock_all`], [`Cluster::reset_links`]).
+    pub fn set_link_latency_factor(&mut self, a: usize, b: usize, factor: f64) {
+        self.link_entry(a, b).latency_factor = factor.max(0.0);
+    }
+
+    /// Current override state of the directed link a→b (default if none).
+    pub fn link_state(&self, a: usize, b: usize) -> LinkState {
+        self.links.get(&(a, b)).copied().unwrap_or_default()
+    }
+
+    /// Number of directed links carrying any override (diagnostics).
+    pub fn overridden_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Heal every *blocked* link at once (scenario heal). Loss and
+    /// latency overrides survive — use [`Cluster::reset_links`] to
+    /// restore the entire plane.
     pub fn unblock_all(&mut self) {
-        self.blocked.clear();
+        for l in self.links.values_mut() {
+            l.blocked = false;
+        }
+        self.links.retain(|_, l| !l.is_default());
+    }
+
+    /// Restore the entire link-state plane to nominal: unblocks every
+    /// link and drops all loss/latency overrides (scenario teardown).
+    pub fn reset_links(&mut self) {
+        self.links.clear();
     }
 
     /// Slow a machine's CPU by an integral factor (1 = nominal). Models
@@ -291,7 +392,11 @@ impl<R: Runner> Cluster<R> {
     /// Invoke a closure against a node's runner *now*, routing any
     /// resulting sends/timers through the network model. This is how
     /// experiment harnesses inject API calls (put/get/query).
-    pub fn with_node<T>(&mut self, idx: usize, f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) -> T) -> T {
+    pub fn with_node<T>(
+        &mut self,
+        idx: usize,
+        f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) -> T,
+    ) -> T {
         let mut out = std::mem::take(&mut self.scratch);
         let now = self.now;
         let r = f(&mut self.nodes[idx].runner, now, &mut out);
@@ -334,11 +439,19 @@ impl<R: Runner> Cluster<R> {
                 self.push(at, Ev::Deliver { to: to_idx, epoch, from: from_id, msg });
                 continue;
             }
-            if !self.blocked.is_empty() && self.blocked.contains(&(from_idx, to_idx)) {
+            // Directed link-state probe: the table is default-empty, so
+            // outside fault windows this is one branch, no lookup.
+            let link = if self.links.is_empty() {
+                LinkState::default()
+            } else {
+                self.link_state(from_idx, to_idx)
+            };
+            if link.blocked {
                 self.stats.msgs_dropped_blocked += 1;
                 continue;
             }
-            if self.model.loss > 0.0 && self.rng.chance(self.model.loss) {
+            let loss = link.loss.unwrap_or(self.model.loss);
+            if loss > 0.0 && self.rng.chance(loss) {
                 self.stats.msgs_dropped_loss += 1;
                 continue;
             }
@@ -348,7 +461,12 @@ impl<R: Runner> Cluster<R> {
             let egress_done = start + tx;
             self.nodes[from_idx].egress_free = egress_done;
             let to_region = self.nodes[to_idx].region;
-            let latency = self.model.sample_latency(from_region, to_region, &mut self.rng);
+            let mut latency = self.model.sample_latency(from_region, to_region, &mut self.rng);
+            if link.latency_factor != 1.0 {
+                // Scaling happens *after* sampling, so a unit factor is
+                // bit-identical to no override (same RNG consumption).
+                latency = Duration((latency.0 as f64 * link.latency_factor) as u64);
+            }
             let arrival = egress_done + latency;
             let epoch = self.nodes[to_idx].epoch;
             self.push(arrival, Ev::Deliver { to: to_idx, epoch, from: from_id, msg });
@@ -647,6 +765,85 @@ mod tests {
         c2.set_cpu_factor(c2.machine_of(b), 1000);
         c2.run_until_idle();
         assert!(c2.now() > nominal, "{} !> {}", c2.now(), nominal);
+    }
+
+    #[test]
+    fn directed_block_leaves_reverse_path_open() {
+        // Block only a→b: a's ping never arrives, but b can still be
+        // reached if it initiates — the directionality the symmetric
+        // blocked-pair model could not express.
+        let (mut c, a, b) = mk(11);
+        c.block_link(a, b);
+        c.run_until_idle();
+        assert!(c.node(b).got.is_empty(), "a→b was blocked");
+        assert_eq!(c.stats.msgs_dropped_blocked, 1);
+        // Reverse direction: a fresh cluster where b pings a over the
+        // same directed block a→b — the ping arrives, only the reply dies.
+        let mut rng = Rng::new(11);
+        let a_id = PeerId::from_rng(&mut rng);
+        let b_id = PeerId::from_rng(&mut rng);
+        let mut c = Cluster::new(NetModel::uniform(50.0, 1000.0, 0.0), 11);
+        let a = c.add_node(
+            Echo { id: a_id, peer: None, got: vec![] },
+            Region::AsiaEast2,
+            Nanos::ZERO,
+        );
+        let b = c.add_node(
+            Echo { id: b_id, peer: Some(a_id), got: vec![] },
+            Region::EuropeWest3,
+            Nanos::ZERO,
+        );
+        c.block_link(a, b);
+        c.run_until_idle();
+        assert_eq!(c.node(a).got.iter().map(|x| x.1).collect::<Vec<_>>(), vec![1]);
+        assert!(c.node(b).got.is_empty(), "reply a→b must be dropped");
+    }
+
+    #[test]
+    fn slow_link_delays_one_direction() {
+        let (mut c1, _, b1) = mk(12);
+        c1.run_until_idle();
+        let nominal_first = c1.node(b1).got[0].0;
+        let (mut c2, a2, b2) = mk(12);
+        c2.set_link_latency_factor(a2, b2, 4.0);
+        c2.run_until_idle();
+        // The first a→b delivery is sampled identically, then scaled.
+        assert!(c2.node(b2).got[0].0 > nominal_first);
+        // The conversation still completes in both directions.
+        assert_eq!(c2.node(b2).got.len(), c1.node(b1).got.len());
+    }
+
+    #[test]
+    fn per_link_loss_override_drops_only_that_link() {
+        // Global loss 0, but a→b always loses: b never hears anything.
+        let (mut c, a, b) = mk(13);
+        c.set_link_loss(a, b, Some(1.0));
+        c.run_until_idle();
+        assert!(c.node(b).got.is_empty());
+        assert!(c.stats.msgs_dropped_loss >= 1);
+        assert_eq!(c.stats.msgs_dropped_blocked, 0);
+    }
+
+    #[test]
+    fn link_plane_prunes_to_empty() {
+        let (mut c, a, b) = mk(14);
+        c.block_link(a, b);
+        c.set_link_loss(b, a, Some(0.5));
+        assert_eq!(c.overridden_links(), 2);
+        c.unblock_link(a, b);
+        c.set_link_loss(b, a, None);
+        assert_eq!(c.overridden_links(), 0, "healed links must be pruned");
+        // unblock_all clears blocked flags but keeps latency overrides;
+        // reset_links restores the whole plane.
+        c.block_pair(a, b);
+        c.set_link_latency_factor(a, b, 2.0);
+        c.unblock_all();
+        assert_eq!(c.overridden_links(), 1);
+        assert_eq!(c.link_state(a, b).latency_factor, 2.0);
+        assert!(!c.link_state(a, b).blocked);
+        c.reset_links();
+        assert_eq!(c.overridden_links(), 0);
+        assert_eq!(c.link_state(a, b), LinkState::default());
     }
 
     #[test]

@@ -106,6 +106,19 @@ pub fn join_peer(
     cluster.add_node(node, region, now)
 }
 
+/// Turn `node` into an eclipse attacker: every DHT reply it serves lists
+/// exactly the `colluders` (cluster indices) instead of its honest view.
+/// See [`crate::dht::Engine::set_forgery`] for the wire-layer semantics.
+pub fn forge_dht_replies(cluster: &mut Cluster<Node>, node: usize, colluders: &[usize]) {
+    let ids: Vec<crate::net::PeerId> = colluders.iter().map(|&i| cluster.peer_id(i)).collect();
+    cluster.with_node(node, move |n, _, _| n.set_dht_forgery(Some(ids)));
+}
+
+/// Stop `node` forging DHT replies (it answers honestly again).
+pub fn stop_forging(cluster: &mut Cluster<Node>, node: usize) {
+    cluster.with_node(node, |n, _, _| n.set_dht_forgery(None));
+}
+
 /// Drain accumulated [`NodeEvent`]s from every node.
 pub fn drain_events(cluster: &mut Cluster<Node>) -> Vec<(usize, NodeEvent)> {
     let mut all = Vec::new();

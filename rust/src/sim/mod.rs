@@ -10,23 +10,29 @@
 //!   inter-region RTTs ([`regions`]),
 //! * per-node egress bandwidth serialization and a per-node CPU model
 //!   (which reproduces the paper's root-peer CPU-strain artifact),
-//! * optional jitter, packet loss, link blocking (fuzz/churn), and
+//! * optional jitter and packet loss,
+//! * a **directed link-state plane** ([`des::LinkState`]): per-(src→dst)
+//!   blocked flags, loss overrides, and latency multipliers, which is
+//!   what lets faults be *asymmetric* (a region that can reach the root
+//!   but not be reached; a victim whose requests arrive while every
+//!   reply dies), and
 //! * deterministic execution from a single seed.
 //!
 //! On top of the raw driver sits the **scenario subsystem**
-//! ([`scenario`]): declarative fault schedules — partition/heal,
-//! regional outage, crash/restart churn, flash-crowd joins, root-peer
-//! CPU strain, byzantine validator injection, loss spikes — executed
-//! against a [`Cluster`] of full PeersDB nodes, with a cluster-wide
-//! invariant checker (contribution-log convergence, quorum safety, DHT
-//! routing-table health, block availability ≥ replication target)
-//! asserted at mid-run checkpoints and at quiesce. The same seed always
-//! reproduces the identical [`SimStats`], so every scenario doubles as a
-//! regression reproduction recipe. The named bank lives in [`bank`]
-//! (shared by `tests/scenarios.rs` and the self-timing
-//! `benches/sim_scale.rs`, which emits `BENCH_sim.json`);
-//! `benches/sim_fuzz.rs` reuses the invariants under randomized link
-//! flapping.
+//! ([`scenario`]): declarative fault schedules — partition/heal
+//! (symmetric and asymmetric), slow and lossy links, regional outage,
+//! crash/restart churn, flash-crowd joins, root-peer CPU strain,
+//! byzantine validator injection, forged DHT replies (eclipse attacks),
+//! loss spikes — executed against a [`Cluster`] of full PeersDB nodes,
+//! with a cluster-wide invariant checker (contribution-log convergence,
+//! quorum safety, DHT routing-table health, block availability ≥
+//! replication target, and opt-in eclipse resistance) asserted at
+//! mid-run checkpoints and at quiesce. The same seed always reproduces
+//! the identical [`SimStats`], so every scenario doubles as a regression
+//! reproduction recipe. The named bank lives in [`bank`] (shared by
+//! `tests/scenarios.rs` and the self-timing `benches/sim_scale.rs`,
+//! which emits `BENCH_sim.json`); `benches/sim_fuzz.rs` reuses the
+//! invariants under randomized link flapping.
 
 pub mod bank;
 pub mod des;
@@ -35,7 +41,9 @@ pub mod model;
 pub mod regions;
 pub mod scenario;
 
-pub use des::{Cluster, SimStats};
+pub use des::{Cluster, LinkState, SimStats};
 pub use model::{LatencySpec, NetModel};
 pub use regions::Region;
-pub use scenario::{Fault, InvariantConfig, Scenario, ScenarioReport, TimedFault};
+pub use scenario::{
+    EclipseInvariant, Fault, InvariantConfig, Scenario, ScenarioReport, TimedFault,
+};

@@ -10,8 +10,10 @@
 //! first-class, replayable artifacts:
 //!
 //! * a [`Scenario`] is a cluster shape plus a schedule of [`TimedFault`]s
-//!   — partitions and heals, regional outages, peer crash/restart,
-//!   flash-crowd joins, root-peer CPU strain, byzantine validators,
+//!   — partitions (symmetric *and* asymmetric, built on the simulator's
+//!   directed link-state plane), heals, slow and lossy links, regional
+//!   outages, peer crash/restart, flash-crowd joins, root-peer CPU
+//!   strain, byzantine validators, forged DHT replies (eclipse attacks),
 //!   message-loss spikes, and timed contribution traffic;
 //! * [`run`] executes the schedule against a [`Cluster<Node>`] in
 //!   virtual time, heals everything, lets the cluster quiesce, and then
@@ -28,13 +30,20 @@
 //!      (`dht::kbucket`);
 //!   4. **block availability** — every contributed file is fully
 //!      replicated on at least `replication_target` online peers
-//!      (`bitswap` / `blockstore`).
+//!      (`bitswap` / `blockstore`);
+//!
+//!   5. **eclipse resistance** (opt-in, [`EclipseInvariant`]) — a
+//!      designated victim's routing-table view of its own neighborhood
+//!      must intersect the *honest* closest set, i.e. the attackers do
+//!      not own the victim's entire view of the network.
 //!
 //! Runs are deterministic: executing the same scenario twice yields the
 //! identical [`SimStats`], digest, and report — which is what makes a
 //! failing scenario a *reproduction recipe* rather than a flake.
 
+use crate::dht::Key;
 use crate::modeling::datagen::{self, WORKLOADS};
+use crate::net::PeerId;
 use crate::peersdb::{Node, NodeConfig};
 use crate::sim::des::{Cluster, SimStats};
 use crate::sim::harness::{self, PeerSpec};
@@ -55,10 +64,39 @@ pub enum Fault {
     Partition { a: Vec<usize>, b: Vec<usize> },
     /// Heal every link blocked by previous faults.
     Heal,
-    /// Block one bidirectional link (fuzz-style flapping).
+    /// Block one bidirectional link (fuzz-style flapping). Equivalent to
+    /// `BlockDirected` in both directions (property-tested).
     BlockPair { a: usize, b: usize },
     /// Unblock one bidirectional link.
     UnblockPair { a: usize, b: usize },
+    /// Block only the directed link `from → to`: `from`'s messages to
+    /// `to` vanish while the reverse path keeps working. The primitive
+    /// behind half-open NAT-style failures.
+    BlockDirected { from: usize, to: usize },
+    /// Unblock the directed link `from → to` (loss/latency overrides on
+    /// the link survive; teardown restores everything).
+    UnblockDirected { from: usize, to: usize },
+    /// Asymmetric partition: **A sees B, B doesn't see A.** Every node
+    /// in `a` can still *send* to every node in `b`, but all directed
+    /// links `b → a` are blocked — so `a`'s requests arrive and the
+    /// replies die. Models a region that can reach the root but cannot
+    /// be reached (half-open links during regional scale-out).
+    AsymmetricPartition { a: Vec<usize>, b: Vec<usize> },
+    /// Multiply the sampled propagation latency on both directions of
+    /// the `a ↔ b` link by `factor` (1.0 = nominal and is a no-op on the
+    /// sampled value; > 1.0 models a degraded long-haul path).
+    SlowLink { a: usize, b: usize, factor: f64 },
+    /// Override the loss probability of the *directed* link `from → to`
+    /// (the cluster-wide `SetLoss` still governs every other link).
+    SetLinkLoss { from: usize, to: usize, loss: f64 },
+    /// Turn `node` into an eclipse attacker: every DHT
+    /// `FindNodeReply`/`GetProvidersReply` it serves claims `colluders`
+    /// (cluster indices) are the closest peers / providers. All of its
+    /// other protocol behaviour stays honest, which is what makes the
+    /// attack hard to spot from traffic volume alone.
+    ForgeDhtReplies { node: usize, colluders: Vec<usize> },
+    /// Stop `node` forging DHT replies (it answers honestly again).
+    StopForging { node: usize },
     /// Take every node in the region offline (regional outage).
     Outage { region: Region },
     /// Bring every node in the region back (they re-bootstrap).
@@ -96,6 +134,25 @@ pub struct TimedFault {
     pub fault: Fault,
 }
 
+/// The eclipse-resistance invariant: checked at quiesce when configured
+/// on [`InvariantConfig::eclipse`].
+///
+/// The victim's routing-table view of the `k` peers closest to its own
+/// id must intersect the **honest closest set** — the true `k` closest
+/// online cluster members once the listed attackers are excluded. If the
+/// intersection is empty, the attackers own the victim's entire view of
+/// its neighborhood: every lookup the victim starts from that state is
+/// seeded exclusively with colluders, which is precisely an eclipse.
+/// (With `k` at least the cluster size this reduces to "the victim still
+/// knows at least one honest peer", the strongest form at small n.)
+#[derive(Clone, Debug)]
+pub struct EclipseInvariant {
+    /// The targeted node (cluster index).
+    pub victim: usize,
+    /// Nodes forging DHT replies — excluded from the honest set.
+    pub attackers: Vec<usize>,
+}
+
 /// Invariant-checker knobs.
 #[derive(Clone, Debug)]
 pub struct InvariantConfig {
@@ -105,11 +162,14 @@ pub struct InvariantConfig {
     /// Nodes whose validation stores are *expected* to lie — excluded
     /// from the quorum-safety conflict check.
     pub byzantine: Vec<usize>,
+    /// Eclipse-resistance guard (quiesce-only: it is a recovery
+    /// property, deliberately violated *during* an attack window).
+    pub eclipse: Option<EclipseInvariant>,
 }
 
 impl Default for InvariantConfig {
     fn default() -> Self {
-        InvariantConfig { replication_target: 3, byzantine: Vec::new() }
+        InvariantConfig { replication_target: 3, byzantine: Vec::new(), eclipse: None }
     }
 }
 
@@ -246,6 +306,8 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
     let mut cids: Vec<(crate::cid::Cid, bool)> = Vec::new();
     let mut contributed = 0usize;
     let mut checkpoints = 0usize;
+    // Nodes currently forging DHT replies, so teardown can restore them.
+    let mut forgers: BTreeSet<usize> = BTreeSet::new();
 
     for i in order {
         let ev = &sc.events[i];
@@ -263,6 +325,33 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
             Fault::Heal => cluster.unblock_all(),
             Fault::BlockPair { a, b } => cluster.block_pair(*a, *b),
             Fault::UnblockPair { a, b } => cluster.unblock_pair(*a, *b),
+            Fault::BlockDirected { from, to } => cluster.block_link(*from, *to),
+            Fault::UnblockDirected { from, to } => cluster.unblock_link(*from, *to),
+            Fault::AsymmetricPartition { a, b } => {
+                // A sees B: only the b→a directions are blocked.
+                for &x in a {
+                    for &y in b {
+                        if x != y {
+                            cluster.block_link(y, x);
+                        }
+                    }
+                }
+            }
+            Fault::SlowLink { a, b, factor } => {
+                cluster.set_link_latency_factor(*a, *b, *factor);
+                cluster.set_link_latency_factor(*b, *a, *factor);
+            }
+            Fault::SetLinkLoss { from, to, loss } => {
+                cluster.set_link_loss(*from, *to, Some(*loss));
+            }
+            Fault::ForgeDhtReplies { node, colluders } => {
+                forgers.insert(*node);
+                harness::forge_dht_replies(&mut cluster, *node, colluders);
+            }
+            Fault::StopForging { node } => {
+                forgers.remove(node);
+                harness::stop_forging(&mut cluster, *node);
+            }
             Fault::Outage { region } => {
                 for i in 0..cluster.len() {
                     if cluster.region_of(i) == *region {
@@ -333,13 +422,20 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
     }
 
     // Global heal: whatever the schedule left broken comes back, then the
-    // cluster gets a quiet tail to converge in.
-    cluster.unblock_all();
+    // cluster gets a quiet tail to converge in. The *entire* link-state
+    // plane is restored — blocked links, per-link loss overrides, and
+    // latency multipliers — along with loss, CPU factors, and any DHT
+    // reply forging, so back-to-back scenarios on one cluster can never
+    // inherit leaked fault state.
+    cluster.reset_links();
     for i in 0..cluster.len() {
         cluster.set_online(i);
     }
     cluster.reset_cpu_factors();
     cluster.model.loss = base_loss;
+    for node in forgers {
+        harness::stop_forging(&mut cluster, node);
+    }
 
     let deadline = cluster.now() + sc.quiesce;
     let mut converged_at = None;
@@ -447,13 +543,20 @@ pub fn check_invariants(
         }
         if let (Some(a), Some(b)) = (valid_holder, invalid_holder) {
             return Err(format!(
-                "quorum safety violated for {cid:?}: node {a} accepted Valid, node {b} accepted Invalid"
+                "quorum safety violated for {cid:?}: node {a} accepted Valid, \
+                 node {b} accepted Invalid"
             ));
         }
     }
 
     if phase == Phase::Checkpoint {
         return Ok(());
+    }
+
+    // ---- Eclipse resistance (quiesce; checked first so a still-eclipsed
+    // victim is reported as such, not as a downstream convergence symptom)
+    if let Some(ec) = &cfg.eclipse {
+        check_eclipse(cluster, ec)?;
     }
 
     // ---- Bootstrap + log convergence (quiesce) -------------------------
@@ -501,6 +604,37 @@ pub fn check_invariants(
     Ok(())
 }
 
+/// The [`EclipseInvariant`] predicate, exposed for scenario-specific
+/// assertions: the victim's routing-table view of the `k` peers closest
+/// to its own id must share at least one member with the honest closest
+/// set (online non-attacker peers ranked by XOR distance to the victim).
+/// An empty intersection means every lookup the victim can start is
+/// seeded exclusively with colluders — the attack succeeded.
+pub fn check_eclipse(cluster: &Cluster<Node>, ec: &EclipseInvariant) -> Result<(), String> {
+    let victim = ec.victim;
+    let vkey = Key::from_peer(cluster.peer_id(victim));
+    let k = cluster.node(victim).cfg.dht.k;
+    let view = cluster.node(victim).dht.table.closest(&vkey, k);
+    let mut honest: Vec<PeerId> = (0..cluster.len())
+        .filter(|&i| i != victim && cluster.is_online(i) && !ec.attackers.contains(&i))
+        .map(|i| cluster.peer_id(i))
+        .collect();
+    honest.sort_by_key(|p| vkey.distance(&Key::from_peer(*p)));
+    honest.truncate(k);
+    if honest.is_empty() {
+        return Ok(()); // degenerate cluster: nobody honest to know about
+    }
+    if view.iter().any(|p| honest.contains(p)) {
+        Ok(())
+    } else {
+        Err(format!(
+            "eclipse: node {victim}'s view of its {k} closest peers ({} entries) contains \
+             no member of the honest closest set — lookups are attacker-seeded",
+            view.len()
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -543,6 +677,37 @@ mod tests {
         // the side that never saw the entry cannot have converged.
         let err = run(&sc).expect_err("must fail");
         assert!(err.contains("contributions") || err.contains("divergence"), "{err}");
+    }
+
+    #[test]
+    fn teardown_restores_link_plane_and_forgery() {
+        // Leave a directed block, a slow link, a per-link loss override,
+        // and an active reply forgery dangling at the end of the
+        // schedule: teardown must restore all of them, not just the
+        // blocked links, so back-to-back scenarios cannot leak state.
+        let mut sc = Scenario::named("teardown-restore", 19, 4);
+        sc.quiesce = Duration::from_secs(180);
+        let sc = sc
+            .at(0, Fault::BlockDirected { from: 2, to: 1 })
+            .at(1, Fault::SlowLink { a: 0, b: 3, factor: 8.0 })
+            .at(2, Fault::SetLinkLoss { from: 1, to: 3, loss: 0.5 })
+            .at(3, Fault::ForgeDhtReplies { node: 2, colluders: vec![2, 3] })
+            .at(4, Fault::Contribute { node: 1, workload: 0, rows: 20 });
+        let (_, cluster) = run_cluster(&sc).expect("invariants");
+        assert_eq!(cluster.overridden_links(), 0, "link plane must be fully restored");
+        assert!(!cluster.node(2).dht.is_forging(), "forgery must be cleared at teardown");
+        assert!(cluster.node(2).dht.replies_forged > 0 || cluster.stats.msgs_dropped_blocked > 0);
+    }
+
+    #[test]
+    fn eclipse_check_flags_attacker_only_view() {
+        // Build a cluster but never run it: the victim's routing table is
+        // empty, so its neighborhood view intersects no honest peer.
+        let specs = (0..3).map(|_| PeerSpec::default()).collect();
+        let cluster = harness::build_cluster(5, NetModel::default(), specs);
+        let ec = EclipseInvariant { victim: 1, attackers: vec![2] };
+        let err = check_eclipse(&cluster, &ec).expect_err("empty view is eclipsed");
+        assert!(err.contains("eclipse"), "{err}");
     }
 
     #[test]

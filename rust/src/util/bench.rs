@@ -35,7 +35,10 @@ pub fn print_environment(title: &str) {
     println!("  CPU      : {cpu} ({cores} vcores)");
     println!("  Memory   : {mem_gb:.0} GB RAM");
     println!("  OS       : {}", std::env::consts::OS);
-    println!("  Software : rustc 1.95 / peersdb {} / xla 0.1.6 (PJRT CPU)", env!("CARGO_PKG_VERSION"));
+    println!(
+        "  Software : rustc 1.95 / peersdb {} / xla 0.1.6 (PJRT CPU)",
+        env!("CARGO_PKG_VERSION")
+    );
     println!("  Network  : simulated (see DESIGN.md §Substitutions)");
     println!();
 }

@@ -59,19 +59,43 @@ pub fn log(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
 
 #[macro_export]
 macro_rules! log_error {
-    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($t)*),
+        )
+    };
 }
 #[macro_export]
 macro_rules! log_warn {
-    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($t)*),
+        )
+    };
 }
 #[macro_export]
 macro_rules! log_info {
-    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($t)*),
+        )
+    };
 }
 #[macro_export]
 macro_rules! log_debug {
-    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($t)*),
+        )
+    };
 }
 
 #[cfg(test)]

@@ -280,7 +280,8 @@ mod tests {
     fn byzantine_validator_inverts_honest_verdict() {
         let mut rng = crate::util::Rng::new(5);
         let (good, _) = crate::modeling::datagen::generate_contribution(&mut rng, 0, 40);
-        let (bad, _) = crate::modeling::datagen::generate_corrupt_contribution(&mut rng, 0, 40, 0.9);
+        let (bad, _) =
+            crate::modeling::datagen::generate_corrupt_contribution(&mut rng, 0, 40, 0.9);
         let mut honest = StatsValidator::default();
         let mut liar = ByzantineValidator::default();
         assert_eq!(honest.validate(&good).0, Verdict::Valid);

@@ -77,7 +77,8 @@ fn multi_writer_concurrent_contributions_converge() {
     let mut rng = Rng::new(5);
     // Several peers contribute at the same instant (concurrent heads).
     for idx in [1usize, 3, 5, 7, 2] {
-        let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, idx as u32 % 6, 60);
+        let (data, _) =
+            peersdb::modeling::datagen::generate_contribution(&mut rng, idx as u32 % 6, 60);
         contribute(&mut cluster, idx, &data, "spark-grep");
     }
     cluster.run_for(Duration::from_secs(40));

@@ -9,7 +9,7 @@ use peersdb::codec::json::Json;
 use peersdb::dht::kbucket::{KBucket, RoutingTable, K};
 use peersdb::dht::{self, Key};
 use peersdb::ipfs_log::Log;
-use peersdb::net::PeerId;
+use peersdb::net::{Outbox, PeerId, Runner};
 use peersdb::peersdb::Message;
 use peersdb::pubsub;
 use peersdb::stores::documents::{ValidationRecord, Verdict};
@@ -274,7 +274,9 @@ fn random_message(rng: &mut Rng) -> Message {
             heads: (0..rng.range(0, 8)).map(|_| random_cid(rng)).collect(),
         },
         14 => Message::HeadsRequest,
-        15 => Message::HeadsReply { heads: (0..rng.range(0, 10)).map(|_| random_cid(rng)).collect() },
+        15 => Message::HeadsReply {
+            heads: (0..rng.range(0, 10)).map(|_| random_cid(rng)).collect(),
+        },
         16 => Message::ValQuery { req_id, cid: random_cid(rng) },
         _ => Message::ValReply {
             req_id,
@@ -282,7 +284,8 @@ fn random_message(rng: &mut Rng) -> Message {
             record: if rng.chance(0.5) {
                 Some(ValidationRecord {
                     data_cid: random_cid(rng),
-                    verdict: [Verdict::Valid, Verdict::Invalid, Verdict::Inconclusive][rng.range(0, 3)],
+                    verdict: [Verdict::Valid, Verdict::Invalid, Verdict::Inconclusive]
+                        [rng.range(0, 3)],
                     score: rng.f64(),
                     validator: PeerId::from_rng(rng),
                     validated_at: rng.next_u64() >> 1,
@@ -384,12 +387,16 @@ fn random_json(rng: &mut Rng, depth: usize) -> Json {
         0 => Json::Null,
         1 => Json::Bool(rng.chance(0.5)),
         2 => Json::Num((rng.next_u32() as f64) / 8.0 - 1000.0),
-        3 => Json::Str((0..rng.range(0, 12)).map(|_| ('a'..='z').nth(rng.range(0, 26)).unwrap()).collect()),
+        3 => Json::Str(
+            (0..rng.range(0, 12)).map(|_| ('a'..='z').nth(rng.range(0, 26)).unwrap()).collect(),
+        ),
         4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth + 1)).collect()),
         _ => {
             let mut m = BTreeMap::new();
             for _ in 0..rng.range(0, 5) {
-                let k: String = (0..rng.range(1, 8)).map(|_| ('a'..='z').nth(rng.range(0, 26)).unwrap()).collect();
+                let k: String = (0..rng.range(1, 8))
+                    .map(|_| ('a'..='z').nth(rng.range(0, 26)).unwrap())
+                    .collect();
                 m.insert(k, random_json(rng, depth + 1));
             }
             Json::Obj(m)
@@ -510,7 +517,9 @@ fn prop_quorum_decisions_meet_agreement() {
                 }
             }
             for force in [false, true] {
-                if let Some(VoteOutcome::Decided { verdict, responses, .. }) = vote.tally(&cfg, force) {
+                if let Some(VoteOutcome::Decided { verdict, responses, .. }) =
+                    vote.tally(&cfg, force)
+                {
                     let n_match = verdicts.iter().filter(|v| **v == verdict).count();
                     let frac = n_match as f64 / verdicts.len() as f64;
                     if frac + 1e-9 < *agreement {
@@ -583,6 +592,145 @@ fn prop_batch_queue_conserves_tasks() {
             b.sort();
             if a != b {
                 return Err(format!("conservation violated: {} in, {} out", a.len(), b.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Directed link-state plane: symmetric faults are composed from directed
+// primitives, and a unit latency factor is indistinguishable from no
+// override at all (same deliveries, same RNG consumption, same stats)
+// ---------------------------------------------------------------------------
+
+/// Minimal chatty runner for link-plane properties: pings every peer at
+/// start and echoes hop-limited replies, so traffic crosses every
+/// directed link a bounded number of times.
+struct Chatter {
+    id: PeerId,
+    peers: Vec<PeerId>,
+    got: Vec<(Nanos, u64)>,
+}
+
+impl Runner for Chatter {
+    type Msg = u64;
+
+    fn id(&self) -> PeerId {
+        self.id
+    }
+
+    fn on_start(&mut self, _now: Nanos, out: &mut Outbox<u64>) {
+        for p in &self.peers {
+            out.send(*p, 1);
+        }
+    }
+
+    fn on_message(&mut self, now: Nanos, from: PeerId, msg: u64, out: &mut Outbox<u64>) {
+        self.got.push((now, msg));
+        if msg < 6 {
+            out.send(from, msg + 1);
+        }
+    }
+
+    fn on_timer(&mut self, _now: Nanos, _token: u64, _out: &mut Outbox<u64>) {}
+}
+
+fn chatter_cluster(seed: u64, n: usize, loss: f64) -> peersdb::sim::Cluster<Chatter> {
+    use peersdb::sim::regions::ALL;
+    let mut rng = Rng::new(seed);
+    let ids: Vec<PeerId> = (0..n).map(|_| PeerId::from_rng(&mut rng)).collect();
+    let model = peersdb::sim::NetModel::uniform(30.0, 512.0, 0.05).with_loss(loss);
+    let mut c = peersdb::sim::Cluster::new(model, seed);
+    for (i, id) in ids.iter().enumerate() {
+        let peers = ids.iter().copied().filter(|p| p != id).collect();
+        c.add_node(
+            Chatter { id: *id, peers, got: vec![] },
+            ALL[i % ALL.len()],
+            Nanos::ZERO,
+        );
+    }
+    c
+}
+
+type ChatterTrace = (peersdb::sim::SimStats, Nanos, Vec<Vec<(Nanos, u64)>>);
+
+fn chatter_trace(c: &peersdb::sim::Cluster<Chatter>) -> ChatterTrace {
+    (
+        c.stats.clone(),
+        c.now(),
+        (0..c.len()).map(|i| c.node(i).got.clone()).collect(),
+    )
+}
+
+#[test]
+fn prop_block_pair_equals_two_directed_blocks() {
+    check(
+        "block_pair_equals_two_directed_blocks",
+        |r| (r.next_u64(), r.range(3, 6), r.f64_range(0.0, 0.05)),
+        |(seed, n, loss)| {
+            let run = |directed: bool| {
+                let mut c = chatter_cluster(*seed, *n, *loss);
+                if directed {
+                    c.block_link(0, 1);
+                    c.block_link(1, 0);
+                } else {
+                    c.block_pair(0, 1);
+                }
+                c.run_until_idle();
+                chatter_trace(&c)
+            };
+            let pair = run(false);
+            let composed = run(true);
+            if pair != composed {
+                return Err(format!(
+                    "BlockPair diverged from its directed composition:\n  \
+                     pair:     {:?}\n  composed: {:?}",
+                    pair.0, composed.0
+                ));
+            }
+            if pair.0.msgs_dropped_blocked == 0 {
+                return Err("blocked pair never dropped a message".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_slow_link_unit_factor_is_noop() {
+    check(
+        "slow_link_unit_factor_is_noop",
+        |r| (r.next_u64(), r.range(2, 5), r.f64_range(0.0, 0.05)),
+        |(seed, n, loss)| {
+            let nominal = {
+                let mut c = chatter_cluster(*seed, *n, *loss);
+                c.run_until_idle();
+                chatter_trace(&c)
+            };
+            let unit = {
+                let mut c = chatter_cluster(*seed, *n, *loss);
+                // Explicit 1.0 multipliers on every directed link: the
+                // probe path runs on every dispatch, and must change
+                // nothing — deliveries, times, stats, RNG draws.
+                for i in 0..*n {
+                    for j in 0..*n {
+                        if i != j {
+                            c.set_link_latency_factor(i, j, 1.0);
+                        }
+                    }
+                }
+                if c.overridden_links() == 0 {
+                    return Err("unit factors must keep the probe path live".into());
+                }
+                c.run_until_idle();
+                chatter_trace(&c)
+            };
+            if nominal != unit {
+                return Err(format!(
+                    "unit latency factor changed behavior:\n  nominal: {:?}\n  unit:    {:?}",
+                    nominal.0, unit.0
+                ));
             }
             Ok(())
         },

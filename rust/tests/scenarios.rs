@@ -16,6 +16,7 @@
 
 use peersdb::sim::bank;
 use peersdb::sim::scenario;
+use peersdb::util::time::Duration;
 use std::collections::BTreeSet;
 
 // ---------------------------------------------------------------------------
@@ -37,7 +38,8 @@ fn scenario_partition_heals_and_converges() {
 
 #[test]
 fn scenario_regional_outage_recovers() {
-    let report = scenario::run_replayed(&bank::regional_outage()).expect("regional outage scenario");
+    let report =
+        scenario::run_replayed(&bank::regional_outage()).expect("regional outage scenario");
     assert_eq!(report.contributions, 4);
     // Offline peers drop deliveries; the outage was observable.
     assert!(report.stats.msgs_dropped_offline > 0, "outage never bit");
@@ -146,6 +148,24 @@ fn scenario_kitchen_sink_survives_everything() {
     assert!(report.stats.msgs_dropped_loss > 0, "loss spike never bit");
 }
 
+/// Mean recorded `bootstrap_ms` across nodes `lo..hi` (panics if a node
+/// in the slice never finished bootstrapping — the harness invariants
+/// should have caught that first).
+fn wave_mean(cluster: &peersdb::sim::Cluster<peersdb::peersdb::Node>, lo: usize, hi: usize) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for i in lo..hi {
+        let s = cluster
+            .node(i)
+            .metrics
+            .summary("bootstrap_ms")
+            .unwrap_or_else(|| panic!("node {i} recorded no bootstrap_ms"));
+        sum += s.mean();
+        n += 1;
+    }
+    sum / n as f64
+}
+
 // ---------------------------------------------------------------------------
 // 8. Multi-region scale-out: 100 peers, three staggered flash crowds —
 //    paper experiment 2 at 10× (the ROADMAP headline this PR lands).
@@ -175,23 +195,9 @@ fn scenario_multi_region_scale_out() {
     // bootstrap stays bounded as the cluster quadruples and the history
     // grows — the paper's experiment-2 question at 10× its cluster size.
     let wave = bank::SCALE_OUT_WAVE;
-    let wave_mean = |lo: usize, hi: usize| -> f64 {
-        let mut sum = 0.0;
-        let mut n = 0usize;
-        for i in lo..hi {
-            let s = cluster
-                .node(i)
-                .metrics
-                .summary("bootstrap_ms")
-                .unwrap_or_else(|| panic!("node {i} recorded no bootstrap_ms"));
-            sum += s.mean();
-            n += 1;
-        }
-        sum / n as f64
-    };
-    let w1 = wave_mean(wave, 2 * wave);
-    let w2 = wave_mean(2 * wave, 3 * wave);
-    let w3 = wave_mean(3 * wave, 4 * wave);
+    let w1 = wave_mean(&cluster, wave, 2 * wave);
+    let w2 = wave_mean(&cluster, 2 * wave, 3 * wave);
+    let w3 = wave_mean(&cluster, 3 * wave, 4 * wave);
     assert!(w1 > 0.0 && w2 > 0.0 && w3 > 0.0, "waves must record bootstrap times");
     // Bounded degradation: the last wave joins a 75-peer cluster holding
     // the full history, yet must bootstrap within the same order of
@@ -207,4 +213,100 @@ fn scenario_multi_region_scale_out() {
          (peers={}, end={}, events={})",
         report.peers, report.end, report.stats.events_processed
     );
+}
+
+// ---------------------------------------------------------------------------
+// 9. Asymmetric half-open region: 25 joiners can reach the core but
+//    cannot be reached — the directional link-state plane headline.
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "35-peer DES run needs the release profile; CI runs `cargo test --release`"
+)]
+fn scenario_asymmetric_region_halfopen() {
+    let sc = bank::asymmetric_region_halfopen();
+    let (report, cluster) = scenario::run_cluster(&sc).expect("half-open scenario");
+    // Replay determinism of the directional fault path.
+    let replay = scenario::run(&sc).expect("replay");
+    assert_eq!(report, replay, "half-open scenario not deterministic");
+
+    assert_eq!(report.peers, bank::HALFOPEN_CORE + bank::HALFOPEN_REGION);
+    assert_eq!(report.contributions, 4);
+    assert_eq!(report.checkpoints, 1);
+    // The half-open direction really dropped traffic (JoinAcks, replies).
+    assert!(report.stats.msgs_dropped_blocked > 0, "half-open link never bit");
+
+    // Bounded staleness: every region joiner eventually bootstrapped
+    // (the harness invariants insist on it), but only after the heal —
+    // its bootstrap time must contain the ~55 s half-open stall, while
+    // the unaffected core bootstrapped in seconds during warmup.
+    let region_lo = bank::HALFOPEN_CORE;
+    let region_hi = bank::HALFOPEN_CORE + bank::HALFOPEN_REGION;
+    let region_mean = wave_mean(&cluster, region_lo, region_hi);
+    let core_mean = wave_mean(&cluster, 1, bank::HALFOPEN_CORE);
+    assert!(
+        region_mean >= 30_000.0,
+        "region bootstrap mean {region_mean:.0} ms does not reflect the half-open stall"
+    );
+    assert!(
+        region_mean > core_mean,
+        "half-open region ({region_mean:.0} ms) not slower than core ({core_mean:.0} ms)"
+    );
+    println!(
+        "half-open bootstrap means: core {core_mean:.0} ms, region {region_mean:.0} ms \
+         ({} blocked drops)",
+        report.stats.msgs_dropped_blocked
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 10. Adversarial eclipse: forged DHT replies + half-open isolation own
+//     the victim's view; the eclipse invariant certifies recovery.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scenario_adversarial_eclipse_recovers() {
+    let sc = bank::adversarial_eclipse();
+    let (report, cluster) = scenario::run_cluster(&sc).expect("eclipse scenario");
+    // Replay determinism (run_cluster doesn't go through run_replayed).
+    let replay = scenario::run(&sc).expect("replay");
+    assert_eq!(report, replay, "eclipse scenario not deterministic");
+
+    assert_eq!(report.contributions, 5);
+    assert_eq!(report.checkpoints, 1);
+    // The attack actually ran: colluders served forged replies and the
+    // victim's isolation dropped honest replies.
+    let forged: u64 = bank::ECLIPSE_ATTACKERS
+        .iter()
+        .map(|&i| cluster.node(i).dht.replies_forged)
+        .sum();
+    assert!(forged > 0, "attackers never forged a reply");
+    assert!(report.stats.msgs_dropped_blocked > 0, "victim isolation never bit");
+    // Teardown hygiene: nobody is left forging, no link override leaks.
+    for &i in &bank::ECLIPSE_ATTACKERS {
+        assert!(!cluster.node(i).dht.is_forging());
+    }
+    assert_eq!(cluster.overridden_links(), 0);
+    // The quiesce invariants already asserted eclipse recovery; make the
+    // conclusion explicit here too.
+    let ec = sc.invariants.eclipse.as_ref().unwrap();
+    scenario::check_eclipse(&cluster, ec).expect("victim regained honest neighbors");
+}
+
+#[test]
+fn eclipse_attack_is_detected_without_recovery_window() {
+    // The defense half of the eclipse scenario is the healed tail: links
+    // reopen, forging stops, honest traffic repopulates the victim's
+    // view. Strip that tail (keep only the attack window) and grant no
+    // quiesce: the eclipse invariant must fire — i.e. the scenario
+    // demonstrably *detects* a successful attack rather than vacuously
+    // passing.
+    let mut sc = bank::adversarial_eclipse();
+    sc.events.retain(|e| e.at < Duration::from_secs(bank::ECLIPSE_HEAL_SECS));
+    sc.quiesce = Duration::ZERO;
+    sc.quiesce_poll = Duration::ZERO;
+    let err = scenario::run(&sc).expect_err("eclipsed victim must fail the invariant");
+    assert!(err.contains("eclipse"), "wrong failure: {err}");
 }
