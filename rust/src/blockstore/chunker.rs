@@ -109,6 +109,30 @@ pub fn child_blocks(root_data: &[u8]) -> Vec<Cid> {
     parse_root(root_data).map(|m| m.chunks).unwrap_or_default()
 }
 
+/// Unpin the file rooted at `root`: the root block and, for chunked
+/// files, every chunk listed in its manifest. Blocks stay in the store
+/// until the next [`BlockStore::gc`]; returns how many blocks actually
+/// lost a pin. This is the "unpin" half of the deliberate unpin+GC
+/// workflow the availability-repair scenarios exercise.
+///
+/// Caveat: chunks are content-addressed and may be *shared* with other
+/// files (deduplication), and pins carry no reference count — unpinning
+/// file A releases any chunk it shares with a still-wanted file B, and
+/// the next GC then punches a hole in B. Callers dropping a subset of
+/// their files must re-pin survivors afterwards; the GC-pressure
+/// workflow (`peersdb::Node::unpin_contribution_data`) drops every
+/// contribution file at once, where the hazard cannot arise.
+pub fn unpin_file(bs: &mut BlockStore, root: &Cid) -> usize {
+    let children = bs.get(root).map(child_blocks).unwrap_or_default();
+    let mut unpinned = 0;
+    for cid in std::iter::once(*root).chain(children) {
+        if bs.unpin(&cid) {
+            unpinned += 1;
+        }
+    }
+    unpinned
+}
+
 /// True when the file rooted at `root` is *fully* present (root block and
 /// every chunk). Cheaper than [`get_file`]: no reassembly.
 pub fn has_file(bs: &BlockStore, root: &Cid) -> bool {
@@ -176,6 +200,22 @@ mod tests {
         let children = child_blocks(bs.get(&res.root).unwrap());
         assert_eq!(children.len(), 3);
         assert_eq!(&res.blocks[1..], &children[..]);
+    }
+
+    #[test]
+    fn unpin_file_releases_every_block() {
+        let mut bs = BlockStore::new();
+        let data = vec![3u8; CHUNK_SIZE * 2 + 9];
+        let res = add_file(&mut bs, &data);
+        for b in &res.blocks {
+            bs.pin(b, crate::blockstore::Pin::Replica);
+        }
+        assert_eq!(unpin_file(&mut bs, &res.root), res.blocks.len());
+        let (n, _) = bs.gc();
+        assert_eq!(n, res.blocks.len());
+        assert!(!has_file(&bs, &res.root));
+        // Idempotent: nothing left to unpin.
+        assert_eq!(unpin_file(&mut bs, &res.root), 0);
     }
 
     #[test]

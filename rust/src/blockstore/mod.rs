@@ -131,9 +131,14 @@ impl BlockStore {
         }
     }
 
-    pub fn unpin(&mut self, cid: &Cid) {
+    /// Remove the pin (any class) from a block. Returns `true` if the
+    /// block existed *and* carried a pin — i.e. whether the next
+    /// [`BlockStore::gc`] now collects something it previously kept.
+    pub fn unpin(&mut self, cid: &Cid) -> bool {
         if let Some(b) = self.blocks.get_mut(cid) {
-            b.pin = None;
+            b.pin.take().is_some()
+        } else {
+            false
         }
     }
 

@@ -26,6 +26,12 @@ pub enum Rpc {
     GetProvidersReply { req_id: u64, providers: Vec<PeerId>, closer: Vec<PeerId> },
     /// Store a provider record: `provider` serves the object at `key`.
     AddProvider { key: Key, provider: PeerId },
+    /// Withdraw the *sender's* provider record for `key` (a deliberate
+    /// unpin): the record is keyed by the requesting peer, so nobody can
+    /// retract anyone else's announcement. Without withdrawal a record
+    /// lingers until its TTL, and availability-repair probes would keep
+    /// counting holders that garbage-collected the data long ago.
+    RemoveProvider { key: Key },
 }
 
 impl Encode for Rpc {
@@ -65,6 +71,10 @@ impl Encode for Rpc {
                 key.encode(w);
                 provider.encode(w);
             }
+            Rpc::RemoveProvider { key } => {
+                w.put_u8(7);
+                key.encode(w);
+            }
         }
     }
 }
@@ -83,6 +93,7 @@ impl Decode for Rpc {
                 closer: Vec::decode(r)?,
             },
             6 => Rpc::AddProvider { key: Key::decode(r)?, provider: PeerId::decode(r)? },
+            7 => Rpc::RemoveProvider { key: Key::decode(r)? },
             _ => return Err(DecodeError("bad dht rpc tag")),
         })
     }
@@ -109,6 +120,7 @@ impl WireSize for Rpc {
                     + closer.len() * 32
             }
             Rpc::AddProvider { .. } => 1 + 32 + 32,
+            Rpc::RemoveProvider { .. } => 1 + 32,
         }
     }
 }
@@ -166,6 +178,11 @@ struct Lookup {
     shortlist: BTreeMap<[u8; 32], (PeerId, bool)>,
     in_flight: usize,
     providers: BTreeSet<PeerId>,
+    /// Exhaustive provider lookup: ignore the `providers_needed` early
+    /// exit and walk the full k-closest set. Used by provider-*count*
+    /// probes (availability repair), where "enough to fetch from" and
+    /// "how many exist" are different questions.
+    full: bool,
     done: bool,
 }
 
@@ -334,6 +351,10 @@ impl Engine {
             Rpc::AddProvider { key, provider } => {
                 self.add_provider_record(now, key, provider);
             }
+            Rpc::RemoveProvider { key } => {
+                // Sender-keyed: `from` can only ever retract itself.
+                self.remove_provider_record(&key, from);
+            }
             Rpc::FindNodeReply { req_id, closer } => {
                 self.on_reply(now, from, req_id, Vec::new(), closer, out);
             }
@@ -348,6 +369,15 @@ impl Engine {
             .entry(key)
             .or_default()
             .insert(provider, ProviderRecord { expires: now + self.cfg.provider_ttl });
+    }
+
+    fn remove_provider_record(&mut self, key: &Key, provider: PeerId) {
+        if let Some(m) = self.providers.get_mut(key) {
+            m.remove(&provider);
+            if m.is_empty() {
+                self.providers.remove(key);
+            }
+        }
     }
 
     fn expire_providers(&mut self, now: Nanos, key: &Key) {
@@ -376,12 +406,24 @@ impl Engine {
 
     /// Start an iterative FIND_NODE lookup toward `target`.
     pub fn find_node(&mut self, now: Nanos, target: Key, out: &mut Sends) -> LookupId {
-        self.start_lookup(now, target, LookupKind::FindNode, out)
+        self.start_lookup(now, target, LookupKind::FindNode, false, out)
     }
 
-    /// Start an iterative GET_PROVIDERS lookup for `key`.
+    /// Start an iterative GET_PROVIDERS lookup for `key`. Stops early
+    /// once `providers_needed` providers are known — the fetch-oriented
+    /// flavor ("enough candidates to start pulling blocks").
     pub fn find_providers(&mut self, now: Nanos, key: Key, out: &mut Sends) -> LookupId {
-        self.start_lookup(now, key, LookupKind::GetProviders, out)
+        self.start_lookup(now, key, LookupKind::GetProviders, false, out)
+    }
+
+    /// Start an exhaustive GET_PROVIDERS lookup for `key`: never stops
+    /// early at `providers_needed`, so the result reflects every record
+    /// held by the k closest reachable peers. This is the provider-
+    /// *count* probe behind availability repair — an early-exit count
+    /// would saturate at `providers_needed` and under-report exactly
+    /// when the repair decision needs precision.
+    pub fn find_providers_full(&mut self, now: Nanos, key: Key, out: &mut Sends) -> LookupId {
+        self.start_lookup(now, key, LookupKind::GetProviders, true, out)
     }
 
     /// Announce ourselves as a provider: records locally and walks the
@@ -389,7 +431,17 @@ impl Engine {
     pub fn provide(&mut self, now: Nanos, key: Key, out: &mut Sends) -> LookupId {
         self.add_provider_record(now, key, self.own);
         // The completion handler sends AddProvider to the found peers.
-        self.start_lookup(now, key, LookupKind::FindNode, out)
+        self.start_lookup(now, key, LookupKind::FindNode, false, out)
+    }
+
+    /// Withdraw our own provider record for `key` (deliberate unpin):
+    /// drops the local record immediately and walks the DHT so the
+    /// completion handler can send [`Rpc::RemoveProvider`] to the k
+    /// closest peers (via [`Engine::announce_withdrawal`], the mirror of
+    /// [`Engine::announce_provider`]).
+    pub fn withdraw(&mut self, now: Nanos, key: Key, out: &mut Sends) -> LookupId {
+        self.remove_provider_record(&key, self.own);
+        self.start_lookup(now, key, LookupKind::FindNode, false, out)
     }
 
     fn start_lookup(
@@ -397,6 +449,7 @@ impl Engine {
         now: Nanos,
         target: Key,
         kind: LookupKind,
+        full: bool,
         out: &mut Sends,
     ) -> LookupId {
         let id = LookupId(self.next_lookup);
@@ -407,6 +460,7 @@ impl Engine {
             shortlist: BTreeMap::new(),
             in_flight: 0,
             providers: BTreeSet::new(),
+            full,
             done: false,
         };
         for p in self.table.closest(&target, self.cfg.k) {
@@ -466,8 +520,10 @@ impl Engine {
         let kind = lk.kind;
         let target = lk.target;
 
-        // Early exit for provider lookups with enough providers.
+        // Early exit for provider lookups with enough providers (never
+        // taken by exhaustive provider-count probes).
         let enough_providers = kind == LookupKind::GetProviders
+            && !lk.full
             && self.cfg.providers_needed > 0
             && lk.providers.len() >= self.cfg.providers_needed;
 
@@ -555,6 +611,16 @@ impl Engine {
         }
     }
 
+    /// After a [`Engine::withdraw`] lookup completes, ask the closest
+    /// peers to drop our provider record for `key` (call with the
+    /// `LookupDone` closest set).
+    pub fn announce_withdrawal(&mut self, key: Key, closest: &[PeerId], out: &mut Sends) {
+        for p in closest.iter().take(self.cfg.k) {
+            self.rpcs_sent += 1;
+            out.push((*p, Rpc::RemoveProvider { key }));
+        }
+    }
+
     /// Number of active lookups (diagnostics).
     pub fn active_lookups(&self) -> usize {
         self.lookups.len()
@@ -619,6 +685,7 @@ mod tests {
                 closer: vec![PeerId::from_rng(&mut rng), PeerId::from_rng(&mut rng)],
             },
             Rpc::AddProvider { key: Key(rng.bytes32()), provider: PeerId::from_rng(&mut rng) },
+            Rpc::RemoveProvider { key: Key(rng.bytes32()) },
         ];
         for rpc in rpcs {
             let b = crate::codec::to_bytes(&rpc);
@@ -692,6 +759,99 @@ mod tests {
         let ev = engines.get_mut(&seeker).unwrap().events.pop().expect("providers done");
         let DhtEvent::ProvidersDone { providers, .. } = ev else { panic!() };
         assert!(providers.contains(&provider), "provider not found");
+    }
+
+    /// Announce `provider` for `key` across the mesh (provide lookup +
+    /// AddProvider fan-out), settling all traffic.
+    fn announce(engines: &mut HashMap<PeerId, Engine>, provider: PeerId, key: Key, now: Nanos) {
+        let mut out = Sends::new();
+        engines.get_mut(&provider).unwrap().provide(now, key, &mut out);
+        let queue: Vec<_> = out.into_iter().map(|(to, rpc)| (provider, to, rpc)).collect();
+        settle(engines, queue, now);
+        let ev = engines.get_mut(&provider).unwrap().events.pop().unwrap();
+        let DhtEvent::LookupDone { closest, .. } = ev else { panic!() };
+        let mut out = Sends::new();
+        engines.get_mut(&provider).unwrap().announce_provider(key, &closest, &mut out);
+        let queue: Vec<_> = out.into_iter().map(|(to, rpc)| (provider, to, rpc)).collect();
+        settle(engines, queue, now);
+    }
+
+    #[test]
+    fn full_provider_lookup_ignores_early_exit() {
+        let now = Nanos(0);
+        let (ids, mut engines) = mk_engines(20, 77);
+        // Fetch-oriented lookups may stop after a single provider…
+        for e in engines.values_mut() {
+            e.cfg.providers_needed = 1;
+        }
+        mesh(&ids, &mut engines, now);
+        let mut rng = Rng::new(6);
+        let key = Key(rng.bytes32());
+        for &p in &[ids[2], ids[7], ids[11]] {
+            announce(&mut engines, p, key, now);
+        }
+        let seeker = ids[15];
+        let mut out = Sends::new();
+        engines.get_mut(&seeker).unwrap().find_providers_full(now, key, &mut out);
+        let queue: Vec<_> = out.into_iter().map(|(to, rpc)| (seeker, to, rpc)).collect();
+        settle(&mut engines, queue, now);
+        let ev = engines.get_mut(&seeker).unwrap().events.pop().expect("providers done");
+        let DhtEvent::ProvidersDone { providers, .. } = ev else { panic!() };
+        // …but the exhaustive count probe must see all three records.
+        for p in [ids[2], ids[7], ids[11]] {
+            assert!(providers.contains(&p), "full lookup missed a provider");
+        }
+    }
+
+    #[test]
+    fn withdrawal_removes_only_the_senders_record() {
+        let now = Nanos(0);
+        let (ids, mut engines) = mk_engines(12, 23);
+        mesh(&ids, &mut engines, now);
+        let mut rng = Rng::new(4);
+        let key = Key(rng.bytes32());
+        let (keeper, leaver) = (ids[3], ids[5]);
+        announce(&mut engines, keeper, key, now);
+        announce(&mut engines, leaver, key, now);
+        // `leaver` withdraws: walk the DHT, then fan out RemoveProvider.
+        let mut out = Sends::new();
+        engines.get_mut(&leaver).unwrap().withdraw(now, key, &mut out);
+        assert!(engines.get(&leaver).unwrap().local_providers(&key).is_empty());
+        let queue: Vec<_> = out.into_iter().map(|(to, rpc)| (leaver, to, rpc)).collect();
+        settle(&mut engines, queue, now);
+        let ev = engines.get_mut(&leaver).unwrap().events.pop().unwrap();
+        let DhtEvent::LookupDone { closest, .. } = ev else { panic!() };
+        let mut out = Sends::new();
+        engines.get_mut(&leaver).unwrap().announce_withdrawal(key, &closest, &mut out);
+        let queue: Vec<_> = out.into_iter().map(|(to, rpc)| (leaver, to, rpc)).collect();
+        settle(&mut engines, queue, now);
+        // A fresh exhaustive lookup sees the keeper, not the leaver.
+        let seeker = ids[9];
+        let mut out = Sends::new();
+        engines.get_mut(&seeker).unwrap().find_providers_full(now, key, &mut out);
+        let queue: Vec<_> = out.into_iter().map(|(to, rpc)| (seeker, to, rpc)).collect();
+        settle(&mut engines, queue, now);
+        let ev = engines.get_mut(&seeker).unwrap().events.pop().expect("providers done");
+        let DhtEvent::ProvidersDone { providers, .. } = ev else { panic!() };
+        assert!(providers.contains(&keeper), "withdrawal must not touch other records");
+        assert!(!providers.contains(&leaver), "withdrawn record still served");
+    }
+
+    #[test]
+    fn remove_provider_is_sender_keyed() {
+        let mut rng = Rng::new(19);
+        let own = PeerId::from_rng(&mut rng);
+        let (a, b) = (PeerId::from_rng(&mut rng), PeerId::from_rng(&mut rng));
+        let mut e = Engine::new(own, DhtConfig::default());
+        let key = Key(rng.bytes32());
+        let mut out = Sends::new();
+        e.on_rpc(Nanos(0), a, Rpc::AddProvider { key, provider: a }, &mut out);
+        e.on_rpc(Nanos(0), b, Rpc::AddProvider { key, provider: b }, &mut out);
+        // b tries to scrub the key: only b's own record can go.
+        e.on_rpc(Nanos(1), b, Rpc::RemoveProvider { key }, &mut out);
+        assert_eq!(e.local_providers(&key), vec![a]);
+        e.on_rpc(Nanos(2), a, Rpc::RemoveProvider { key }, &mut out);
+        assert!(e.local_providers(&key).is_empty());
     }
 
     #[test]

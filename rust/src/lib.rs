@@ -32,9 +32,11 @@
 //! Evaluation is driven by the **scenario subsystem**
 //! ([`sim::scenario`]): declarative, timed fault schedules (partitions,
 //! regional outages, crash/restart churn, flash-crowd joins, root-peer
-//! CPU strain, byzantine validators) executed against a simulated
+//! CPU strain, byzantine validators, GC pressure with deliberate
+//! unpinning) executed against a simulated
 //! cluster, with a cluster-wide invariant checker (log convergence,
-//! quorum safety, DHT routing health, block availability) asserted at
+//! quorum safety, DHT routing health, block availability, data
+//! survival) asserted at
 //! checkpoints and at quiesce. Scenario runs are deterministic: the same
 //! seed reproduces the identical [`sim::SimStats`].
 //!

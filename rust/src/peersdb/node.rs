@@ -18,7 +18,7 @@ use crate::util::time::{Duration, Nanos};
 use crate::util::{Blob, Rng};
 use crate::validation::{BatchQueue, CostModel, IdentityValidator, Task, Validator};
 use crate::validation::quorum::{QuorumConfig, VoteOutcome, VoteState};
-use std::collections::{BTreeMap, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
 /// Node configuration (the paper's Helm-chart parametrization).
 #[derive(Clone, Debug)]
@@ -59,6 +59,20 @@ pub struct NodeConfig {
     /// random peer (guarantees convergence even when a pubsub
     /// announcement races ahead of subscription gossip). 0 disables.
     pub anti_entropy_every_ticks: u32,
+    /// Availability-repair cadence (§III-B replication maintenance):
+    /// every `repair_interval`, probe the DHT for each known
+    /// contribution's provider count and, when one has fallen below
+    /// [`NodeConfig::replication_target`], re-announce a held copy or
+    /// re-fetch + re-pin a lost one from the surviving providers.
+    /// `Duration::ZERO` (the default) disables the loop entirely — no
+    /// probes, no extra RNG draws — so schedules that predate the loop
+    /// replay bit-identically.
+    pub repair_interval: Duration,
+    /// Provider-record floor the repair loop drives each contribution
+    /// toward. Distinct from the *invariant checker's* target
+    /// (`sim::scenario::InvariantConfig::replication_target`): this is
+    /// what nodes aim for, that is what a test demands.
+    pub replication_target: usize,
     /// ABLATION (benches/sim_validation): answer validation queries only
     /// after in-flight local validations finish — the *blocking* design
     /// the paper's simulation study argues against. Default: async
@@ -88,6 +102,8 @@ impl Default for NodeConfig {
             proc_cost_per_msg: Duration::from_micros(30),
             proc_cost_per_kb: Duration::from_micros(8),
             anti_entropy_every_ticks: 20,
+            repair_interval: Duration::ZERO,
+            replication_target: 3,
             blocking_validation: false,
         }
     }
@@ -191,6 +207,30 @@ pub struct Node {
     /// Purposes remembered across provider-lookup retries.
     retry_purposes: HashMap<Cid, FetchPurpose>,
 
+    // Availability-repair bookkeeping (the §III-B maintenance loop).
+    /// Runtime kill-switch for the repair loop (scenario fault
+    /// `SetRepair`); the loop runs only when this is set *and*
+    /// `repair_interval` is nonzero.
+    repair_enabled: bool,
+    /// When the last repair cycle started.
+    last_repair: Nanos,
+    /// Outstanding provider-count probes: lookup → data root.
+    repair_probes: HashMap<LookupId, Cid>,
+    /// Data roots with a probe in flight (so back-to-back cycles never
+    /// stack probes for one contribution).
+    probing: BTreeSet<Cid>,
+    /// Data roots being re-fetched *by the repair loop*; their
+    /// completion announces a provider record unconditionally — a
+    /// repaired replica nobody can discover raises no availability.
+    repair_fetches: BTreeSet<Cid>,
+    /// Data roots this node deliberately dropped (unpin + GC). Repair
+    /// must never resurrect these locally: the operator decided this
+    /// node stops holding them, and re-replication is the *other*
+    /// nodes' job. A later explicit [`Node::fetch_cid`] clears the mark.
+    dropped: BTreeSet<Cid>,
+    /// Provider-record withdrawals in flight: lookup → key.
+    withdraw_lookups: HashMap<LookupId, Key>,
+
     // Validation bookkeeping. Votes are swept by expiry time — ordered
     // map so the sweep (and everything it triggers) is deterministic.
     votes: BTreeMap<Cid, VoteState>,
@@ -252,6 +292,13 @@ impl Node {
             bootstrap_lookup: None,
             contribution_meta: HashMap::new(),
             retry_purposes: HashMap::new(),
+            repair_enabled: true,
+            last_repair: Nanos::ZERO,
+            repair_probes: HashMap::new(),
+            probing: BTreeSet::new(),
+            repair_fetches: BTreeSet::new(),
+            dropped: BTreeSet::new(),
+            withdraw_lookups: HashMap::new(),
             votes: BTreeMap::new(),
             val_req_index: HashMap::new(),
             events: Vec::new(),
@@ -376,6 +423,9 @@ impl Node {
 
     /// Fetch an arbitrary block by CID (e.g. one whose CID was learned out
     /// of band). Replicated data lands in the blockstore as a root fetch.
+    /// An explicit fetch overrides an earlier deliberate drop: the
+    /// operator asking for the data again is the one way a node rejoins
+    /// the holder set for something it unpinned.
     pub fn fetch_cid(
         &mut self,
         now: Nanos,
@@ -383,7 +433,61 @@ impl Node {
         candidates: Vec<PeerId>,
         out: &mut Outbox<Message>,
     ) {
+        self.dropped.remove(&cid);
         self.fetch_data(now, cid, candidates, out);
+    }
+
+    /// Enable or disable the availability-repair loop at runtime (the
+    /// `Fault::SetRepair` hook; config-level gating is
+    /// [`NodeConfig::repair_interval`]).
+    pub fn set_repair(&mut self, on: bool) {
+        self.repair_enabled = on;
+    }
+
+    /// Whether the repair loop is currently armed.
+    pub fn repair_active(&self) -> bool {
+        self.repair_enabled && self.cfg.repair_interval.0 > 0
+    }
+
+    /// Deliberately unpin every contribution data file held locally —
+    /// own contributions included — and withdraw the matching DHT
+    /// provider records. This models an operator freeing disk under GC
+    /// pressure: the files become collectible by the next
+    /// [`Node::collect_garbage`], while log *entry* blocks stay pinned
+    /// so history remains servable to late joiners. Each dropped root is
+    /// remembered so this node's repair loop never resurrects it; other
+    /// nodes observe the shrunken provider count and re-replicate.
+    /// Returns the number of files unpinned.
+    pub fn unpin_contribution_data(&mut self, now: Nanos, out: &mut Outbox<Message>) -> usize {
+        let roots: Vec<Cid> = self.contributions.data_cids().iter().copied().collect();
+        let mut files = 0;
+        for root in roots {
+            if !self.bs.has(&root) {
+                continue;
+            }
+            chunker::unpin_file(&mut self.bs, &root);
+            self.dropped.insert(root);
+            // Abandon any in-flight replication of the file…
+            self.incomplete_data.remove(&root);
+            self.data_fetches.remove(&root);
+            self.repair_fetches.remove(&root);
+            // …and retract our provider record so repair probes see the
+            // true holder count instead of a stale record aging out.
+            self.start_withdraw(now, Key::from_cid(&root), out);
+            files += 1;
+        }
+        self.metrics.add("files_unpinned", files as u64);
+        files
+    }
+
+    /// Run blockstore garbage collection now, recording the
+    /// `blocks_gcd` / `bytes_gcd` metrics. Returns `(blocks, bytes)`
+    /// collected.
+    pub fn collect_garbage(&mut self) -> (usize, usize) {
+        let (blocks, bytes) = self.bs.gc();
+        self.metrics.add("blocks_gcd", blocks as u64);
+        self.metrics.add("bytes_gcd", bytes as u64);
+        (blocks, bytes)
     }
 
     /// Ask one specific peer for its stored verdict on a CID (a raw
@@ -426,6 +530,14 @@ impl Node {
         let mut sends = dht::engine::Sends::new();
         let lid = self.dht.provide(now, key, &mut sends);
         self.provide_lookups.insert(lid, key);
+        self.wrap_dht(sends, out);
+        self.drain_engines(now, out);
+    }
+
+    fn start_withdraw(&mut self, now: Nanos, key: Key, out: &mut Outbox<Message>) {
+        let mut sends = dht::engine::Sends::new();
+        let lid = self.dht.withdraw(now, key, &mut sends);
+        self.withdraw_lookups.insert(lid, key);
         self.wrap_dht(sends, out);
         self.drain_engines(now, out);
     }
@@ -587,6 +699,18 @@ impl Node {
         from: PeerId,
         out: &mut Outbox<Message>,
     ) {
+        // A block of a file this node deliberately dropped (the fetch
+        // raced the unpin): store it unpinned — the next GC sweeps it —
+        // and do not resume the file's replication.
+        let root = match &purpose {
+            FetchPurpose::DataRoot { data_cid } => *data_cid,
+            FetchPurpose::DataChunk { root } => *root,
+            FetchPurpose::LogEntry => unreachable!("routed in on_bitswap_event"),
+        };
+        if self.dropped.contains(&root) {
+            self.bs.put_trusted(cid, data);
+            return;
+        }
         // Verified upstream by the bitswap engine; adopt the allocation.
         self.bs.put_trusted(cid, data);
         self.bs.pin(&cid, Pin::Replica);
@@ -622,12 +746,122 @@ impl Node {
             created_at,
             completed_at: now,
         });
-        if self.cfg.announce_providers && self.cfg.announce_replicas {
+        // Repair-driven replicas announce *unconditionally*: the whole
+        // point of re-replication is restoring the provider count, and a
+        // copy the DHT cannot discover restores nothing. Ordinary
+        // replicas keep the kubo-faithful batching default
+        // (`announce_replicas: false` — anti-entropy covers discovery).
+        let repair_driven = self.repair_fetches.remove(&data_cid);
+        if repair_driven || (self.cfg.announce_providers && self.cfg.announce_replicas) {
             self.start_provide(now, Key::from_cid(&data_cid), out);
         }
         if self.cfg.auto_validate {
             self.begin_validation(now, data_cid, out);
         }
+    }
+
+    // ======================================================================
+    // Availability repair (§III-B replication maintenance)
+    //
+    // Replication in the base protocol is fire-and-forget: data spreads
+    // when entries arrive, and nothing ever notices that holders have
+    // since unpinned, garbage-collected, or vanished. The repair loop
+    // closes that gap. Every `repair_interval` it walks the known
+    // contributions and probes the DHT for each one's provider count
+    // (an exhaustive `GetProviders`, so the count does not saturate at
+    // the fetch-oriented `providers_needed` early exit). When a count
+    // has fallen below `replication_target`:
+    //
+    // * a node still holding the file re-announces its provider record
+    //   (refreshing the TTL and repairing records lost to churn);
+    // * a node not holding it volunteers to re-fetch and re-pin
+    //   (`Pin::Replica`) from the surviving providers — damped by a
+    //   seeded coin so the expected number of volunteers per cycle
+    //   matches the deficit instead of the whole cluster stampeding;
+    // * a node that *deliberately* dropped the file (unpin + GC) does
+    //   neither: repair distinguishes "lost in flight" from "operator
+    //   said no" and never resurrects removed data on the remover.
+    // ======================================================================
+
+    /// One repair cycle: launch provider-count probes for every known
+    /// contribution that has neither a probe nor a re-fetch in flight.
+    /// Deliberately dropped roots are skipped outright — this node can
+    /// never act on their probes, so walking the DHT for them every
+    /// cycle would be pure noise.
+    fn run_repair(&mut self, now: Nanos, out: &mut Outbox<Message>) {
+        let roots: Vec<Cid> = self.contributions.data_cids().iter().copied().collect();
+        for cid in roots {
+            if self.dropped.contains(&cid)
+                || self.probing.contains(&cid)
+                || self.data_fetches.contains_key(&cid)
+            {
+                continue;
+            }
+            self.metrics.inc("repair_probes");
+            self.probing.insert(cid);
+            let mut sends = dht::engine::Sends::new();
+            let lid = self.dht.find_providers_full(now, Key::from_cid(&cid), &mut sends);
+            self.repair_probes.insert(lid, cid);
+            self.wrap_dht(sends, out);
+        }
+    }
+
+    /// A provider-count probe finished: decide whether (and how) to
+    /// repair `data_cid`.
+    fn on_repair_probe(
+        &mut self,
+        now: Nanos,
+        data_cid: Cid,
+        providers: Vec<PeerId>,
+        out: &mut Outbox<Message>,
+    ) {
+        let target = self.cfg.replication_target.max(1);
+        let holds = chunker::has_file(&self.bs, &data_cid);
+        // Our own announce is stored on the key's closest peers like
+        // anyone else's, so the reply normally counts us already; add
+        // ourselves only when we hold unannounced (a lost record —
+        // exactly what the re-announce below repairs).
+        let mut count = providers.len();
+        if holds && !providers.contains(&self.id) {
+            count += 1;
+        }
+        if count >= target {
+            return;
+        }
+        if holds {
+            self.metrics.inc("repairs_triggered");
+            self.metrics.inc("repair_reannounces");
+            self.start_provide(now, Key::from_cid(&data_cid), out);
+            return;
+        }
+        if self.dropped.contains(&data_cid) {
+            return; // deliberately removed here — never resurrected here
+        }
+        let mut candidates = providers;
+        candidates.retain(|p| *p != self.id);
+        if candidates.is_empty() {
+            return; // nobody left to fetch from; retry next cycle
+        }
+        // Damped volunteering: with ~`deficit` missing replicas and
+        // every non-holder probing, accept with deficit/peers so the
+        // expected volunteers per cycle ≈ the deficit. The floor keeps
+        // sparse tables from stalling repair indefinitely.
+        let peers = self.dht.table.peers().len().max(1);
+        let chance = ((target - count) as f64 / peers as f64).clamp(0.15, 1.0);
+        if !self.rng.chance(chance) {
+            return;
+        }
+        self.metrics.inc("repairs_triggered");
+        self.metrics.inc("repair_refetches");
+        if !self.contribution_meta.contains_key(&data_cid) {
+            if let Some(c) =
+                self.contributions.iter().into_iter().find(|c| c.data_cid == data_cid)
+            {
+                self.contribution_meta.insert(data_cid, (c.author, c.created_at));
+            }
+        }
+        self.repair_fetches.insert(data_cid);
+        self.fetch_data(now, data_cid, candidates, out);
     }
 
     // ======================================================================
@@ -804,10 +1038,18 @@ impl Node {
                         self.dht.announce_provider(key, &closest, &mut sends);
                         self.wrap_dht(sends, out);
                     }
+                    if let Some(key) = self.withdraw_lookups.remove(&id) {
+                        let mut sends = dht::engine::Sends::new();
+                        self.dht.announce_withdrawal(key, &closest, &mut sends);
+                        self.wrap_dht(sends, out);
+                    }
                     let _ = target;
                 }
                 DhtEvent::ProvidersDone { id, key, providers, .. } => {
-                    if let Some((cid, fetch)) = self.provider_lookups.remove(&id) {
+                    if let Some(cid) = self.repair_probes.remove(&id) {
+                        self.probing.remove(&cid);
+                        self.on_repair_probe(now, cid, providers, out);
+                    } else if let Some((cid, fetch)) = self.provider_lookups.remove(&id) {
                         debug_assert_eq!(Key::from_cid(&cid).0, key.0);
                         if providers.is_empty() {
                             self.metrics.inc("provider_lookup_empty");
@@ -817,6 +1059,7 @@ impl Node {
                                 self.retry_purposes.remove(&cid)
                             {
                                 self.data_fetches.remove(&root);
+                                self.repair_fetches.remove(&root);
                             }
                             self.fetch_failed(cid, fetch);
                         } else {
@@ -898,6 +1141,11 @@ impl Node {
     fn fetch_failed(&mut self, cid: Cid, _fetch: Option<FetchId>) {
         self.entry_fetches.remove(&cid);
         self.data_fetches.remove(&cid);
+        // A dead repair fetch loses its announce-unconditionally mark:
+        // the next repair cycle re-volunteers (and re-marks) if the file
+        // is still under-replicated, and an *ordinary* replication that
+        // completes later must not inherit the repair announce.
+        self.repair_fetches.remove(&cid);
         self.metrics.inc("fetch_failed");
     }
 
@@ -1164,6 +1412,16 @@ impl Runner for Node {
                         self.metrics.inc("anti_entropy_syncs");
                     }
                     self.retry_missing_data(now, out);
+                }
+                // Availability repair: probe provider counts and mend
+                // under-replication (no-op until bootstrapped — a
+                // half-synced store would probe a half-known world).
+                if self.repair_active()
+                    && self.is_bootstrapped()
+                    && now.saturating_sub(self.last_repair) >= self.cfg.repair_interval
+                {
+                    self.last_repair = now;
+                    self.run_repair(now, out);
                 }
                 // Flush stale partial validation batches.
                 if self.batch_queue.pending_len() > 0

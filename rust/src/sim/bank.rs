@@ -10,7 +10,7 @@
 
 use crate::peersdb::NodeConfig;
 use crate::sim::regions::Region;
-use crate::sim::scenario::{EclipseInvariant, Fault, Scenario};
+use crate::sim::scenario::{AvailabilityInvariant, EclipseInvariant, Fault, Scenario};
 use crate::util::time::Duration;
 use crate::validation::CostModel;
 
@@ -270,9 +270,105 @@ pub fn adversarial_eclipse() -> Scenario {
         .at(55, Fault::Contribute { node: 7, workload: 4, rows: 20 })
 }
 
+/// Nodes that deliberately unpin + GC in [`gc_pressure`] — the authors
+/// of the scenario's three contributions, in contribution order (so
+/// `report.cids[k]` was authored, and later dropped, by
+/// `GC_PRESSURE_DROPPERS[k]`).
+pub const GC_PRESSURE_DROPPERS: [usize; 3] = [1, 2, 3];
+
+/// Nodes that deliberately unpin + GC in [`halfopen_holders`], in
+/// contribution order (same indexing contract as
+/// [`GC_PRESSURE_DROPPERS`]).
+pub const HALFOPEN_DROPPERS: [usize; 2] = [1, 2];
+
+/// Node configuration for the GC-pressure scenarios: automatic pinning
+/// *off*, so the availability-repair loop is the only mechanism that
+/// creates replicas — nothing can pass the availability invariants by
+/// accident. The node-level target (5) overshoots the invariant target
+/// (3) so that when the droppers strike, enough replicas exist outside
+/// the dropper set for the data to be mathematically guaranteed to
+/// survive.
+fn repair_cfg() -> NodeConfig {
+    NodeConfig {
+        auto_pin: false,
+        repair_interval: Duration::from_secs(8),
+        replication_target: 5,
+        ..NodeConfig::default()
+    }
+}
+
+/// 11. GC pressure — the ROADMAP's availability-repair headline. Nine
+/// peers with auto-pinning *disabled*: every data file initially lives
+/// only on its author, and the repair loop (probe provider counts,
+/// re-announce held data, volunteer to re-fetch under-replicated data)
+/// must spread each file to the node-level replication target. Then all
+/// three authors — a third of the cluster and, for their own files, the
+/// original holders — deliberately unpin, withdraw their provider
+/// records, and garbage-collect. Repair on the surviving nodes must
+/// notice the shrunken provider counts and re-replicate from the
+/// remaining holders; the droppers must never resurrect their own data.
+/// At quiesce the standard replication-target invariant (≥ 3 holders)
+/// and the [`AvailabilityInvariant`] (≥ 1 live honest holder) both
+/// hold; the repair-disabled negative control in `tests/scenarios.rs`
+/// proves the invariant genuinely fires when the loop is off.
+pub fn gc_pressure() -> Scenario {
+    let mut sc = Scenario::named("gc-pressure", 1313, 9);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.cfg = repair_cfg();
+    sc.invariants.availability = Some(AvailabilityInvariant::default());
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(3, Fault::Contribute { node: 2, workload: 1, rows: 30 })
+        .at(6, Fault::Contribute { node: 3, workload: 2, rows: 30 })
+        // Repair has had several cycles to replicate; safety mid-run.
+        .at(45, Fault::Checkpoint)
+        // A third of the cluster frees its disk, authors included.
+        .at(60, Fault::UnpinAndGc { node: 1 })
+        .at(62, Fault::UnpinAndGc { node: 2 })
+        .at(64, Fault::UnpinAndGc { node: 3 })
+}
+
+/// 12. Half-open holders — GC pressure through the directed link plane.
+/// Ten peers, same repair-only replication as [`gc_pressure`]. After
+/// both authors unpin + GC, the surviving replicas sit on the
+/// volunteers — the bulk of them in the node group `3..10`, which
+/// immediately goes half-open toward the rest of the cluster: the
+/// holders' sends arrive (their re-announces keep the provider records
+/// alive, making them look perfectly healthy), but nothing sent *to*
+/// them gets through — `Want`s, DHT queries, and anti-entropy requests
+/// from `{0, 1, 2}` all vanish. Re-replication across the boundary must
+/// route around the phantom holders: fetches time out candidate by
+/// candidate, succeeding only against a same-side replica (if one
+/// exists) or after the link heals, after which repair finishes the job
+/// and the availability invariants hold at quiesce. This is the
+/// nastiest variant the ROADMAP called for: holders that *think* they
+/// are reachable (their announces land) but can never hear a Want.
+pub fn halfopen_holders() -> Scenario {
+    let mut sc = Scenario::named("halfopen-holders", 1414, 10);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.cfg = repair_cfg();
+    sc.invariants.availability = Some(AvailabilityInvariant::default());
+    let holders: Vec<usize> = (3..10).collect();
+    let rest: Vec<usize> = vec![0, 1, 2];
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(3, Fault::Contribute { node: 2, workload: 1, rows: 30 })
+        .at(45, Fault::Checkpoint)
+        // Both authors drop their data…
+        .at(60, Fault::UnpinAndGc { node: 1 })
+        .at(62, Fault::UnpinAndGc { node: 2 })
+        // …and the survivors' side goes half-open the same instant:
+        // announces flow out of `holders`, Wants into it die.
+        .at(64, Fault::AsymmetricPartition { a: holders, b: rest })
+        // Mid-fault, safety must still hold.
+        .at(100, Fault::Checkpoint)
+        .at(150, Fault::Heal)
+}
+
 /// Every replayable bank scenario, in canonical order: the seven
-/// original fault scenarios, the multi-region scale-out headline, and
-/// the two directional-plane scenarios (half-open region, eclipse).
+/// original fault scenarios, the multi-region scale-out headline, the
+/// two directional-plane scenarios (half-open region, eclipse), and the
+/// two GC-pressure repair scenarios.
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -285,6 +381,8 @@ pub fn all() -> Vec<Scenario> {
         multi_region_scale_out(),
         asymmetric_region_halfopen(),
         adversarial_eclipse(),
+        gc_pressure(),
+        halfopen_holders(),
     ]
 }
 
@@ -356,6 +454,54 @@ mod tests {
             .expect("half-open fault present");
         assert_eq!(asym.0, (HALFOPEN_CORE..HALFOPEN_CORE + HALFOPEN_REGION).collect::<Vec<_>>());
         assert_eq!(asym.1, (0..HALFOPEN_CORE).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gc_pressure_shapes_are_consistent() {
+        let droppers: [&[usize]; 2] = [&GC_PRESSURE_DROPPERS, &HALFOPEN_DROPPERS];
+        for (sc, droppers) in [gc_pressure(), halfopen_holders()].iter().zip(droppers) {
+            // Repair must be the only replication path, and armed.
+            assert!(!sc.cfg.auto_pin, "{}: auto-pin would mask repair", sc.name);
+            assert!(sc.cfg.repair_interval.0 > 0, "{}: repair disabled", sc.name);
+            // The node-level target must leave survivors outside the
+            // dropper set: target - 1 replicas beyond the author, more
+            // than can land on the remaining droppers.
+            assert!(
+                sc.cfg.replication_target > droppers.len() + 1,
+                "{}: droppers could hold every replica",
+                sc.name
+            );
+            assert!(sc.invariants.availability.is_some(), "{}: invariant off", sc.name);
+            // Every dropper authored the same-indexed contribution
+            // before dropping, and drops happen after all contributes.
+            let contributes: Vec<(u64, usize)> = sc
+                .events
+                .iter()
+                .filter_map(|e| match e.fault {
+                    Fault::Contribute { node, .. } => Some((e.at.0, node)),
+                    _ => None,
+                })
+                .collect();
+            let drops: Vec<(u64, usize)> = sc
+                .events
+                .iter()
+                .filter_map(|e| match e.fault {
+                    Fault::UnpinAndGc { node } => Some((e.at.0, node)),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(
+                drops.iter().map(|(_, n)| *n).collect::<Vec<_>>(),
+                droppers.to_vec(),
+                "{}: dropper constant drifted from the schedule",
+                sc.name
+            );
+            for (k, (drop_at, node)) in drops.iter().enumerate() {
+                let (c_at, c_node) = contributes[k];
+                assert_eq!(c_node, *node, "{}: cids[{k}] not authored by dropper", sc.name);
+                assert!(c_at < *drop_at, "{}: drop precedes contribution", sc.name);
+            }
+        }
     }
 
     #[test]

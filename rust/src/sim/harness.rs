@@ -119,6 +119,26 @@ pub fn stop_forging(cluster: &mut Cluster<Node>, node: usize) {
     cluster.with_node(node, |n, _, _| n.set_dht_forgery(None));
 }
 
+/// Deliberately unpin every contribution data file on node `idx`,
+/// withdraw its provider records, and garbage-collect — the
+/// `Fault::UnpinAndGc` implementation (property-tested to be
+/// bit-identical to composing the two [`Node`] calls by hand). Returns
+/// `(blocks, bytes)` collected.
+pub fn unpin_and_gc(cluster: &mut Cluster<Node>, idx: usize) -> (usize, usize) {
+    cluster.with_node(idx, |n, now, out| {
+        n.unpin_contribution_data(now, out);
+        n.collect_garbage()
+    })
+}
+
+/// Toggle the availability-repair loop on every current cluster member
+/// (the `Fault::SetRepair` implementation).
+pub fn set_repair(cluster: &mut Cluster<Node>, on: bool) {
+    for i in 0..cluster.len() {
+        cluster.with_node(i, |n, _, _| n.set_repair(on));
+    }
+}
+
 /// Drain accumulated [`NodeEvent`]s from every node.
 pub fn drain_events(cluster: &mut Cluster<Node>) -> Vec<(usize, NodeEvent)> {
     let mut all = Vec::new();

@@ -23,11 +23,13 @@
 //! (symmetric and asymmetric), slow and lossy links, regional outage,
 //! crash/restart churn, flash-crowd joins, root-peer CPU strain,
 //! byzantine validator injection, forged DHT replies (eclipse attacks),
-//! loss spikes — executed against a [`Cluster`] of full PeersDB nodes,
-//! with a cluster-wide invariant checker (contribution-log convergence,
-//! quorum safety, DHT routing-table health, block availability ≥
-//! replication target, and opt-in eclipse resistance) asserted at
-//! mid-run checkpoints and at quiesce. The same seed always reproduces
+//! loss spikes, deliberate unpin + garbage collection (GC pressure) and
+//! repair-loop toggling — executed against a [`Cluster`] of full
+//! PeersDB nodes, with a cluster-wide invariant checker
+//! (contribution-log convergence, quorum safety, DHT routing-table
+//! health, block availability ≥ replication target, and opt-in eclipse
+//! resistance and data survival) asserted at mid-run checkpoints and at
+//! quiesce. The same seed always reproduces
 //! the identical [`SimStats`], so every scenario doubles as a regression
 //! reproduction recipe. The named bank lives in [`bank`] (shared by
 //! `tests/scenarios.rs` and the self-timing `benches/sim_scale.rs`,

@@ -35,7 +35,13 @@
 //!   5. **eclipse resistance** (opt-in, [`EclipseInvariant`]) — a
 //!      designated victim's routing-table view of its own neighborhood
 //!      must intersect the *honest* closest set, i.e. the attackers do
-//!      not own the victim's entire view of the network.
+//!      not own the victim's entire view of the network;
+//!
+//!   6. **data survival** (opt-in, [`AvailabilityInvariant`]) — every
+//!      contribution's data file must remain fetchable from at least
+//!      `min_holders` live honest peers, i.e. GC pressure and holder
+//!      churn did not destroy the last copy (`peersdb`'s availability-
+//!      repair loop is what keeps this true).
 //!
 //! Runs are deterministic: executing the same scenario twice yields the
 //! identical [`SimStats`], digest, and report — which is what makes a
@@ -122,6 +128,18 @@ pub enum Fault {
     /// implausible values) — the malicious-contributor workload for
     /// validation scenarios.
     ContributeCorrupt { node: usize, workload: u32, rows: usize, frac: f64 },
+    /// `node` deliberately unpins every contribution data file it holds
+    /// (own contributions included), withdraws its provider records, and
+    /// garbage-collects — the GC-pressure fault. The node keeps serving
+    /// log entries; only data files are destroyed, and the node's own
+    /// repair loop will refuse to resurrect them (re-replication is the
+    /// surviving holders' job).
+    UnpinAndGc { node: usize },
+    /// Toggle the availability-repair loop on every *current* cluster
+    /// member (peers joining later still get their configured default).
+    /// `SetRepair { on: false }` at schedule start is the negative
+    /// control proving a GC-pressure scenario detects real data loss.
+    SetRepair { on: bool },
     /// Assert the safety invariants *mid-run* (routing health + quorum
     /// safety; convergence and availability are quiesce-only).
     Checkpoint,
@@ -153,6 +171,28 @@ pub struct EclipseInvariant {
     pub attackers: Vec<usize>,
 }
 
+/// The data-survival invariant: checked at quiesce when configured on
+/// [`InvariantConfig::availability`].
+///
+/// Every contribution's data file must be *fully* present — root block
+/// and all chunks, not marked private — on at least `min_holders` online
+/// honest peers. This is the floor beneath the standard
+/// replication-target check: the target says "replication is healthy",
+/// this says "the data still exists at all". A GC-pressure scenario run
+/// with repair disabled demonstrably trips it, which is what proves the
+/// scenario detects real data loss rather than vacuously passing.
+#[derive(Clone, Debug)]
+pub struct AvailabilityInvariant {
+    /// Minimum number of live honest holders per contribution (≥ 1).
+    pub min_holders: usize,
+}
+
+impl Default for AvailabilityInvariant {
+    fn default() -> Self {
+        AvailabilityInvariant { min_holders: 1 }
+    }
+}
+
 /// Invariant-checker knobs.
 #[derive(Clone, Debug)]
 pub struct InvariantConfig {
@@ -165,11 +205,19 @@ pub struct InvariantConfig {
     /// Eclipse-resistance guard (quiesce-only: it is a recovery
     /// property, deliberately violated *during* an attack window).
     pub eclipse: Option<EclipseInvariant>,
+    /// Data-survival guard (quiesce-only: holder loss mid-run is the
+    /// scenario's whole point; what matters is that repair recovered).
+    pub availability: Option<AvailabilityInvariant>,
 }
 
 impl Default for InvariantConfig {
     fn default() -> Self {
-        InvariantConfig { replication_target: 3, byzantine: Vec::new(), eclipse: None }
+        InvariantConfig {
+            replication_target: 3,
+            byzantine: Vec::new(),
+            eclipse: None,
+            availability: None,
+        }
     }
 }
 
@@ -412,6 +460,12 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
                 cids.push((cid, true));
                 contributed += 1;
             }
+            Fault::UnpinAndGc { node } => {
+                harness::unpin_and_gc(&mut cluster, *node);
+            }
+            Fault::SetRepair { on } => {
+                harness::set_repair(&mut cluster, *on);
+            }
             Fault::Checkpoint => {
                 check_invariants(&cluster, &inv, contributed, Phase::Checkpoint).map_err(|e| {
                     format!("scenario '{}' checkpoint at {}: {e}", sc.name, cluster.now())
@@ -559,6 +613,12 @@ pub fn check_invariants(
         check_eclipse(cluster, ec)?;
     }
 
+    // ---- Data survival (quiesce; before the replication-target check so
+    // total loss reads as "data loss", not as a replica shortfall)
+    if let Some(av) = &cfg.availability {
+        check_availability(cluster, av, &cfg.byzantine)?;
+    }
+
     // ---- Bootstrap + log convergence (quiesce) -------------------------
     for &i in &online {
         if !cluster.node(i).is_bootstrapped() {
@@ -635,6 +695,42 @@ pub fn check_eclipse(cluster: &Cluster<Node>, ec: &EclipseInvariant) -> Result<(
     }
 }
 
+/// The [`AvailabilityInvariant`] predicate, exposed for scenario-specific
+/// assertions: every contribution data file referenced by *any* replica's
+/// log must be fully present (root + all chunks, not private) on at least
+/// `min_holders` online non-byzantine peers. Falling below that means the
+/// network destroyed data it was supposed to keep — re-replication either
+/// never ran or could not outpace the holder loss.
+pub fn check_availability(
+    cluster: &Cluster<Node>,
+    av: &AvailabilityInvariant,
+    byzantine: &[usize],
+) -> Result<(), String> {
+    let min = av.min_holders.max(1);
+    let mut cids: BTreeSet<crate::cid::Cid> = BTreeSet::new();
+    for i in 0..cluster.len() {
+        for c in cluster.node(i).contributions.iter() {
+            cids.insert(c.data_cid);
+        }
+    }
+    for cid in &cids {
+        let holders = (0..cluster.len())
+            .filter(|&i| cluster.is_online(i) && !byzantine.contains(&i))
+            .filter(|&i| {
+                let bs = &cluster.node(i).bs;
+                crate::blockstore::chunker::has_file(bs, cid) && !bs.is_private(cid)
+            })
+            .count();
+        if holders < min {
+            return Err(format!(
+                "data loss: {cid:?} is fetchable from {holders} live honest \
+                 holders (availability invariant requires ≥ {min})"
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -708,6 +804,41 @@ mod tests {
         let ec = EclipseInvariant { victim: 1, attackers: vec![2] };
         let err = check_eclipse(&cluster, &ec).expect_err("empty view is eclipsed");
         assert!(err.contains("eclipse"), "{err}");
+    }
+
+    #[test]
+    fn availability_check_flags_total_loss() {
+        // Author a file without ever running the cluster: only node 1
+        // holds it, so one deliberate unpin+GC is total data loss.
+        let specs = (0..3).map(|_| PeerSpec::default()).collect();
+        let mut cluster = harness::build_cluster(7, NetModel::default(), specs);
+        let cid = harness::contribute(&mut cluster, 1, b"performance observations", "spark-sort");
+        let av = AvailabilityInvariant::default();
+        check_availability(&cluster, &av, &[]).expect("the author still holds its file");
+        let (blocks, bytes) = harness::unpin_and_gc(&mut cluster, 1);
+        assert!(blocks > 0 && bytes > 0, "unpin+gc collected nothing");
+        assert!(!crate::blockstore::chunker::has_file(&cluster.node(1).bs, &cid));
+        let err = check_availability(&cluster, &av, &[]).expect_err("no holder left");
+        assert!(err.contains("data loss"), "{err}");
+        // The entry block survives: history stays servable after GC.
+        assert!(cluster.node(1).contributions.len() == 1);
+    }
+
+    #[test]
+    fn set_repair_toggles_every_member() {
+        let specs = (0..3)
+            .map(|_| {
+                let mut s = PeerSpec::default();
+                s.cfg.repair_interval = crate::util::time::Duration::from_secs(5);
+                s
+            })
+            .collect();
+        let mut cluster = harness::build_cluster(9, NetModel::default(), specs);
+        assert!((0..3).all(|i| cluster.node(i).repair_active()));
+        harness::set_repair(&mut cluster, false);
+        assert!((0..3).all(|i| !cluster.node(i).repair_active()));
+        harness::set_repair(&mut cluster, true);
+        assert!((0..3).all(|i| cluster.node(i).repair_active()));
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::cid::Cid;
 use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
 use crate::ipfs_log::{Entry, Join, Log};
 use crate::net::PeerId;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// One shared performance-data contribution. The actual data lives in the
 /// blockstore under `data_cid`; this record is what replicates in the log.
@@ -56,8 +56,10 @@ impl Decode for Contribution {
 #[derive(Clone, Debug, Default)]
 pub struct ContributionsStore {
     log: Log,
-    /// Fast membership test on referenced data CIDs.
-    data_cids: HashSet<Cid>,
+    /// Referenced data CIDs: membership tests plus deterministic,
+    /// decode-free iteration (the availability-repair cycle walks this
+    /// instead of re-decoding every log entry payload).
+    data_cids: BTreeSet<Cid>,
 }
 
 impl ContributionsStore {
@@ -92,6 +94,12 @@ impl ContributionsStore {
     /// Does the store already reference this data CID?
     pub fn contains_data(&self, cid: &Cid) -> bool {
         self.data_cids.contains(cid)
+    }
+
+    /// Every data CID referenced by any entry, in CID order. O(1) to
+    /// obtain and free of payload decoding, unlike [`Self::iter`].
+    pub fn data_cids(&self) -> &BTreeSet<Cid> {
+        &self.data_cids
     }
 
     pub fn contains_entry(&self, cid: &Cid) -> bool {
@@ -176,6 +184,8 @@ mod tests {
         let all = s.iter();
         assert_eq!(all, vec![c1.clone(), c2]);
         assert!(s.contains_data(&c1.data_cid));
+        assert_eq!(s.data_cids().len(), 2);
+        assert!(s.data_cids().contains(&c1.data_cid));
     }
 
     #[test]

@@ -250,3 +250,48 @@ fn restart_resyncs_via_anti_entropy() {
     assert_eq!(cluster.node(3).contributions.len(), 1, "missed entry recovered");
     assert_converged(&mut cluster);
 }
+
+#[test]
+fn repair_replicates_without_auto_pin_and_announces_unconditionally() {
+    // Auto-pinning off: the author is the only holder until the
+    // availability-repair loop replicates. `announce_replicas` is also
+    // off (the kubo-faithful default), which is the regression this
+    // test pins down: repair-driven replicas must announce provider
+    // records *anyway* — a repaired copy the DHT cannot discover does
+    // not raise the provider count, so repair would re-trigger forever.
+    let n = 5;
+    let specs = default_specs(n, |_| NodeConfig {
+        auto_pin: false,
+        repair_interval: Duration::from_secs(5),
+        replication_target: 3,
+        ..NodeConfig::default()
+    });
+    let mut cluster = build_cluster(21, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+    let mut rng = Rng::new(23);
+    let (data, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, 0, 40);
+    let root = contribute(&mut cluster, 1, &data, "spark-sort");
+    cluster.run_for(Duration::from_secs(120));
+
+    let key = peersdb::dht::Key::from_cid(&root);
+    let holders: Vec<usize> = (0..n)
+        .filter(|&i| peersdb::blockstore::chunker::has_file(&cluster.node(i).bs, &root))
+        .collect();
+    assert!(
+        holders.len() >= 3,
+        "repair never reached the replication target: holders {holders:?}"
+    );
+    assert!(holders.iter().any(|&i| i != 1), "no repair-driven replica exists");
+    for &i in &holders {
+        if i == 1 {
+            continue; // the author announced at contribution time
+        }
+        // Every repair-driven holder self-recorded as provider when it
+        // announced (provide() stores the local record immediately).
+        assert!(
+            cluster.node(i).dht.local_providers(&key).contains(&cluster.peer_id(i)),
+            "repair-driven holder {i} never announced its replica"
+        );
+        assert!(cluster.node(i).metrics.counter("repair_refetches") > 0, "node {i}");
+    }
+}

@@ -227,7 +227,7 @@ fn random_peers(rng: &mut Rng, max: usize) -> Vec<PeerId> {
 /// `WireSize` is caught here.
 fn random_message(rng: &mut Rng) -> Message {
     let req_id = rng.next_u64() >> 1;
-    match rng.range(0, 18) {
+    match rng.range(0, 19) {
         0 => Message::Dht(dht::Rpc::Ping { req_id }),
         1 => Message::Dht(dht::Rpc::Pong { req_id }),
         2 => Message::Dht(dht::Rpc::FindNode { req_id, target: Key(rng.bytes32()) }),
@@ -242,6 +242,7 @@ fn random_message(rng: &mut Rng) -> Message {
             key: Key(rng.bytes32()),
             provider: PeerId::from_rng(rng),
         }),
+        18 => Message::Dht(dht::Rpc::RemoveProvider { key: Key(rng.bytes32()) }),
         7 => Message::Bitswap(bitswap::Msg::Want { req_id, cid: random_cid(rng) }),
         8 => Message::Bitswap(bitswap::Msg::Block {
             req_id,
@@ -481,6 +482,202 @@ fn prop_chunker_detects_any_missing_chunk() {
             }
             if chunker::get_file(&bs, &res.root).is_some() {
                 return Err("get_file reassembled a file with a hole".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Blockstore: pins are inviolable under arbitrary put/pin/unpin/gc
+// interleavings (model-based — the mirror map implements the documented
+// semantics and the store must never drift from it)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_blockstore_gc_respects_pins_exactly() {
+    use peersdb::cid::Codec;
+    use std::collections::BTreeSet;
+
+    check_with_rng(
+        "blockstore_gc_pin_model",
+        |r| r.range(1, 150),
+        |n_ops, rng| {
+            let mut bs = BlockStore::new();
+            // Mirror model: cid → (payload length, pin class).
+            let mut model: BTreeMap<Cid, (usize, Option<Pin>)> = BTreeMap::new();
+            let mut known: Vec<Cid> = Vec::new();
+            for _ in 0..*n_ops {
+                match rng.range(0, 10) {
+                    0..=3 => {
+                        // Put: tiny payloads from a small alphabet, so
+                        // deduplicating re-puts happen often.
+                        let len = rng.range(1, 40);
+                        let data = vec![rng.range(0, 4) as u8; len];
+                        let cid = bs.put(Codec::Raw, data);
+                        model.entry(cid).or_insert((len, None));
+                        known.push(cid);
+                    }
+                    4..=6 => {
+                        // `known` may reference blocks a gc collected:
+                        // pinning those must report absence.
+                        if known.is_empty() {
+                            continue;
+                        }
+                        let cid = known[rng.range(0, known.len())];
+                        let pin = if rng.chance(0.5) { Pin::Local } else { Pin::Replica };
+                        let present = bs.pin(&cid, pin);
+                        match model.get_mut(&cid) {
+                            Some((_, p)) => {
+                                if !present {
+                                    return Err("pin() denied a present block".into());
+                                }
+                                // Local is the stronger class: never downgraded.
+                                if *p != Some(Pin::Local) {
+                                    *p = Some(pin);
+                                }
+                            }
+                            None if present => {
+                                return Err("pin() accepted a collected block".into());
+                            }
+                            None => {}
+                        }
+                    }
+                    7 | 8 => {
+                        if known.is_empty() {
+                            continue;
+                        }
+                        let cid = known[rng.range(0, known.len())];
+                        let was = bs.unpin(&cid);
+                        match model.get_mut(&cid) {
+                            Some((_, p)) => {
+                                if was != p.is_some() {
+                                    return Err("unpin() return drifted from model".into());
+                                }
+                                *p = None;
+                            }
+                            None if was => {
+                                return Err("unpin() unpinned a collected block".into());
+                            }
+                            None => {}
+                        }
+                    }
+                    _ => {
+                        let unpinned: Vec<&(usize, Option<Pin>)> =
+                            model.values().filter(|(_, p)| p.is_none()).collect();
+                        let expect_blocks = unpinned.len();
+                        let expect_bytes: usize = unpinned.iter().map(|(l, _)| *l).sum();
+                        let (blocks, bytes) = bs.gc();
+                        if (blocks, bytes) != (expect_blocks, expect_bytes) {
+                            return Err(format!(
+                                "gc returned ({blocks}, {bytes}), model says \
+                                 ({expect_blocks}, {expect_bytes})"
+                            ));
+                        }
+                        model.retain(|_, (_, p)| p.is_some());
+                    }
+                }
+            }
+            // Final sweep, then every property at once.
+            bs.gc();
+            model.retain(|_, (_, p)| p.is_some());
+            for (cid, (_, pin)) in &model {
+                if !bs.has(cid) {
+                    return Err("gc collected a pinned block".into());
+                }
+                if bs.pin_of(cid) != *pin {
+                    return Err("pin class drifted (Local downgraded?)".into());
+                }
+            }
+            // After a gc, the surviving key set IS the pinned set.
+            let surviving: BTreeSet<Cid> = model.keys().copied().collect();
+            if bs.pinned() != surviving {
+                return Err("pinned() differs from the surviving key set".into());
+            }
+            if bs.len() != model.len() {
+                return Err("store holds unmodeled blocks after gc".into());
+            }
+            let bytes: usize = model.values().map(|(l, _)| *l).sum();
+            if bs.bytes_stored() != bytes {
+                return Err("bytes_stored drifted from surviving payloads".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// UnpinAndGc fault ≡ manual unpin + gc composition: the scenario fault
+// is exactly the two Node calls, with no hidden side channel — the
+// whole cluster evolves bit-identically either way
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_unpin_and_gc_fault_equals_manual_composition() {
+    use peersdb::peersdb::NodeConfig;
+    use peersdb::sim::harness::{self, build_cluster, contribute, PeerSpec};
+    use peersdb::sim::model::NetModel;
+    use peersdb::sim::regions::ALL;
+
+    check(
+        "unpin_and_gc_composition",
+        |r| (r.next_u64(), [0usize, 2, 3][r.range(0, 3)]),
+        |(seed, victim)| {
+            let run = |fused: bool| {
+                let specs: Vec<PeerSpec> = (0..4)
+                    .map(|i| PeerSpec {
+                        region: ALL[i % ALL.len()],
+                        start_at: Nanos((i as u64) * 100_000_000),
+                        cfg: NodeConfig {
+                            repair_interval: Duration::from_secs(5),
+                            replication_target: 2,
+                            ..NodeConfig::default()
+                        },
+                        ..Default::default()
+                    })
+                    .collect();
+                let mut cluster = build_cluster(*seed, NetModel::default(), specs);
+                cluster.run_for(Duration::from_secs(10));
+                let mut rng = Rng::new(seed ^ 0xD0);
+                let (file, _) = peersdb::modeling::datagen::generate_contribution(&mut rng, 1, 25);
+                let cid = contribute(&mut cluster, 1, &file, "spark-sort");
+                cluster.run_for(Duration::from_secs(20));
+                if fused {
+                    harness::unpin_and_gc(&mut cluster, *victim);
+                } else {
+                    // The same two Node calls the fault makes, issued as
+                    // separate injections at the same virtual instant.
+                    cluster.with_node(*victim, |n, now, out| {
+                        n.unpin_contribution_data(now, out);
+                    });
+                    cluster.with_node(*victim, |n, _, _| {
+                        n.collect_garbage();
+                    });
+                }
+                cluster.run_for(Duration::from_secs(40));
+                (
+                    cluster.stats.clone(),
+                    cluster.now(),
+                    cluster.node(0).contributions.digest(),
+                    cluster.node(*victim).bs.pinned(),
+                    cluster.node(*victim).metrics.counter("blocks_gcd"),
+                    chunker::has_file(&cluster.node(*victim).bs, &cid),
+                )
+            };
+            let fused = run(true);
+            let composed = run(false);
+            if fused != composed {
+                return Err(format!(
+                    "UnpinAndGc diverged from its manual composition:\n  \
+                     fused:    {:?}\n  composed: {:?}",
+                    fused.0, composed.0
+                ));
+            }
+            if fused.4 == 0 {
+                return Err("unpin+gc collected nothing".into());
+            }
+            if fused.5 {
+                return Err("victim re-replicated deliberately dropped data".into());
             }
             Ok(())
         },

@@ -295,6 +295,119 @@ fn scenario_adversarial_eclipse_recovers() {
     scenario::check_eclipse(&cluster, ec).expect("victim regained honest neighbors");
 }
 
+// ---------------------------------------------------------------------------
+// 11. GC pressure: auto-pin off, repair is the only replication path; a
+//     third of the cluster (the authors) unpins + GCs mid-run, and the
+//     repair loop must re-replicate from the surviving holders.
+// ---------------------------------------------------------------------------
+
+/// Nodes holding the full file `cid` at quiesce.
+fn holders_of(
+    cluster: &peersdb::sim::Cluster<peersdb::peersdb::Node>,
+    cid: &peersdb::cid::Cid,
+) -> Vec<usize> {
+    (0..cluster.len())
+        .filter(|&i| peersdb::blockstore::chunker::has_file(&cluster.node(i).bs, cid))
+        .collect()
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "long repair-loop DES run needs the release profile; CI runs `cargo test --release`"
+)]
+fn scenario_gc_pressure_rereplicates() {
+    let sc = bank::gc_pressure();
+    let (report, cluster) = scenario::run_cluster(&sc).expect("gc-pressure scenario");
+    // Replay determinism (run_cluster doesn't go through run_replayed).
+    let replay = scenario::run(&sc).expect("replay");
+    assert_eq!(report, replay, "gc-pressure scenario not deterministic");
+
+    assert_eq!(report.contributions, 3);
+    assert_eq!(report.checkpoints, 1);
+    // The GC really destroyed data, and the repair loop really acted.
+    for &i in &bank::GC_PRESSURE_DROPPERS {
+        assert!(cluster.node(i).metrics.counter("blocks_gcd") > 0, "node {i} gc'd nothing");
+        assert!(cluster.node(i).metrics.counter("bytes_gcd") > 0, "node {i} freed no bytes");
+    }
+    let repairs: u64 =
+        (0..cluster.len()).map(|i| cluster.node(i).metrics.counter("repairs_triggered")).sum();
+    assert!(repairs > 0, "no node ever triggered a repair");
+    let refetches: u64 =
+        (0..cluster.len()).map(|i| cluster.node(i).metrics.counter("repair_refetches")).sum();
+    assert!(refetches > 0, "repair never re-fetched anything");
+
+    for (k, &dropper) in bank::GC_PRESSURE_DROPPERS.iter().enumerate() {
+        let (cid, _) = report.cids[k];
+        let holders = holders_of(&cluster, &cid);
+        // Availability recovered without the dropper (the harness
+        // already asserted ≥ replication_target; make it explicit)…
+        assert!(holders.len() >= 3, "{cid:?} on only {holders:?}");
+        // …and deliberately dropped data is never resurrected on the
+        // node that dropped it.
+        assert!(
+            !holders.contains(&dropper),
+            "node {dropper} resurrected its deliberately dropped file {cid:?}"
+        );
+    }
+}
+
+#[test]
+fn gc_pressure_data_loss_is_detected_without_repair() {
+    // Negative control: the same schedule with the repair loop switched
+    // off from the first instant. Auto-pinning is off, so nobody ever
+    // replicates the authors' files — when the authors unpin + GC, the
+    // data is gone from every live node and the availability invariant
+    // must fire. This proves the scenario detects real data loss rather
+    // than vacuously passing. (Short quiesce: nothing will heal it.)
+    use peersdb::sim::scenario::{Fault, TimedFault};
+
+    let mut sc = bank::gc_pressure();
+    sc.events.insert(
+        0,
+        TimedFault { at: Duration::ZERO, fault: Fault::SetRepair { on: false } },
+    );
+    sc.quiesce = Duration::from_secs(120);
+    sc.quiesce_poll = Duration::ZERO;
+    let err = scenario::run(&sc).expect_err("destroyed data must trip the invariant");
+    assert!(err.contains("data loss"), "wrong failure: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// 12. Half-open holders: the surviving replicas' announces arrive but
+//     Wants to them vanish — repair must route around the phantoms.
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "long repair-loop DES run needs the release profile; CI runs `cargo test --release`"
+)]
+fn scenario_halfopen_holders_routes_around() {
+    let sc = bank::halfopen_holders();
+    let (report, cluster) = scenario::run_cluster(&sc).expect("half-open holders scenario");
+    let replay = scenario::run(&sc).expect("replay");
+    assert_eq!(report, replay, "half-open holders scenario not deterministic");
+
+    assert_eq!(report.contributions, 2);
+    assert_eq!(report.checkpoints, 2);
+    // The half-open boundary really dropped traffic (Wants, queries).
+    assert!(report.stats.msgs_dropped_blocked > 0, "half-open links never bit");
+    let repairs: u64 =
+        (0..cluster.len()).map(|i| cluster.node(i).metrics.counter("repairs_triggered")).sum();
+    assert!(repairs > 0, "no node ever triggered a repair");
+
+    for (k, &dropper) in bank::HALFOPEN_DROPPERS.iter().enumerate() {
+        let (cid, _) = report.cids[k];
+        let holders = holders_of(&cluster, &cid);
+        assert!(holders.len() >= 3, "{cid:?} on only {holders:?}");
+        assert!(
+            !holders.contains(&dropper),
+            "node {dropper} resurrected its deliberately dropped file {cid:?}"
+        );
+    }
+}
+
 #[test]
 fn eclipse_attack_is_detected_without_recovery_window() {
     // The defense half of the eclipse scenario is the healed tail: links
