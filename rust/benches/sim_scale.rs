@@ -2,8 +2,9 @@
 //!
 //! Runs every scenario in `peersdb::sim::bank` (the seven original
 //! fault scenarios, the 100-peer multi-region scale-out, the half-open
-//! asymmetric region, the adversarial eclipse, and the two GC-pressure
-//! repair scenarios) in this process,
+//! asymmetric region, the adversarial eclipse, the two GC-pressure
+//! repair scenarios, and the defended eclipse — multi-path +
+//! distance-verified lookups under the same attack) in this process,
 //! measuring wall time and events/second, and emits the results as
 //! `BENCH_sim.json` — the machine-readable perf-trajectory artifact CI
 //! uploads on every run. Each record also carries the run's `SimStats`
@@ -21,7 +22,7 @@ fn main() {
     print_environment("SIM SCALE: DES THROUGHPUT BASELINE (perf trajectory)");
     println!(
         "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves), \
-         asymmetric half-open region, adversarial eclipse, and GC-pressure repair\n",
+         asymmetric half-open region, adversarial + defended eclipse, and GC-pressure repair\n",
         bank::all().len()
     );
 

@@ -78,6 +78,16 @@ fn dht_from_json(j: &Json, mut d: DhtConfig) -> Result<DhtConfig, String> {
     if let Some(v) = j.path("rpc_timeout_ms").and_then(|v| v.as_u64()) {
         d.rpc_timeout = Duration::from_millis(v);
     }
+    // Eclipse-hardening knobs (defenses default off; see `dht::lookup`).
+    if let Some(v) = j.path("lookup_paths").and_then(|v| v.as_u64()) {
+        d.lookup_paths = v.max(1) as usize;
+    }
+    if let Some(v) = j.path("verify_peers").and_then(|v| v.as_bool()) {
+        d.verify_peers = v;
+    }
+    if let Some(v) = j.path("verify_retry_ms").and_then(|v| v.as_u64()) {
+        d.verify_retry = Duration::from_millis(v.max(1));
+    }
     Ok(d)
 }
 

@@ -5,13 +5,38 @@
 //! `(PeerId, Rpc)` pairs; the owning node wraps them into its wire
 //! message. Completed lookups surface as [`DhtEvent`]s drained by the
 //! owner after each call.
+//!
+//! The iterative-lookup state machine itself lives in
+//! [`crate::dht::lookup`]; the engine maps request ids to
+//! `(lookup, path)` pairs, turns [`lookup::Drive`] verdicts into sends,
+//! and owns the two eclipse-hardening defenses configured on
+//! [`DhtConfig`]:
+//!
+//! * **disjoint-path lookups** ([`DhtConfig::lookup_paths`]) — every
+//!   lookup fans out over d paths that never share queried peers;
+//! * **distance-verified routing updates** ([`DhtConfig::verify_peers`])
+//!   — closer-peer candidates must be strictly closer to the target
+//!   than the peer reporting them, and hearsay peers are quarantined in
+//!   the routing table's `pending_verify` tier (periodically pinged;
+//!   admitted only once they answer an RPC themselves). Peers whose RPCs
+//!   time out are demoted back into that tier rather than forgotten, so
+//!   an eclipse that relies on making honest peers *look* dead has to
+//!   keep them unreachable forever — the engine re-verifies and
+//!   re-admits them as soon as connectivity returns.
+//!
+//! Both defenses default off; with `lookup_paths = 1` and
+//! `verify_peers = false` the engine is RPC-for-RPC identical to the
+//! pre-extraction implementation (property-tested against a legacy
+//! reference in `tests/prop.rs`), which is what keeps every recorded
+//! scenario replay bit-identical.
 
 use crate::codec::bin::{varint_len, Decode, DecodeError, Encode, Reader, Writer};
 use crate::dht::kbucket::{RoutingTable, K};
 use crate::dht::key::Key;
+use crate::dht::lookup::{self, LookupConfig, LookupKind, LookupState};
 use crate::net::{PeerId, WireSize};
 use crate::util::time::{Duration, Nanos};
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, HashMap};
 
 /// Kademlia RPC messages.
 #[derive(Clone, Debug, PartialEq)]
@@ -128,7 +153,7 @@ impl WireSize for Rpc {
 /// Engine configuration.
 #[derive(Clone, Debug)]
 pub struct DhtConfig {
-    /// Lookup parallelism (Kademlia α).
+    /// Lookup parallelism (Kademlia α), per lookup path.
     pub alpha: usize,
     /// Result-set size (Kademlia k).
     pub k: usize,
@@ -138,6 +163,25 @@ pub struct DhtConfig {
     pub provider_ttl: Duration,
     /// Stop a provider lookup early after this many providers (0 = full).
     pub providers_needed: usize,
+    /// Number of disjoint lookup paths (d). With the default 1 every
+    /// lookup is the classic single-path iterative walk; with d > 1 the
+    /// candidate frontier is dealt into d independent paths that never
+    /// share queried peers, merging results only at termination — a
+    /// colluding minority cannot poison every path (eclipse hardening;
+    /// see [`crate::dht::lookup`]).
+    pub lookup_paths: usize,
+    /// Distance-verified routing updates (default off): reject
+    /// closer-peer candidates that are not strictly closer to the target
+    /// than the replying peer, and never admit hearsay peers into the
+    /// routing table until they answer an RPC themselves — first contact
+    /// goes to the table's `pending_verify` tier and is verified by a
+    /// ping. Timed-out peers are demoted back to that tier (and
+    /// periodically re-verified) instead of forgotten.
+    pub verify_peers: bool,
+    /// Base interval between verification pings for one quarantined
+    /// peer; doubles per failed attempt, capped at 8× (only used when
+    /// [`DhtConfig::verify_peers`] is on).
+    pub verify_retry: Duration,
 }
 
 impl Default for DhtConfig {
@@ -148,6 +192,9 @@ impl Default for DhtConfig {
             rpc_timeout: Duration::from_secs(2),
             provider_ttl: Duration::from_secs(60 * 60),
             providers_needed: 3,
+            lookup_paths: 1,
+            verify_peers: false,
+            verify_retry: Duration::from_secs(4),
         }
     }
 }
@@ -165,36 +212,9 @@ pub enum DhtEvent {
     ProvidersDone { id: LookupId, key: Key, providers: Vec<PeerId>, closest: Vec<PeerId> },
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum LookupKind {
-    FindNode,
-    GetProviders,
-}
-
-struct Lookup {
-    kind: LookupKind,
-    target: Key,
-    /// Candidates by distance; value = queried?
-    shortlist: BTreeMap<[u8; 32], (PeerId, bool)>,
-    in_flight: usize,
-    providers: BTreeSet<PeerId>,
-    /// Exhaustive provider lookup: ignore the `providers_needed` early
-    /// exit and walk the full k-closest set. Used by provider-*count*
-    /// probes (availability repair), where "enough to fetch from" and
-    /// "how many exist" are different questions.
-    full: bool,
-    done: bool,
-}
-
-impl Lookup {
-    fn insert_candidate(&mut self, target: &Key, peer: PeerId) {
-        let d = target.distance(&Key::from_peer(peer)).0;
-        self.shortlist.entry(d).or_insert((peer, false));
-    }
-}
-
 struct PendingRpc {
-    lookup: Option<LookupId>,
+    /// The lookup and path this request belongs to, if any.
+    lookup: Option<(LookupId, usize)>,
     peer: PeerId,
     sent_at: Nanos,
 }
@@ -216,7 +236,7 @@ pub struct Engine {
     next_req: u64,
     next_lookup: u64,
     pending: BTreeMap<u64, PendingRpc>,
-    lookups: HashMap<LookupId, Lookup>,
+    lookups: HashMap<LookupId, LookupState>,
     /// key → provider → record
     providers: HashMap<Key, BTreeMap<PeerId, ProviderRecord>>,
     /// Completed-lookup events for the owner to drain.
@@ -232,6 +252,14 @@ pub struct Engine {
     forge: Option<Vec<PeerId>>,
     /// Replies whose contents were forged (attack-visibility metric).
     pub replies_forged: u64,
+    /// Paths started by disjoint-path lookups (d ≥ 2); zero while the
+    /// defense is off, so legacy stats stay untouched.
+    pub lookup_paths_started: u64,
+    /// Closer-peer candidates rejected by distance verification.
+    pub closer_peers_rejected: u64,
+    /// Peers that entered the routing table's `pending_verify` tier
+    /// (hearsay first contacts plus timed-out demotions).
+    pub unverified_peers_quarantined: u64,
 }
 
 /// Outgoing RPCs accumulate here; the node wraps them in its wire type.
@@ -253,6 +281,9 @@ impl Engine {
             rpcs_timed_out: 0,
             forge: None,
             replies_forged: 0,
+            lookup_paths_started: 0,
+            closer_peers_rejected: 0,
+            unverified_peers_quarantined: 0,
         }
     }
 
@@ -286,7 +317,7 @@ impl Engine {
         &mut self,
         to: PeerId,
         rpc: Rpc,
-        lookup: Option<LookupId>,
+        lookup: Option<(LookupId, usize)>,
         now: Nanos,
         out: &mut Sends,
     ) {
@@ -308,17 +339,56 @@ impl Engine {
         id
     }
 
+    /// Whether `rpc` answers a request we sent to `from` (still pending).
+    /// Under [`DhtConfig::verify_peers`] this is the one way a peer
+    /// proves itself: it answered an RPC of ours.
+    fn is_pending_reply(&self, from: PeerId, rpc: &Rpc) -> bool {
+        let req_id = match rpc {
+            Rpc::Pong { req_id }
+            | Rpc::FindNodeReply { req_id, .. }
+            | Rpc::GetProvidersReply { req_id, .. } => *req_id,
+            _ => return false,
+        };
+        self.pending.get(&req_id).is_some_and(|p| p.peer == from)
+    }
+
+    /// Quarantine `peer` in the routing table's `pending_verify` tier
+    /// (no-op if it is already tabled or quarantined), counting first
+    /// admissions. `demoted` marks a once-tabled peer evicted on
+    /// timeout — the tier never lets hearsay displace those.
+    fn quarantine(&mut self, peer: PeerId, not_before: Nanos, demoted: bool) {
+        if self.table.quarantine(peer, not_before, demoted) {
+            self.unverified_peers_quarantined += 1;
+        }
+    }
+
     // ----- server side -----------------------------------------------------
 
     /// Handle an inbound RPC; may emit replies and lookup progress.
     pub fn on_rpc(&mut self, now: Nanos, from: PeerId, rpc: Rpc, out: &mut Sends) {
-        self.table.touch(from, now);
+        if !self.cfg.verify_peers {
+            self.table.touch(from, now);
+        } else if self.table.contains(&from) || self.is_pending_reply(from, &rpc) {
+            // Already verified, or proving itself right now by answering
+            // one of our RPCs: (re)admit and refresh.
+            self.table.touch(from, now);
+        } else {
+            // First contact from an unverified peer: serve it, but keep
+            // it out of the routing table until it answers a ping.
+            self.quarantine(from, now, false);
+        }
         match rpc {
             Rpc::Ping { req_id } => {
                 out.push((from, Rpc::Pong { req_id }));
             }
             Rpc::Pong { req_id } => {
-                self.pending.remove(&req_id);
+                // Sender-checked: only the peer we pinged can settle the
+                // request — a third party echoing a guessed req_id must
+                // not burn the pending entry (it would silently cancel a
+                // verification ping and strand the real peer).
+                if self.pending.get(&req_id).is_some_and(|p| p.peer == from) {
+                    self.pending.remove(&req_id);
+                }
             }
             Rpc::FindNode { req_id, target } => {
                 let closer = match self.forged_peers(from) {
@@ -400,8 +470,25 @@ impl Engine {
     // ----- client side ------------------------------------------------------
 
     /// Seed the routing table (bootstrap peers learned out of band).
+    /// Seeds are trusted first contacts: they bypass `pending_verify`.
     pub fn add_seed(&mut self, now: Nanos, peer: PeerId) {
         self.table.touch(peer, now);
+    }
+
+    /// Record a peer learned by hearsay from a message body (e.g. a
+    /// join-handshake sample list): admitted directly when verification
+    /// is off — identical to [`Engine::add_seed`] — but quarantined for
+    /// a verification ping under [`DhtConfig::verify_peers`], so a
+    /// single crafted message can never stuff the routing table.
+    pub fn add_hearsay(&mut self, now: Nanos, peer: PeerId) {
+        if peer == self.own {
+            return;
+        }
+        if self.cfg.verify_peers {
+            self.quarantine(peer, now, false);
+        } else {
+            self.table.touch(peer, now);
+        }
     }
 
     /// Start an iterative FIND_NODE lookup toward `target`.
@@ -454,20 +541,23 @@ impl Engine {
     ) -> LookupId {
         let id = LookupId(self.next_lookup);
         self.next_lookup += 1;
-        let mut lk = Lookup {
-            kind,
-            target,
-            shortlist: BTreeMap::new(),
-            in_flight: 0,
-            providers: BTreeSet::new(),
-            full,
-            done: false,
-        };
-        for p in self.table.closest(&target, self.cfg.k) {
-            lk.insert_candidate(&target, p);
+        let paths = self.cfg.lookup_paths.max(1);
+        if paths > 1 {
+            self.lookup_paths_started += paths as u64;
         }
+        let cfg = LookupConfig {
+            alpha: self.cfg.alpha,
+            k: self.cfg.k,
+            providers_needed: self.cfg.providers_needed,
+            paths,
+            verify_distance: self.cfg.verify_peers,
+        };
+        let seeds = self.table.closest(&target, self.cfg.k);
+        let lk = LookupState::new(self.own, kind, target, full, cfg, seeds);
         self.lookups.insert(id, lk);
-        self.drive_lookup(now, id, out);
+        for path in 0..paths {
+            self.drive_path(now, id, path, out);
+        }
         id
     }
 
@@ -480,106 +570,81 @@ impl Engine {
         closer: Vec<PeerId>,
         out: &mut Sends,
     ) {
-        let Some(pending) = self.pending.remove(&req_id) else {
-            return; // late reply to an expired RPC
-        };
+        // Sender-checked consumption: a reply settles a pending request
+        // only when it comes from the peer the request went to; a late
+        // reply to an expired RPC, or a spoofed req_id from a third
+        // party, is ignored without touching the entry.
+        match self.pending.get(&req_id) {
+            Some(p) if p.peer == from => {}
+            _ => return,
+        }
+        let pending = self.pending.remove(&req_id).expect("checked above");
+        // Under verification, only hearsay that passes the same
+        // strictly-closer rule the shortlist applies
+        // ([`lookup::strictly_closer`] — one authoritative predicate)
+        // earns a quarantine slot and a verification ping; forged
+        // lateral names cost the attacker a rejection counter, nothing
+        // more. When the reply's lookup is already gone (a late reply
+        // inside the timeout window) there is no target to judge
+        // against, so no hearsay is quarantined at all.
+        let target = pending
+            .lookup
+            .and_then(|(lid, _)| self.lookups.get(&lid))
+            .map(|lk| lk.target());
         for p in &closer {
-            if *p != self.own {
+            if *p == self.own {
+                continue;
+            }
+            if self.cfg.verify_peers {
+                if target.is_some_and(|t| lookup::strictly_closer(&t, from, *p)) {
+                    // Hearsay: quarantine until the peer answers an RPC
+                    // itself (a no-op for already-verified peers).
+                    self.quarantine(*p, now, false);
+                }
+            } else {
                 self.table.touch(*p, now);
             }
         }
-        let Some(lookup_id) = pending.lookup else { return };
+        let Some((lookup_id, path)) = pending.lookup else { return };
         let Some(lk) = self.lookups.get_mut(&lookup_id) else { return };
-        if lk.done {
-            return;
-        }
-        lk.in_flight = lk.in_flight.saturating_sub(1);
-        let target = lk.target;
-        // Mark the replier as queried (it is already in the shortlist).
-        let d = target.distance(&Key::from_peer(from)).0;
-        if let Some(entry) = lk.shortlist.get_mut(&d) {
-            entry.1 = true;
-        }
-        for p in closer {
-            if p != self.own {
-                lk.insert_candidate(&target, p);
-            }
-        }
-        for p in providers {
-            lk.providers.insert(p);
-        }
-        self.drive_lookup(now, lookup_id, out);
+        self.closer_peers_rejected += lk.on_reply(path, from, providers, &closer);
+        self.drive_path(now, lookup_id, path, out);
     }
 
-    /// Issue queries up to α parallelism; detect completion.
-    fn drive_lookup(&mut self, now: Nanos, id: LookupId, out: &mut Sends) {
+    /// Turn one path's [`lookup::Drive`] verdict into sends or the
+    /// completion event.
+    fn drive_path(&mut self, now: Nanos, id: LookupId, path: usize, out: &mut Sends) {
         let Some(lk) = self.lookups.get_mut(&id) else { return };
-        if lk.done {
-            return;
-        }
-        let kind = lk.kind;
-        let target = lk.target;
-
-        // Early exit for provider lookups with enough providers (never
-        // taken by exhaustive provider-count probes).
-        let enough_providers = kind == LookupKind::GetProviders
-            && !lk.full
-            && self.cfg.providers_needed > 0
-            && lk.providers.len() >= self.cfg.providers_needed;
-
-        // Completion: the k closest candidates have all been queried and
-        // nothing is in flight.
-        let k_closest_all_queried = lk
-            .shortlist
-            .values()
-            .take(self.cfg.k)
-            .all(|(_, queried)| *queried);
-        if enough_providers || (k_closest_all_queried && lk.in_flight == 0) {
-            lk.done = true;
-            let closest: Vec<PeerId> = lk
-                .shortlist
-                .values()
-                .take(self.cfg.k)
-                .map(|(p, _)| *p)
-                .collect();
-            let providers: Vec<PeerId> = lk.providers.iter().copied().collect();
-            let ev = match kind {
-                LookupKind::FindNode => DhtEvent::LookupDone { id, target, closest },
-                LookupKind::GetProviders => {
-                    DhtEvent::ProvidersDone { id, key: target, providers, closest }
-                }
-            };
-            self.lookups.remove(&id);
-            self.events.push(ev);
-            return;
-        }
-
-        // Query the next unqueried candidates among the k closest.
-        let mut to_query = Vec::new();
-        {
-            let lk = self.lookups.get_mut(&id).unwrap();
-            for (_, (peer, queried)) in lk.shortlist.iter_mut().take(self.cfg.k) {
-                if lk.in_flight + to_query.len() >= self.cfg.alpha {
-                    break;
-                }
-                if !*queried {
-                    *queried = true; // mark queried-on-send
-                    to_query.push(*peer);
+        let (kind, target) = (lk.kind(), lk.target());
+        match lk.drive(path) {
+            lookup::Drive::Wait => {}
+            lookup::Drive::Query(peers) => {
+                for peer in peers {
+                    let req_id = self.fresh_req();
+                    let rpc = match kind {
+                        LookupKind::FindNode => Rpc::FindNode { req_id, target },
+                        LookupKind::GetProviders => Rpc::GetProviders { req_id, key: target },
+                    };
+                    self.send(peer, rpc, Some((id, path)), now, out);
                 }
             }
-            lk.in_flight += to_query.len();
-        }
-        for peer in to_query {
-            let req_id = self.fresh_req();
-            let rpc = match kind {
-                LookupKind::FindNode => Rpc::FindNode { req_id, target },
-                LookupKind::GetProviders => Rpc::GetProviders { req_id, key: target },
-            };
-            self.send(peer, rpc, Some(id), now, out);
+            lookup::Drive::Done => {
+                let lk = self.lookups.remove(&id).expect("lookup exists");
+                let (closest, providers) = lk.result();
+                let ev = match kind {
+                    LookupKind::FindNode => DhtEvent::LookupDone { id, target, closest },
+                    LookupKind::GetProviders => {
+                        DhtEvent::ProvidersDone { id, key: target, providers, closest }
+                    }
+                };
+                self.events.push(ev);
+            }
         }
     }
 
-    /// Expire timed-out RPCs; called from a periodic tick.
+    /// Expire timed-out RPCs; called from a periodic tick. Under
+    /// [`DhtConfig::verify_peers`] this also sends verification pings to
+    /// quarantined peers that are due a (re-)verification attempt.
     pub fn tick(&mut self, now: Nanos, out: &mut Sends) {
         let timeout = self.cfg.rpc_timeout;
         let expired: Vec<u64> = self
@@ -591,13 +656,30 @@ impl Engine {
         for req_id in expired {
             let p = self.pending.remove(&req_id).unwrap();
             self.rpcs_timed_out += 1;
+            // Demoted provenance is earned by actually having been in
+            // the table: a queried-but-never-tabled name (e.g. accepted
+            // hearsay that never answered) re-enters quarantine as plain
+            // hearsay, so forged ids can never buy the protected tier.
+            let was_tabled = self.table.contains(&p.peer);
             self.table.remove(&p.peer); // unresponsive peer
-            if let Some(lid) = p.lookup {
+            if self.cfg.verify_peers {
+                // Demote, don't forget: the peer may be a victim of the
+                // network rather than dead. It re-enters the table the
+                // moment it answers a verification ping.
+                self.quarantine(p.peer, now + self.cfg.verify_retry, was_tabled);
+            }
+            if let Some((lid, path)) = p.lookup {
                 if let Some(lk) = self.lookups.get_mut(&lid) {
-                    lk.in_flight = lk.in_flight.saturating_sub(1);
+                    lk.on_timeout(path);
                     // peer stays marked queried → we move on
-                    self.drive_lookup(now, lid, out);
+                    self.drive_path(now, lid, path, out);
                 }
+            }
+        }
+        if self.cfg.verify_peers {
+            for peer in self.table.due_for_verify(now, self.cfg.verify_retry) {
+                let req_id = self.fresh_req();
+                self.send(peer, Rpc::Ping { req_id }, None, now, out);
             }
         }
     }
@@ -722,6 +804,41 @@ mod tests {
         // The found closest must equal the brute-force k closest among the
         // peers reachable through the root (its table may have evicted a
         // few under k-bucket pressure — that is correct Kademlia behaviour).
+        let mut universe = engines.get(&root).unwrap().table.peers();
+        universe.push(root);
+        universe.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+        let top: Vec<PeerId> = universe.into_iter().filter(|p| *p != origin).take(5).collect();
+        assert_eq!(&closest[..5], &top[..]);
+    }
+
+    #[test]
+    fn multipath_find_node_converges_with_disjoint_paths() {
+        // The same star-topology convergence claim, under 3-path
+        // disjoint lookups: the merged result must still be the true
+        // closest set even though no peer is queried by two paths.
+        let now = Nanos(0);
+        let mut rng = Rng::new(41);
+        let ids: Vec<PeerId> = (0..30).map(|_| PeerId::from_rng(&mut rng)).collect();
+        let cfg = DhtConfig { lookup_paths: 3, ..DhtConfig::default() };
+        let mut engines: HashMap<PeerId, Engine> =
+            ids.iter().map(|id| (*id, Engine::new(*id, cfg.clone()))).collect();
+        let root = ids[1];
+        for a in ids.iter().skip(2) {
+            engines.get_mut(a).unwrap().add_seed(now, root);
+            engines.get_mut(&root).unwrap().add_seed(now, *a);
+        }
+        engines.get_mut(&ids[0]).unwrap().add_seed(now, root);
+        engines.get_mut(&root).unwrap().add_seed(now, ids[0]);
+        let target = Key(rng.bytes32());
+        let origin = ids[0];
+        let mut out = Sends::new();
+        engines.get_mut(&origin).unwrap().find_node(now, target, &mut out);
+        let queue: Vec<_> = out.into_iter().map(|(to, rpc)| (origin, to, rpc)).collect();
+        settle(&mut engines, queue, now);
+        let e = engines.get_mut(&origin).unwrap();
+        assert_eq!(e.lookup_paths_started, 3);
+        let ev = e.events.pop().expect("lookup done");
+        let DhtEvent::LookupDone { closest, .. } = ev else { panic!("wrong event") };
         let mut universe = engines.get(&root).unwrap().table.peers();
         universe.push(root);
         universe.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
@@ -963,5 +1080,138 @@ mod tests {
         let mut out3 = Sends::new();
         engines.get_mut(&a).unwrap().on_rpc(now, b, pong, &mut out3);
         assert!(engines.get_mut(&a).unwrap().pending.is_empty());
+    }
+
+    fn verify_cfg() -> DhtConfig {
+        DhtConfig { verify_peers: true, ..DhtConfig::default() }
+    }
+
+    #[test]
+    fn hearsay_is_quarantined_until_it_answers() {
+        // An unverified stranger's *request* must not place it in the
+        // routing table; answering our verification ping must.
+        let mut rng = Rng::new(51);
+        let own = PeerId::from_rng(&mut rng);
+        let stranger = PeerId::from_rng(&mut rng);
+        let mut e = Engine::new(own, verify_cfg());
+        let mut out = Sends::new();
+        let key = Key(rng.bytes32());
+        e.on_rpc(Nanos(0), stranger, Rpc::GetProviders { req_id: 1, key }, &mut out);
+        assert!(!out.is_empty(), "the request is still served");
+        assert!(!e.table.contains(&stranger), "stranger admitted without verification");
+        assert!(e.table.is_quarantined(&stranger));
+        assert_eq!(e.unverified_peers_quarantined, 1);
+        // The tick emits a verification ping…
+        let mut out = Sends::new();
+        e.tick(Nanos(1), &mut out);
+        let Some((to, Rpc::Ping { req_id })) = out.pop() else {
+            panic!("expected a verification ping")
+        };
+        assert_eq!(to, stranger);
+        // …and the pong admits the peer.
+        let mut out = Sends::new();
+        e.on_rpc(Nanos(2), stranger, Rpc::Pong { req_id }, &mut out);
+        assert!(e.table.contains(&stranger));
+        assert!(!e.table.is_quarantined(&stranger));
+    }
+
+    #[test]
+    fn timeout_demotes_to_quarantine_and_reverifies() {
+        // The recovery mechanism behind `bank::defended_eclipse`: a peer
+        // evicted on timeout is demoted to pending_verify, re-pinged, and
+        // re-admitted the moment connectivity returns.
+        let mut rng = Rng::new(52);
+        let own = PeerId::from_rng(&mut rng);
+        let peer = PeerId::from_rng(&mut rng);
+        let mut e = Engine::new(own, verify_cfg());
+        e.add_seed(Nanos(0), peer);
+        assert!(e.table.contains(&peer));
+        let target = Key(rng.bytes32());
+        let mut out = Sends::new();
+        e.find_node(Nanos(0), target, &mut out);
+        assert_eq!(out.len(), 1, "one candidate to query");
+        // The peer never answers: past the timeout it leaves the table
+        // but lands in quarantine instead of being forgotten.
+        let mut out = Sends::new();
+        e.tick(Nanos(2_000_000_000), &mut out);
+        assert!(!e.table.contains(&peer));
+        assert!(e.table.is_quarantined(&peer));
+        assert_eq!(e.unverified_peers_quarantined, 1);
+        // After the retry interval a verification ping goes out; the
+        // answer restores the peer into the table.
+        let mut out = Sends::new();
+        e.tick(Nanos(8_000_000_000), &mut out);
+        let ping = out.iter().find_map(|(to, rpc)| match rpc {
+            Rpc::Ping { req_id } if *to == peer => Some(*req_id),
+            _ => None,
+        });
+        let req_id = ping.expect("re-verification ping");
+        let mut out = Sends::new();
+        e.on_rpc(Nanos(8_100_000_000), peer, Rpc::Pong { req_id }, &mut out);
+        assert!(e.table.contains(&peer), "verified peer re-admitted");
+        assert!(!e.table.is_quarantined(&peer));
+    }
+
+    #[test]
+    fn spoofed_reply_cannot_burn_a_pending_request() {
+        // A third party echoing a guessed req_id must not consume the
+        // pending entry — otherwise an attacker could cancel every
+        // verification ping and keep honest peers quarantined forever.
+        let mut rng = Rng::new(54);
+        let own = PeerId::from_rng(&mut rng);
+        let (b, c) = (PeerId::from_rng(&mut rng), PeerId::from_rng(&mut rng));
+        let mut e = Engine::new(own, verify_cfg());
+        let key = Key(rng.bytes32());
+        let mut out = Sends::new();
+        e.on_rpc(Nanos(0), b, Rpc::GetProviders { req_id: 9, key }, &mut out);
+        assert!(e.table.is_quarantined(&b));
+        let mut out = Sends::new();
+        e.tick(Nanos(1), &mut out);
+        let Some((to, Rpc::Ping { req_id })) = out.pop() else {
+            panic!("verification ping expected")
+        };
+        assert_eq!(to, b);
+        // The attacker races the pong under b's req_id.
+        let mut out = Sends::new();
+        e.on_rpc(Nanos(2), c, Rpc::Pong { req_id }, &mut out);
+        assert!(!e.table.contains(&b), "b must not be admitted by someone else's pong");
+        assert!(!e.table.contains(&c), "the spoofer earns nothing");
+        // The pending entry survived, so b's genuine answer still lands.
+        let mut out = Sends::new();
+        e.on_rpc(Nanos(3), b, Rpc::Pong { req_id }, &mut out);
+        assert!(e.table.contains(&b), "the real peer is verified");
+        assert!(e.pending.is_empty(), "the genuine pong settles the request");
+    }
+
+    #[test]
+    fn distance_verification_rejects_and_skips_lateral_hearsay() {
+        let mut rng = Rng::new(53);
+        let own = PeerId::from_rng(&mut rng);
+        let target = Key(rng.bytes32());
+        // Rank a pool by distance to the target to pick the roles.
+        let mut pool: Vec<PeerId> = (0..9).map(|_| PeerId::from_rng(&mut rng)).collect();
+        pool.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+        let (closer, replier, farther) = (pool[0], pool[4], pool[8]);
+        let mut e = Engine::new(own, verify_cfg());
+        e.add_seed(Nanos(0), replier);
+        let mut out = Sends::new();
+        e.find_node(Nanos(0), target, &mut out);
+        let Some((to, Rpc::FindNode { req_id, .. })) = out.pop() else { panic!() };
+        assert_eq!(to, replier);
+        let reply = Rpc::FindNodeReply { req_id, closer: vec![farther, closer] };
+        let mut out = Sends::new();
+        e.on_rpc(Nanos(1), replier, reply, &mut out);
+        assert_eq!(e.closer_peers_rejected, 1, "the lateral candidate is rejected");
+        // Only the strictly-closer candidate is chased…
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, closer);
+        // …and neither hearsay peer entered the table. The surviving
+        // candidate waits in quarantine; the rejected lateral one does
+        // not even earn a verification ping.
+        assert!(!e.table.contains(&farther) && !e.table.contains(&closer));
+        assert!(e.table.is_quarantined(&closer));
+        assert!(!e.table.is_quarantined(&farther), "lateral hearsay must not draw pings");
+        // The replier answered our RPC, so it *is* (re)admitted.
+        assert!(e.table.contains(&replier));
     }
 }

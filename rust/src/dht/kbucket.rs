@@ -1,11 +1,22 @@
-//! LRU k-buckets and the routing table.
+//! LRU k-buckets and the routing table, plus the `pending_verify`
+//! first-contact tier used by distance-verified routing updates
+//! (`DhtConfig::verify_peers`): peers known only by hearsay — or peers
+//! that stopped answering — wait here until they answer an RPC
+//! themselves, instead of occupying bucket slots on an attacker's word.
 
 use crate::dht::key::Key;
 use crate::net::PeerId;
-use crate::util::time::Nanos;
+use crate::util::time::{Duration, Nanos};
+use std::collections::BTreeMap;
 
 /// Default bucket capacity (Kademlia's `k`).
 pub const K: usize = 20;
+
+/// Capacity of the `pending_verify` tier (see
+/// [`RoutingTable::quarantine`]); when full, the entry farthest from the
+/// own id is displaced — the *close* unverified peers are the ones an
+/// eclipse targets, so they are the ones worth re-verifying.
+pub const QUARANTINE_CAP: usize = 4 * K;
 
 #[derive(Clone, Debug)]
 struct Contact {
@@ -77,10 +88,29 @@ impl KBucket {
     }
 }
 
-/// The routing table: 256 buckets indexed by XOR-distance prefix.
+/// Re-verification bookkeeping for one quarantined peer.
+#[derive(Clone, Copy, Debug)]
+struct VerifyState {
+    /// Earliest instant the next verification attempt may go out.
+    next_attempt: Nanos,
+    /// Attempts made so far (drives the exponential backoff).
+    failures: u32,
+    /// `true` when this peer once sat in a bucket and was demoted on
+    /// timeout (as opposed to pure hearsay). Demoted peers are the
+    /// eclipse-recovery lifeline, so hearsay can never displace them.
+    demoted: bool,
+}
+
+/// The routing table: 256 buckets indexed by XOR-distance prefix, plus
+/// the bounded `pending_verify` quarantine tier (empty — and free —
+/// unless the engine runs with `verify_peers` on).
 pub struct RoutingTable {
     own: Key,
     buckets: Vec<KBucket>,
+    /// Peers known but not yet admitted: hearsay first contacts and
+    /// timed-out demotions, awaiting a successful verification RPC.
+    /// Ordered map so verification-ping emission is deterministic.
+    pending_verify: BTreeMap<PeerId, VerifyState>,
 }
 
 impl RoutingTable {
@@ -88,6 +118,7 @@ impl RoutingTable {
         RoutingTable {
             own,
             buckets: vec![KBucket::default(); 256],
+            pending_verify: BTreeMap::new(),
         }
     }
 
@@ -95,11 +126,103 @@ impl RoutingTable {
         self.own
     }
 
-    /// Record contact with a peer (inserts or refreshes).
+    /// Record contact with a peer (inserts or refreshes). A quarantined
+    /// peer being touched has been verified by the caller — it leaves
+    /// the `pending_verify` tier as it enters its bucket (the emptiness
+    /// guard keeps this branch-only on the verify-off hot path).
     pub fn touch(&mut self, peer: PeerId, now: Nanos) {
+        if !self.pending_verify.is_empty() {
+            self.pending_verify.remove(&peer);
+        }
         if let Some(i) = self.own.bucket_index(&Key::from_peer(peer)) {
             self.buckets[i].touch(peer, now);
         }
+    }
+
+    /// Hold `peer` in the `pending_verify` tier until it answers an RPC:
+    /// the first-contact quarantine behind distance-verified routing
+    /// updates. No-op (returning `false`) for the own id, peers already
+    /// in a bucket, and peers already quarantined. `not_before` gates
+    /// the first verification attempt (used to pause just-demoted
+    /// peers); `demoted` records provenance — a peer evicted from a
+    /// bucket on timeout, versus pure hearsay.
+    ///
+    /// At capacity, displacement is **provenance-aware**: hearsay may
+    /// only displace farther hearsay (a newcomer farther than every
+    /// hearsay entry is dropped), while a demoted peer displaces the
+    /// farthest hearsay entry outright and competes with other demoted
+    /// entries by distance. An attacker flooding forged names near the
+    /// own id therefore churns the hearsay sub-pool at worst — it can
+    /// never flush a demoted (once-verified) peer out of
+    /// re-verification, which is what the eclipse recovery depends on.
+    pub fn quarantine(&mut self, peer: PeerId, not_before: Nanos, demoted: bool) -> bool {
+        if self.own.bucket_index(&Key::from_peer(peer)).is_none()
+            || self.contains(&peer)
+            || self.pending_verify.contains_key(&peer)
+        {
+            return false;
+        }
+        if self.pending_verify.len() >= QUARANTINE_CAP {
+            let dist = |p: &PeerId| self.own.distance(&Key::from_peer(*p));
+            let hearsay_victim = self
+                .pending_verify
+                .iter()
+                .filter(|(_, st)| !st.demoted)
+                .map(|(p, _)| *p)
+                .max_by_key(dist);
+            let victim = match hearsay_victim {
+                // Hearsay vs hearsay and demoted vs demoted compete by
+                // distance; demoted vs hearsay always wins.
+                Some(v) if demoted || dist(&peer) < dist(&v) => v,
+                Some(_) => return false,
+                None if demoted => {
+                    let farthest = *self
+                        .pending_verify
+                        .keys()
+                        .max_by_key(|p| dist(*p))
+                        .expect("tier is non-empty at capacity");
+                    if dist(&peer) >= dist(&farthest) {
+                        return false;
+                    }
+                    farthest
+                }
+                None => return false,
+            };
+            self.pending_verify.remove(&victim);
+        }
+        self.pending_verify
+            .insert(peer, VerifyState { next_attempt: not_before, failures: 0, demoted });
+        true
+    }
+
+    /// Whether `peer` currently sits in the `pending_verify` tier.
+    pub fn is_quarantined(&self, peer: &PeerId) -> bool {
+        self.pending_verify.contains_key(peer)
+    }
+
+    /// Number of quarantined peers (diagnostics).
+    pub fn quarantined_len(&self) -> usize {
+        self.pending_verify.len()
+    }
+
+    /// Quarantined peers due a verification attempt at `now`, in id
+    /// order. Each returned peer's backoff is bumped — the next attempt
+    /// is scheduled `base × 2^min(failures, 3)` ahead — so the caller
+    /// just sends one ping per returned peer. A peer that answers is
+    /// promoted by [`RoutingTable::touch`]; one that never answers is
+    /// retried forever at the capped backoff (an eclipse must therefore
+    /// keep its victims unreachable *permanently* to keep them out).
+    pub fn due_for_verify(&mut self, now: Nanos, base: Duration) -> Vec<PeerId> {
+        let mut due = Vec::new();
+        for (peer, st) in self.pending_verify.iter_mut() {
+            if st.next_attempt <= now {
+                due.push(*peer);
+                let backoff = Duration(base.0 << st.failures.min(3));
+                st.failures = st.failures.saturating_add(1);
+                st.next_attempt = now + backoff;
+            }
+        }
+        due
     }
 
     pub fn remove(&mut self, peer: &PeerId) {
@@ -152,7 +275,10 @@ impl RoutingTable {
     /// 1. no bucket exceeds `K` contacts,
     /// 2. the own id never appears in the table,
     /// 3. every contact sits in the bucket its XOR distance selects,
-    /// 4. no peer appears twice.
+    /// 4. no peer appears twice,
+    /// 5. the `pending_verify` tier respects its capacity and is
+    ///    disjoint from the buckets (a peer is verified or not — never
+    ///    both).
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut seen = std::collections::HashSet::new();
         for (i, b) in self.buckets.iter().enumerate() {
@@ -170,6 +296,17 @@ impl RoutingTable {
                 if !seen.insert(p) {
                     return Err(format!("duplicate contact {p:?}"));
                 }
+            }
+        }
+        if self.pending_verify.len() > QUARANTINE_CAP {
+            return Err(format!(
+                "pending_verify over capacity ({} > {QUARANTINE_CAP})",
+                self.pending_verify.len()
+            ));
+        }
+        for p in self.pending_verify.keys() {
+            if seen.contains(p) {
+                return Err(format!("{p:?} is both tabled and quarantined"));
             }
         }
         Ok(())
@@ -252,6 +389,116 @@ mod tests {
         let mut rt = RoutingTable::new(Key::from_peer(me));
         rt.touch(me, Nanos(0));
         assert_eq!(rt.len(), 0);
+    }
+
+    #[test]
+    fn quarantine_holds_until_touch_promotes() {
+        let mut rng = Rng::new(9);
+        let own = Key(rng.bytes32());
+        let mut rt = RoutingTable::new(own);
+        let p = PeerId::from_rng(&mut rng);
+        assert!(rt.quarantine(p, Nanos(10), false));
+        assert!(!rt.quarantine(p, Nanos(10), true), "double quarantine is a no-op");
+        assert!(rt.is_quarantined(&p));
+        assert!(!rt.contains(&p));
+        rt.check_invariants().unwrap();
+        // Not due before `not_before`; due (with backoff bump) after.
+        assert!(rt.due_for_verify(Nanos(5), Duration::from_secs(4)).is_empty());
+        assert_eq!(rt.due_for_verify(Nanos(10), Duration::from_secs(4)), vec![p]);
+        assert!(
+            rt.due_for_verify(Nanos(11), Duration::from_secs(4)).is_empty(),
+            "backoff postpones the next attempt"
+        );
+        // Touch = verified: bucket in, tier out.
+        rt.touch(p, Nanos(12));
+        assert!(rt.contains(&p));
+        assert!(!rt.is_quarantined(&p));
+        rt.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quarantine_rejects_tabled_peers_and_own_id() {
+        let mut rng = Rng::new(10);
+        let me = PeerId::from_rng(&mut rng);
+        let mut rt = RoutingTable::new(Key::from_peer(me));
+        assert!(!rt.quarantine(me, Nanos(0), true), "own id never quarantined");
+        let p = PeerId::from_rng(&mut rng);
+        rt.touch(p, Nanos(0));
+        assert!(!rt.quarantine(p, Nanos(1), false), "tabled peers need no verification");
+        assert_eq!(rt.quarantined_len(), 0);
+    }
+
+    #[test]
+    fn quarantine_capacity_keeps_the_closest() {
+        let mut rng = Rng::new(11);
+        let own = Key(rng.bytes32());
+        let mut rt = RoutingTable::new(own);
+        let mut pool = peers(QUARANTINE_CAP + 10, 12);
+        for p in &pool {
+            rt.quarantine(*p, Nanos(0), false);
+        }
+        assert_eq!(rt.quarantined_len(), QUARANTINE_CAP);
+        rt.check_invariants().unwrap();
+        // The retained set is exactly the CAP closest to the own id.
+        pool.sort_by_key(|p| own.distance(&Key::from_peer(*p)));
+        for p in &pool[..QUARANTINE_CAP] {
+            assert!(rt.is_quarantined(p), "close peer displaced");
+        }
+        for p in &pool[QUARANTINE_CAP..] {
+            assert!(!rt.is_quarantined(p), "far peer retained");
+        }
+    }
+
+    #[test]
+    fn hearsay_cannot_displace_demoted_peers() {
+        // The displacement attack the provenance rule exists to stop: an
+        // attacker nominating forged names arbitrarily close to the own
+        // id must never flush a demoted (once-verified) peer out of the
+        // re-verification tier.
+        let mut rng = Rng::new(14);
+        let own = Key(rng.bytes32());
+        let mut rt = RoutingTable::new(own);
+        let demoted = peers(5, 15);
+        for p in &demoted {
+            assert!(rt.quarantine(*p, Nanos(0), true));
+        }
+        // Fill the rest of the tier with hearsay, then flood far more.
+        let flood = peers(3 * QUARANTINE_CAP, 16);
+        for p in &flood {
+            rt.quarantine(*p, Nanos(0), false);
+        }
+        assert_eq!(rt.quarantined_len(), QUARANTINE_CAP);
+        for p in &demoted {
+            assert!(rt.is_quarantined(p), "hearsay flood displaced a demoted peer");
+        }
+        rt.check_invariants().unwrap();
+        // A demoted newcomer, however, always earns a slot over hearsay…
+        let late = peers(1, 17)[0];
+        assert!(rt.quarantine(late, Nanos(0), true));
+        assert!(rt.is_quarantined(&late));
+        // …without touching the other demoted entries.
+        for p in &demoted {
+            assert!(rt.is_quarantined(p));
+        }
+        assert_eq!(rt.quarantined_len(), QUARANTINE_CAP);
+    }
+
+    #[test]
+    fn due_for_verify_backs_off_exponentially() {
+        let mut rng = Rng::new(13);
+        let own = Key(rng.bytes32());
+        let mut rt = RoutingTable::new(own);
+        let p = PeerId::from_rng(&mut rng);
+        rt.quarantine(p, Nanos(0), true);
+        let base = Duration::from_secs(4);
+        let mut t = Nanos(0);
+        // Attempts at +4, +8, +16, +32, then capped at +32 forever.
+        for expect in [4u64, 8, 16, 32, 32, 32] {
+            assert_eq!(rt.due_for_verify(t, base), vec![p]);
+            let next = Nanos(t.0 + expect * 1_000_000_000);
+            assert!(rt.due_for_verify(Nanos(next.0 - 1), base).is_empty());
+            t = next;
+        }
     }
 
     #[test]

@@ -1,0 +1,519 @@
+//! The sans-io iterative-lookup state machine behind [`crate::dht::Engine`].
+//!
+//! Extracted from the engine so the lookup logic — candidate shortlists,
+//! α-parallel query selection, timeout accounting, termination — is a
+//! self-contained, property-testable value with **no knowledge of RPCs,
+//! request ids, or timers**. The engine owns the wire concerns: it maps
+//! replies and timeouts back to `(lookup, path)` pairs and turns the
+//! [`Drive`] verdicts this module returns into actual `FindNode` /
+//! `GetProviders` sends. `find_node`, `find_providers`,
+//! `find_providers_full`, `provide`, and `withdraw` all instantiate this
+//! one machine.
+//!
+//! ## Disjoint-path lookups (eclipse hardening)
+//!
+//! With [`LookupConfig::paths`] = d > 1 the seed candidates are dealt
+//! round-robin (by distance rank) into d *independent* paths. Every path
+//! runs the classic iterative algorithm on its own shortlist, but a
+//! global claim set guarantees the per-path **queried** sets stay
+//! pairwise disjoint: once any path has queried a peer, no sibling path
+//! will ever query it (a sibling that ranks the peer in its own top-k
+//! simply skips it, as if it had been queried). Results merge only at
+//! termination — the k closest candidates over the union of all path
+//! shortlists, and the union of all provider records seen. A colluding
+//! minority that owns one path's frontier therefore cannot poison the
+//! merged result unless it owns *every* path (S/Kademlia's d-disjoint
+//! lookup argument).
+//!
+//! With `paths = 1` the machine is, step for step, the exact algorithm
+//! the engine inlined before the extraction: same selection order, same
+//! termination condition, same results — property-tested against a
+//! line-for-line reference of the legacy code in `tests/prop.rs`, which
+//! is what keeps every pre-refactor scenario replay bit-identical.
+//!
+//! ## Distance-verified candidates (the other half of the hardening)
+//!
+//! With [`LookupConfig::verify_distance`] set, a closer-peer candidate
+//! from a reply is accepted only if it is *strictly closer* to the
+//! target than the peer that reported it. An honest Kademlia hop always
+//! makes progress toward the target, so the filter costs convergence
+//! nothing, while a forged reply pointing "sideways" at colluders no
+//! longer plants them in the shortlist. Rejections are counted and
+//! surfaced by [`LookupState::on_reply`] so the engine can export the
+//! `closer_peers_rejected` metric.
+
+use crate::dht::key::Key;
+use crate::net::PeerId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// What kind of RPC an iterative lookup issues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LookupKind {
+    FindNode,
+    GetProviders,
+}
+
+/// Lookup-shape knobs, snapshotted from
+/// [`crate::dht::DhtConfig`] when the lookup starts.
+#[derive(Clone, Copy, Debug)]
+pub struct LookupConfig {
+    /// Per-path query parallelism (Kademlia α).
+    pub alpha: usize,
+    /// Result-set size (Kademlia k).
+    pub k: usize,
+    /// Stop a provider lookup early once this many providers are known
+    /// (0 = never; exhaustive lookups ignore it regardless).
+    pub providers_needed: usize,
+    /// Number of disjoint lookup paths (d). 1 = the classic single-path
+    /// iterative lookup.
+    pub paths: usize,
+    /// Reject closer-peer candidates that are not strictly closer to the
+    /// target than the peer reporting them.
+    pub verify_distance: bool,
+}
+
+/// The distance-verification rule, shared by the shortlist admission
+/// filter ([`LookupState::on_reply`]) and the engine's hearsay
+/// quarantine gate so the two can never drift: a candidate learned from
+/// `from` is admissible for `target` only when it is *strictly closer*
+/// to the target than `from` itself.
+pub fn strictly_closer(target: &Key, from: PeerId, candidate: PeerId) -> bool {
+    target.distance(&Key::from_peer(candidate)) < target.distance(&Key::from_peer(from))
+}
+
+/// What the engine should do after driving a path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Drive {
+    /// The whole lookup (every path) finished; read
+    /// [`LookupState::result`] and drop the state.
+    Done,
+    /// Send a query to each of these peers, attributed to the driven
+    /// path (order matters: it is the distance order requests go out in,
+    /// which request-id assignment — and thus replay determinism —
+    /// depends on).
+    Query(Vec<PeerId>),
+    /// Nothing to do until a reply or timeout arrives.
+    Wait,
+}
+
+/// One independent lookup path: a distance-ordered candidate shortlist
+/// plus in-flight accounting.
+#[derive(Default)]
+struct Path {
+    /// Candidates keyed by XOR distance to the target; value =
+    /// `(peer, queried?)`. A peer claimed by a sibling path is marked
+    /// queried without ever being sent to.
+    shortlist: BTreeMap<[u8; 32], (PeerId, bool)>,
+    in_flight: usize,
+    /// Peers this path actually sent a query to (diagnostics + the
+    /// disjointness property; a strict subset of the `queried` marks).
+    queried: BTreeSet<PeerId>,
+}
+
+/// A multi-path iterative lookup in progress. See the module docs for
+/// the state-machine contract.
+pub struct LookupState {
+    own: PeerId,
+    kind: LookupKind,
+    target: Key,
+    /// Exhaustive provider lookup: ignore the `providers_needed` early
+    /// exit and walk the full k-closest set (provider-*count* probes).
+    full: bool,
+    alpha: usize,
+    k: usize,
+    providers_needed: usize,
+    verify_distance: bool,
+    paths: Vec<Path>,
+    /// Peers queried by *some* path — the disjointness guarantee.
+    claimed: BTreeSet<PeerId>,
+    /// Union of provider records seen on any path.
+    providers: BTreeSet<PeerId>,
+    done: bool,
+}
+
+impl LookupState {
+    /// Start a lookup. `seeds` is the distance-ordered candidate list
+    /// (the caller's k closest known peers to `target`); candidates are
+    /// dealt round-robin across `cfg.paths` paths so every path starts
+    /// from a different slice of the neighborhood.
+    pub fn new(
+        own: PeerId,
+        kind: LookupKind,
+        target: Key,
+        full: bool,
+        cfg: LookupConfig,
+        seeds: Vec<PeerId>,
+    ) -> LookupState {
+        let paths = cfg.paths.max(1);
+        let mut lk = LookupState {
+            own,
+            kind,
+            target,
+            full,
+            alpha: cfg.alpha,
+            k: cfg.k,
+            providers_needed: cfg.providers_needed,
+            verify_distance: cfg.verify_distance,
+            paths: (0..paths).map(|_| Path::default()).collect(),
+            claimed: BTreeSet::new(),
+            providers: BTreeSet::new(),
+            done: false,
+        };
+        for (rank, peer) in seeds.into_iter().enumerate() {
+            lk.insert_candidate(rank % paths, peer);
+        }
+        lk
+    }
+
+    pub fn kind(&self) -> LookupKind {
+        self.kind
+    }
+
+    pub fn target(&self) -> Key {
+        self.target
+    }
+
+    /// Number of paths this lookup runs.
+    pub fn paths(&self) -> usize {
+        self.paths.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Peers path `pi` actually queried (sent a request to), in id
+    /// order. Pairwise disjoint across paths by construction.
+    pub fn queried(&self, pi: usize) -> Vec<PeerId> {
+        self.paths[pi].queried.iter().copied().collect()
+    }
+
+    /// Path `pi`'s current k-closest candidate view (merged into the
+    /// final result at termination).
+    pub fn path_closest(&self, pi: usize) -> Vec<PeerId> {
+        self.paths[pi].shortlist.values().take(self.k).map(|(p, _)| *p).collect()
+    }
+
+    /// The merged result: the k closest candidates over the union of all
+    /// path shortlists, plus the union of all provider records seen.
+    /// Meaningful once [`LookupState::is_done`]; harmless earlier.
+    pub fn result(&self) -> (Vec<PeerId>, Vec<PeerId>) {
+        let mut merged: BTreeMap<[u8; 32], PeerId> = BTreeMap::new();
+        for path in &self.paths {
+            for (d, (peer, _)) in &path.shortlist {
+                merged.entry(*d).or_insert(*peer);
+            }
+        }
+        let closest: Vec<PeerId> = merged.into_values().take(self.k).collect();
+        let providers: Vec<PeerId> = self.providers.iter().copied().collect();
+        (closest, providers)
+    }
+
+    fn insert_candidate(&mut self, pi: usize, peer: PeerId) {
+        if peer == self.own {
+            return;
+        }
+        let d = self.target.distance(&Key::from_peer(peer)).0;
+        self.paths[pi].shortlist.entry(d).or_insert((peer, false));
+    }
+
+    /// Feed a reply that arrived for a query path `pi` sent to `from`.
+    /// Marks the replier answered, merges `providers`, and admits the
+    /// `closer` candidates into the path's shortlist (minus self, and —
+    /// under distance verification — minus candidates not strictly
+    /// closer to the target than `from`). Returns how many candidates
+    /// the distance filter rejected. Call [`LookupState::drive`] for the
+    /// same path afterwards.
+    pub fn on_reply(
+        &mut self,
+        pi: usize,
+        from: PeerId,
+        providers: Vec<PeerId>,
+        closer: &[PeerId],
+    ) -> u64 {
+        if self.done {
+            return 0;
+        }
+        let from_dist = self.target.distance(&Key::from_peer(from));
+        {
+            let path = &mut self.paths[pi];
+            path.in_flight = path.in_flight.saturating_sub(1);
+            // Mark the replier as queried (it is already in the shortlist).
+            if let Some(entry) = path.shortlist.get_mut(&from_dist.0) {
+                entry.1 = true;
+            }
+        }
+        let mut rejected = 0;
+        for &p in closer {
+            if p == self.own {
+                continue;
+            }
+            if self.verify_distance && !strictly_closer(&self.target, from, p) {
+                rejected += 1;
+                continue;
+            }
+            self.insert_candidate(pi, p);
+        }
+        for p in providers {
+            self.providers.insert(p);
+        }
+        rejected
+    }
+
+    /// A query path `pi` sent has timed out: the peer stays marked
+    /// queried (we move on), only the in-flight slot frees up. Call
+    /// [`LookupState::drive`] for the same path afterwards.
+    pub fn on_timeout(&mut self, pi: usize) {
+        if self.done {
+            return;
+        }
+        let path = &mut self.paths[pi];
+        path.in_flight = path.in_flight.saturating_sub(1);
+    }
+
+    /// Advance path `pi`: detect whole-lookup completion, otherwise pick
+    /// the next unqueried candidates among the path's k closest, up to α
+    /// in flight. Candidates already claimed by a sibling path are
+    /// marked off (never re-queried) and selection continues past them.
+    pub fn drive(&mut self, pi: usize) -> Drive {
+        if self.done {
+            return Drive::Wait;
+        }
+        loop {
+            if self.complete() {
+                self.done = true;
+                return Drive::Done;
+            }
+            let (to_query, marked_claimed) = self.select(pi);
+            if !to_query.is_empty() {
+                return Drive::Query(to_query);
+            }
+            if !marked_claimed {
+                return Drive::Wait;
+            }
+            // Claimed-elsewhere candidates were marked off without a
+            // send; that may have completed the path — re-check.
+        }
+    }
+
+    /// Whole-lookup termination: enough providers (fetch-oriented
+    /// provider lookups only), or every path has its k closest
+    /// candidates queried with nothing in flight.
+    fn complete(&self) -> bool {
+        let enough_providers = self.kind == LookupKind::GetProviders
+            && !self.full
+            && self.providers_needed > 0
+            && self.providers.len() >= self.providers_needed;
+        enough_providers
+            || self.paths.iter().all(|p| {
+                p.in_flight == 0 && p.shortlist.values().take(self.k).all(|(_, queried)| *queried)
+            })
+    }
+
+    /// Query selection for one path; returns the peers to send to and
+    /// whether any sibling-claimed candidate was marked off.
+    fn select(&mut self, pi: usize) -> (Vec<PeerId>, bool) {
+        let LookupState { paths, claimed, alpha, k, .. } = self;
+        let path = &mut paths[pi];
+        let in_flight = path.in_flight;
+        let mut to_query = Vec::new();
+        let mut marked_claimed = false;
+        for (_, (peer, queried)) in path.shortlist.iter_mut().take(*k) {
+            if in_flight + to_query.len() >= *alpha {
+                break;
+            }
+            if *queried {
+                continue;
+            }
+            if claimed.contains(peer) {
+                // A sibling path already queried this peer; disjointness
+                // forbids a second query, so mark it off for this path.
+                *queried = true;
+                marked_claimed = true;
+                continue;
+            }
+            *queried = true; // mark queried-on-send
+            claimed.insert(*peer);
+            to_query.push(*peer);
+        }
+        path.in_flight += to_query.len();
+        for p in &to_query {
+            path.queried.insert(*p);
+        }
+        (to_query, marked_claimed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg(paths: usize) -> LookupConfig {
+        LookupConfig { alpha: 3, k: 20, providers_needed: 3, paths, verify_distance: false }
+    }
+
+    fn peers(n: usize, rng: &mut Rng) -> Vec<PeerId> {
+        (0..n).map(|_| PeerId::from_rng(rng)).collect()
+    }
+
+    #[test]
+    fn empty_seed_completes_immediately() {
+        let mut rng = Rng::new(1);
+        let own = PeerId::from_rng(&mut rng);
+        let target = Key(rng.bytes32());
+        for d in [1, 3] {
+            let mut lk =
+                LookupState::new(own, LookupKind::FindNode, target, false, cfg(d), Vec::new());
+            assert_eq!(lk.drive(0), Drive::Done);
+            assert!(lk.is_done());
+            let (closest, providers) = lk.result();
+            assert!(closest.is_empty() && providers.is_empty());
+        }
+    }
+
+    #[test]
+    fn single_path_queries_in_distance_order_up_to_alpha() {
+        let mut rng = Rng::new(2);
+        let own = PeerId::from_rng(&mut rng);
+        let target = Key(rng.bytes32());
+        let mut seeds = peers(8, &mut rng);
+        seeds.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+        let mut lk =
+            LookupState::new(own, LookupKind::FindNode, target, false, cfg(1), seeds.clone());
+        let Drive::Query(q) = lk.drive(0) else { panic!("expected queries") };
+        assert_eq!(q, seeds[..3].to_vec(), "first α queries go to the closest seeds");
+        // Replies without new candidates walk the rest of the shortlist.
+        let mut outstanding: Vec<PeerId> = q;
+        while let Some(peer) = outstanding.pop() {
+            lk.on_reply(0, peer, Vec::new(), &[]);
+            match lk.drive(0) {
+                Drive::Query(more) => outstanding.extend(more),
+                Drive::Done => break,
+                Drive::Wait => {}
+            }
+        }
+        assert!(lk.is_done());
+        let (closest, _) = lk.result();
+        assert_eq!(closest, seeds, "all seeds ranked in the merged result");
+        assert_eq!(lk.queried(0), {
+            let mut s = seeds.clone();
+            s.sort();
+            s
+        });
+    }
+
+    #[test]
+    fn provider_early_exit_skips_remaining_candidates() {
+        let mut rng = Rng::new(3);
+        let own = PeerId::from_rng(&mut rng);
+        let target = Key(rng.bytes32());
+        let mut seeds = peers(10, &mut rng);
+        seeds.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+        let provs = peers(3, &mut rng);
+        let mut lk =
+            LookupState::new(own, LookupKind::GetProviders, target, false, cfg(1), seeds.clone());
+        let Drive::Query(q) = lk.drive(0) else { panic!() };
+        lk.on_reply(0, q[0], provs.clone(), &[]);
+        assert_eq!(lk.drive(0), Drive::Done, "3 providers satisfy providers_needed");
+        let (_, got) = lk.result();
+        let mut want = provs;
+        want.sort();
+        assert_eq!(got, want);
+        // The exhaustive flavor ignores the early exit.
+        let mut full =
+            LookupState::new(own, LookupKind::GetProviders, target, true, cfg(1), seeds);
+        let Drive::Query(q) = full.drive(0) else { panic!() };
+        full.on_reply(0, q[0], peers(4, &mut rng), &[]);
+        assert_ne!(full.drive(0), Drive::Done, "full lookup keeps walking");
+    }
+
+    #[test]
+    fn sibling_claim_is_skipped_not_requeried() {
+        // Path 1 learns (via a reply) a candidate path 0 already queried:
+        // it must mark the candidate off without a second query, and the
+        // lookup must still terminate (no deadlock on claimed peers).
+        let mut rng = Rng::new(4);
+        let own = PeerId::from_rng(&mut rng);
+        let target = Key(rng.bytes32());
+        let mut seeds = peers(2, &mut rng);
+        seeds.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+        let (s0, s1) = (seeds[0], seeds[1]);
+        let mut lk = LookupState::new(own, LookupKind::FindNode, target, false, cfg(2), seeds);
+        let Drive::Query(q0) = lk.drive(0) else { panic!() };
+        assert_eq!(q0, vec![s0]);
+        let Drive::Query(q1) = lk.drive(1) else { panic!() };
+        assert_eq!(q1, vec![s1]);
+        // s1's reply names s0 — already claimed by path 0.
+        lk.on_reply(1, s1, Vec::new(), &[s0]);
+        assert_eq!(lk.drive(1), Drive::Wait, "path 1 marks s0 off; path 0 still in flight");
+        lk.on_reply(0, s0, Vec::new(), &[]);
+        assert_eq!(lk.drive(0), Drive::Done);
+        assert_eq!(lk.queried(0), vec![s0]);
+        assert_eq!(lk.queried(1), vec![s1], "s0 was never re-queried by path 1");
+    }
+
+    #[test]
+    fn distance_verification_rejects_lateral_candidates() {
+        let mut rng = Rng::new(5);
+        let own = PeerId::from_rng(&mut rng);
+        let target = Key(rng.bytes32());
+        // Rank a pool by distance to target: replier in the middle,
+        // one candidate closer, one farther.
+        let mut pool = peers(9, &mut rng);
+        pool.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+        let (closer, replier, farther) = (pool[0], pool[4], pool[8]);
+        let mut c = cfg(1);
+        c.verify_distance = true;
+        let mut lk =
+            LookupState::new(own, LookupKind::FindNode, target, false, c, vec![replier]);
+        let Drive::Query(q) = lk.drive(0) else { panic!() };
+        assert_eq!(q, vec![replier]);
+        let rejected = lk.on_reply(0, replier, Vec::new(), &[farther, closer, replier]);
+        // `farther` is lateral hearsay; `replier` itself is not strictly
+        // closer than itself either. Only `closer` survives.
+        assert_eq!(rejected, 2);
+        let Drive::Query(q) = lk.drive(0) else { panic!("must chase the accepted candidate") };
+        assert_eq!(q, vec![closer]);
+    }
+
+    #[test]
+    fn multipath_seeds_deal_round_robin_and_results_merge() {
+        let mut rng = Rng::new(6);
+        let own = PeerId::from_rng(&mut rng);
+        let target = Key(rng.bytes32());
+        let mut seeds = peers(9, &mut rng);
+        seeds.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+        let mut lk =
+            LookupState::new(own, LookupKind::FindNode, target, false, cfg(3), seeds.clone());
+        assert_eq!(lk.paths(), 3);
+        assert_eq!(lk.path_closest(0), vec![seeds[0], seeds[3], seeds[6]]);
+        assert_eq!(lk.path_closest(1), vec![seeds[1], seeds[4], seeds[7]]);
+        assert_eq!(lk.path_closest(2), vec![seeds[2], seeds[5], seeds[8]]);
+        let mut outstanding: Vec<(usize, PeerId)> = Vec::new();
+        for pi in 0..3 {
+            if let Drive::Query(q) = lk.drive(pi) {
+                outstanding.extend(q.into_iter().map(|p| (pi, p)));
+            }
+        }
+        while let Some((pi, peer)) = outstanding.pop() {
+            lk.on_reply(pi, peer, Vec::new(), &[]);
+            if let Drive::Query(more) = lk.drive(pi) {
+                outstanding.extend(more.into_iter().map(|p| (pi, p)));
+            }
+        }
+        assert!(lk.is_done());
+        let (closest, _) = lk.result();
+        assert_eq!(closest, seeds, "merged result covers every path's slice, in distance order");
+        // Disjointness: each seed was queried by exactly its own path.
+        for a in 0..3 {
+            for b in (a + 1)..3 {
+                let qa = lk.queried(a);
+                assert!(
+                    !lk.queried(b).iter().any(|p| qa.contains(p)),
+                    "paths {a} and {b} share a queried peer"
+                );
+            }
+        }
+    }
+}

@@ -6,13 +6,16 @@
 //! and the IPFS objects hosted by said peers").
 //!
 //! Implemented from scratch: XOR metric over 256-bit keys ([`key`]),
-//! LRU k-buckets ([`kbucket`]), and a sans-io engine ([`engine`]) running
-//! iterative `FIND_NODE` / `GET_PROVIDERS` lookups with α-parallelism and
-//! provider-record storage with expiry.
+//! LRU k-buckets plus the `pending_verify` first-contact tier
+//! ([`kbucket`]), a self-contained iterative-lookup state machine with
+//! optional disjoint paths ([`lookup`]), and a sans-io engine
+//! ([`engine`]) running iterative `FIND_NODE` / `GET_PROVIDERS` lookups
+//! with α-parallelism and provider-record storage with expiry.
 
 pub mod engine;
 pub mod kbucket;
 pub mod key;
+pub mod lookup;
 
 pub use engine::{DhtConfig, DhtEvent, Engine, LookupId, Rpc};
 pub use key::Key;

@@ -54,6 +54,21 @@
 //!  modeling ──► runtime (PJRT) ──► artifacts/*.hlo.txt (JAX+Pallas, AOT)
 //! ```
 
+// CI runs `cargo clippy --all-targets -- -D warnings`. The allows below
+// are deliberate, codebase-wide idiom decisions, not suppressions of
+// individual findings: `new()` constructors exist on most stores and
+// engines without a `Default` (construction is always explicit here, and
+// several types will grow required parameters), sans-io handlers thread
+// `now`/`out` through and legitimately exceed the argument-count lint,
+// index-based loops over fixed 32-byte arrays mirror the XOR-metric
+// arithmetic they implement, and test/bench helpers use tuple-heavy
+// types on purpose. Anything outside these four categories is a real
+// finding and should be fixed, not added here.
+#![allow(clippy::new_without_default)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::type_complexity)]
+
 pub mod access;
 pub mod api;
 pub mod bitswap;

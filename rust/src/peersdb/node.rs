@@ -48,6 +48,11 @@ pub struct NodeConfig {
     /// Start a partial batch after this long without new work.
     pub batch_flush: Duration,
     pub tick_interval: Duration,
+    /// DHT engine knobs, including the eclipse-hardening pair:
+    /// [`DhtConfig::lookup_paths`] (disjoint-path lookups) and
+    /// [`DhtConfig::verify_peers`] (distance-verified routing updates +
+    /// the `pending_verify` first-contact tier). Both default off, so
+    /// pre-hardening schedules replay bit-identically.
     pub dht: DhtConfig,
     pub bitswap: BitswapConfig,
     /// Pubsub neighbor sample size taken from the routing table.
@@ -815,6 +820,12 @@ impl Node {
         providers: Vec<PeerId>,
         out: &mut Outbox<Message>,
     ) {
+        // Every probe records how many providers the exhaustive DHT walk
+        // actually returned. The eclipse scenarios read this trace: an
+        // attack that forges records inflates the count rather than
+        // zeroing it, so "never zero" documents that the availability
+        // view degrades to attacker-poisoned — not dark — mid-attack.
+        self.metrics.observe("repair_providers_found", providers.len() as f64);
         let target = self.cfg.replication_target.max(1);
         let holds = chunker::has_file(&self.bs, &data_cid);
         // Our own announce is stored on the key's closest peers like
@@ -1319,14 +1330,26 @@ impl Runner for Node {
                     self.metrics.inc("join_rejected_by_root");
                     return;
                 }
+                // Under peer verification, an unsolicited ack — from
+                // anyone but the bootstrap peer we actually joined
+                // through — is a one-message table-stuffing channel and
+                // is refused outright. (Gated on `verify_peers` so
+                // pre-hardening schedules replay bit-identically.)
+                if self.cfg.dht.verify_peers && Some(from) != self.cfg.bootstrap {
+                    self.metrics.inc("join_acks_refused");
+                    return;
+                }
                 let started = match self.bootstrap {
                     Bootstrap::Joining { started } => started,
                     _ => now,
                 };
                 self.bootstrap = Bootstrap::Syncing { started, lookup_done: false };
                 self.dht.add_seed(now, from);
+                // The sample list is the root's hearsay: seeded directly
+                // in the classic configuration, quarantined for a
+                // verification ping under `verify_peers`.
                 for p in peers {
-                    self.dht.add_seed(now, p);
+                    self.dht.add_hearsay(now, p);
                 }
                 // Populate the table around our own id.
                 let mut sends = dht::engine::Sends::new();

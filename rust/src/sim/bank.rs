@@ -270,6 +270,58 @@ pub fn adversarial_eclipse() -> Scenario {
         .at(55, Fault::Contribute { node: 7, workload: 4, rows: 20 })
 }
 
+/// Disjoint lookup paths configured in [`defended_eclipse`].
+pub const ECLIPSE_LOOKUP_PATHS: usize = 3;
+
+/// 13. Defended eclipse — the eclipse *defense* headline the ROADMAP
+/// called for. Exactly the [`adversarial_eclipse`] attack schedule (same
+/// colluders, same forged replies, same asymmetric isolation) but
+/// truncated before the heal: there is **no healed recovery tail** — no
+/// post-attack honest contributions hand the victim its view back. The
+/// defenses carry it instead: disjoint-path lookups
+/// (`DhtConfig::lookup_paths = 3`) keep a colluding minority from
+/// owning every lookup frontier, and distance-verified routing updates
+/// (`DhtConfig::verify_peers`) reject lateral forged candidates,
+/// quarantine hearsay peers in the `pending_verify` tier, and — the
+/// recovery half — demote timed-out honest peers into that tier and
+/// keep re-verifying them, so they re-enter the victim's table the
+/// moment the isolation lapses. Success is the [`EclipseInvariant`]
+/// holding at quiesce with `replies_forged > 0` (the attack genuinely
+/// ran; the victim never stayed eclipsed), while the availability
+/// repair loop (enabled here as the ROADMAP's second probe angle) keeps
+/// observing non-zero provider counts via `find_providers_full`
+/// throughout the attack.
+///
+/// Two schedule details keep the conclusion honest. First, the repair
+/// loop is switched **off** cluster-wide just before the attack window
+/// closes: during the quiesce the victim starts *no lookups at all*, so
+/// an undefended victim would have no hearsay channel to rebuild its
+/// table through — the `pending_verify` re-verification pings (which
+/// run from the engine tick, independent of any lookup) are the only
+/// way back, which is exactly the defense under test. Second, the
+/// defenses-stripped negative control in `tests/scenarios.rs` proves
+/// the same schedule fully eclipses an undefended victim by the end of
+/// the attack window.
+pub fn defended_eclipse() -> Scenario {
+    let mut sc = adversarial_eclipse();
+    sc.name = "defended-eclipse";
+    sc.seed = 1515;
+    // Strip the healed recovery tail: keep only the attack window
+    // (everything before the heal), exactly like the PR-3 detection
+    // test does — the quiesce teardown is the only heal this run gets.
+    sc.events.retain(|e| e.at < Duration::from_secs(ECLIPSE_HEAL_SECS));
+    sc.cfg.dht.lookup_paths = ECLIPSE_LOOKUP_PATHS;
+    sc.cfg.dht.verify_peers = true;
+    // The repair loop's exhaustive provider-count probes: with a 15 s
+    // cadence the first cycle lands at the attack's opening instant
+    // (warmup 10 s + fault offset 5 s) and every ~15 s after, so the
+    // probe trace spans the whole attack window…
+    sc.cfg.repair_interval = Duration::from_secs(15);
+    // …and is shut down before the window closes, so recovery cannot
+    // ride on repair-lookup hearsay (see the doc comment above).
+    sc.at(39, Fault::SetRepair { on: false })
+}
+
 /// Nodes that deliberately unpin + GC in [`gc_pressure`] — the authors
 /// of the scenario's three contributions, in contribution order (so
 /// `report.cids[k]` was authored, and later dropped, by
@@ -367,8 +419,8 @@ pub fn halfopen_holders() -> Scenario {
 
 /// Every replayable bank scenario, in canonical order: the seven
 /// original fault scenarios, the multi-region scale-out headline, the
-/// two directional-plane scenarios (half-open region, eclipse), and the
-/// two GC-pressure repair scenarios.
+/// two directional-plane scenarios (half-open region, eclipse), the two
+/// GC-pressure repair scenarios, and the defended eclipse.
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -383,6 +435,7 @@ pub fn all() -> Vec<Scenario> {
         adversarial_eclipse(),
         gc_pressure(),
         halfopen_holders(),
+        defended_eclipse(),
     ]
 }
 
@@ -428,6 +481,62 @@ mod tests {
         stopped.sort();
         assert_eq!(forged, ec.attackers.to_vec(), "all attackers forge");
         assert_eq!(forged, stopped, "every forger is stopped before quiesce");
+    }
+
+    #[test]
+    fn defended_eclipse_is_the_attack_schedule_minus_the_tail() {
+        let attack = adversarial_eclipse();
+        let defended = defended_eclipse();
+        // Defenses on, plus the repair-probe angle.
+        assert_eq!(defended.cfg.dht.lookup_paths, ECLIPSE_LOOKUP_PATHS);
+        assert!(defended.cfg.dht.verify_peers);
+        assert!(defended.cfg.repair_interval.0 > 0);
+        // Same victim/attackers under the same invariant.
+        let (a, d) = (
+            attack.invariants.eclipse.as_ref().unwrap(),
+            defended.invariants.eclipse.as_ref().unwrap(),
+        );
+        assert_eq!(a.victim, d.victim);
+        assert_eq!(a.attackers, d.attackers);
+        // The schedule is the attack window verbatim — every attack
+        // event before the heal, nothing at or after it (no recovery
+        // tail) — plus exactly one extra event: the repair shutdown that
+        // guarantees no lookup traffic exists for recovery to ride on.
+        let window: Vec<String> = attack
+            .events
+            .iter()
+            .filter(|e| e.at < Duration::from_secs(ECLIPSE_HEAL_SECS))
+            .map(|e| format!("{:?}@{}", e.fault, e.at.0))
+            .collect();
+        let mut defended_events: Vec<String> = Vec::new();
+        let mut repair_shutdowns = 0;
+        for e in &defended.events {
+            if matches!(e.fault, Fault::SetRepair { on: false }) {
+                repair_shutdowns += 1;
+                continue;
+            }
+            defended_events.push(format!("{:?}@{}", e.fault, e.at.0));
+        }
+        assert_eq!(window, defended_events, "defended schedule drifted from the attack");
+        assert_eq!(repair_shutdowns, 1, "repair must be shut down before quiesce");
+        assert!(
+            defended.events.iter().all(|e| e.at < Duration::from_secs(ECLIPSE_HEAL_SECS)),
+            "a healed recovery tail sneaked in"
+        );
+    }
+
+    #[test]
+    fn defenses_default_off_outside_defended_eclipse() {
+        // Replay-compatibility guard: every pre-hardening scenario keeps
+        // lookup_paths = 1 and verify_peers off, so its SimStats (and
+        // checksum) are bit-identical to the pre-refactor recordings.
+        for sc in all() {
+            if sc.name == "defended-eclipse" {
+                continue;
+            }
+            assert_eq!(sc.cfg.dht.lookup_paths, 1, "{}: multipath leaked in", sc.name);
+            assert!(!sc.cfg.dht.verify_peers, "{}: verification leaked in", sc.name);
+        }
     }
 
     #[test]

@@ -139,6 +139,25 @@ pub fn set_repair(cluster: &mut Cluster<Node>, on: bool) {
     }
 }
 
+/// Cluster-wide totals of the DHT lookup-hardening counters, summed
+/// over every node's `dht::Engine`:
+/// `(lookup_paths_started, closer_peers_rejected,
+/// unverified_peers_quarantined)`. `sim::scenario::run_cluster` folds
+/// these into the report's [`crate::sim::des::SimStats`] so scenario
+/// replays guard them; tests use it directly to assert a defense
+/// actually engaged. All three are zero unless a node ran with
+/// `DhtConfig::lookup_paths > 1` or `DhtConfig::verify_peers`.
+pub fn dht_defense_totals(cluster: &Cluster<Node>) -> (u64, u64, u64) {
+    let mut totals = (0u64, 0u64, 0u64);
+    for i in 0..cluster.len() {
+        let dht = &cluster.node(i).dht;
+        totals.0 += dht.lookup_paths_started;
+        totals.1 += dht.closer_peers_rejected;
+        totals.2 += dht.unverified_peers_quarantined;
+    }
+    totals
+}
+
 /// Drain accumulated [`NodeEvent`]s from every node.
 pub fn drain_events(cluster: &mut Cluster<Node>) -> Vec<(usize, NodeEvent)> {
     let mut all = Vec::new();

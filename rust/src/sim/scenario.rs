@@ -508,6 +508,15 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
     check_invariants(&cluster, &inv, contributed, Phase::Quiesce)
         .map_err(|e| format!("scenario '{}' at quiesce ({}): {e}", sc.name, cluster.now()))?;
 
+    // Fold the per-node DHT lookup-hardening counters into the report's
+    // stats (the transport layer cannot see node internals). All-zero —
+    // and checksum-invisible — unless a defense knob was on.
+    let mut stats = cluster.stats.clone();
+    let (paths, rejected, quarantined) = harness::dht_defense_totals(&cluster);
+    stats.lookup_paths_started = paths;
+    stats.closer_peers_rejected = rejected;
+    stats.unverified_peers_quarantined = quarantined;
+
     let report = ScenarioReport {
         name: sc.name,
         peers: cluster.len(),
@@ -517,7 +526,7 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
         end: cluster.now(),
         digest: cluster.node(0).contributions.digest(),
         cids,
-        stats: cluster.stats.clone(),
+        stats,
     };
     Ok((report, cluster))
 }

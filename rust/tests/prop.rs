@@ -209,6 +209,347 @@ fn prop_routing_table_structural_invariants() {
 }
 
 // ---------------------------------------------------------------------------
+// dht::lookup extraction guard: with a single path and no distance
+// verification, the extracted state machine must be move-for-move
+// identical to the algorithm the engine inlined before the refactor —
+// same query batches in the same order, same termination, same results.
+// The reference below is a line-for-line port of that legacy code; if
+// the extraction drifted, random reply/timeout interleavings would
+// diverge here long before a scenario checksum could.
+// ---------------------------------------------------------------------------
+
+use peersdb::dht::lookup::{Drive, LookupConfig, LookupKind, LookupState};
+use std::collections::BTreeSet;
+
+/// The pre-extraction single-path lookup, verbatim (shortlist keyed by
+/// XOR distance, queried-on-send marks, α-parallel selection over the k
+/// closest, provider early exit, timeout frees the in-flight slot).
+struct LegacyLookup {
+    target: Key,
+    get_providers: bool,
+    full: bool,
+    alpha: usize,
+    k: usize,
+    providers_needed: usize,
+    shortlist: BTreeMap<[u8; 32], (PeerId, bool)>,
+    in_flight: usize,
+    providers: BTreeSet<PeerId>,
+    done: bool,
+}
+
+enum LegacyDrive {
+    Done(Vec<PeerId>, Vec<PeerId>),
+    Query(Vec<PeerId>),
+    Wait,
+}
+
+impl LegacyLookup {
+    fn insert(&mut self, peer: PeerId) {
+        let d = self.target.distance(&Key::from_peer(peer)).0;
+        self.shortlist.entry(d).or_insert((peer, false));
+    }
+
+    fn drive(&mut self) -> LegacyDrive {
+        if self.done {
+            return LegacyDrive::Wait;
+        }
+        let enough_providers = self.get_providers
+            && !self.full
+            && self.providers_needed > 0
+            && self.providers.len() >= self.providers_needed;
+        let k_closest_all_queried = self.shortlist.values().take(self.k).all(|(_, q)| *q);
+        if enough_providers || (k_closest_all_queried && self.in_flight == 0) {
+            self.done = true;
+            let closest = self.shortlist.values().take(self.k).map(|(p, _)| *p).collect();
+            let providers = self.providers.iter().copied().collect();
+            return LegacyDrive::Done(closest, providers);
+        }
+        let mut to_query = Vec::new();
+        let in_flight = self.in_flight;
+        let alpha = self.alpha;
+        for (_, (peer, queried)) in self.shortlist.iter_mut().take(self.k) {
+            if in_flight + to_query.len() >= alpha {
+                break;
+            }
+            if !*queried {
+                *queried = true;
+                to_query.push(*peer);
+            }
+        }
+        self.in_flight += to_query.len();
+        if to_query.is_empty() {
+            LegacyDrive::Wait
+        } else {
+            LegacyDrive::Query(to_query)
+        }
+    }
+
+    fn on_reply(&mut self, own: PeerId, from: PeerId, providers: &[PeerId], closer: &[PeerId]) {
+        if self.done {
+            return;
+        }
+        self.in_flight = self.in_flight.saturating_sub(1);
+        let d = self.target.distance(&Key::from_peer(from)).0;
+        if let Some(entry) = self.shortlist.get_mut(&d) {
+            entry.1 = true;
+        }
+        for &p in closer {
+            if p != own {
+                self.insert(p);
+            }
+        }
+        for &p in providers {
+            self.providers.insert(p);
+        }
+    }
+
+    fn on_timeout(&mut self) {
+        if self.done {
+            return;
+        }
+        self.in_flight = self.in_flight.saturating_sub(1);
+    }
+}
+
+/// A random static "network" for driving lookups sans-io: every peer has
+/// a fixed closer-list and provider-list it would reply with.
+struct Topology {
+    pool: Vec<PeerId>,
+    closer: BTreeMap<PeerId, Vec<PeerId>>,
+    providers: BTreeMap<PeerId, Vec<PeerId>>,
+}
+
+fn random_topology(rng: &mut Rng, n: usize) -> Topology {
+    let pool: Vec<PeerId> = (0..n).map(|_| PeerId::from_rng(rng)).collect();
+    let mut closer = BTreeMap::new();
+    let mut providers = BTreeMap::new();
+    for &p in &pool {
+        let n_closer = rng.range(0, 7);
+        let list: Vec<PeerId> = (0..n_closer).map(|_| pool[rng.range(0, pool.len())]).collect();
+        let n_prov = rng.range(0, 3);
+        let provs: Vec<PeerId> = (0..n_prov).map(|_| pool[rng.range(0, pool.len())]).collect();
+        closer.insert(p, list);
+        providers.insert(p, provs);
+    }
+    Topology { pool, closer, providers }
+}
+
+#[test]
+fn prop_lookup_single_path_matches_legacy_reference() {
+    check_with_rng(
+        "lookup_single_path_matches_legacy",
+        |r| {
+            (
+                r.range(4, 40),  // pool size
+                r.range(0, 12),  // seed count
+                r.range(1, 5),   // alpha
+                r.range(2, 9),   // k
+                r.range(0, 4),   // providers_needed
+                r.range(0, 4),   // kind/full selector
+            )
+        },
+        |(n, n_seeds, alpha, k, needed, kind_sel), rng| {
+            let topo = random_topology(rng, *n);
+            let own = PeerId::from_rng(rng);
+            let target = Key(rng.bytes32());
+            let seeds: Vec<PeerId> =
+                (0..*n_seeds).map(|_| topo.pool[rng.range(0, topo.pool.len())]).collect();
+            let (get_providers, full) = match kind_sel % 3 {
+                0 => (false, false),
+                1 => (true, false),
+                _ => (true, true),
+            };
+            let mut legacy = LegacyLookup {
+                target,
+                get_providers,
+                full,
+                alpha: *alpha,
+                k: *k,
+                providers_needed: *needed,
+                shortlist: BTreeMap::new(),
+                in_flight: 0,
+                providers: BTreeSet::new(),
+                done: false,
+            };
+            for &s in &seeds {
+                legacy.insert(s);
+            }
+            let kind = if get_providers { LookupKind::GetProviders } else { LookupKind::FindNode };
+            let cfg = LookupConfig {
+                alpha: *alpha,
+                k: *k,
+                providers_needed: *needed,
+                paths: 1,
+                verify_distance: false,
+            };
+            let mut extracted = LookupState::new(own, kind, target, full, cfg, seeds.clone());
+
+            // Drive both in lockstep; every verdict must match.
+            let mut outstanding: Vec<PeerId> = Vec::new();
+            let mut done = false;
+            let step = |legacy: &mut LegacyLookup,
+                        extracted: &mut LookupState|
+             -> Result<Option<Vec<PeerId>>, String> {
+                match (legacy.drive(), extracted.drive(0)) {
+                    (LegacyDrive::Query(a), Drive::Query(b)) => {
+                        if a != b {
+                            return Err(format!("query batches diverged: {a:?} vs {b:?}"));
+                        }
+                        Ok(Some(a))
+                    }
+                    (LegacyDrive::Wait, Drive::Wait) => Ok(Some(Vec::new())),
+                    (LegacyDrive::Done(c, p), Drive::Done) => {
+                        if (c, p) != extracted.result() {
+                            return Err("terminal results diverged".into());
+                        }
+                        Ok(None)
+                    }
+                    _ => Err("drive verdicts diverged (Done/Query/Wait mismatch)".into()),
+                }
+            };
+            match step(&mut legacy, &mut extracted)? {
+                None => done = true,
+                Some(q) => outstanding.extend(q),
+            }
+            let mut hops = 0;
+            while !done {
+                hops += 1;
+                if hops > 10_000 {
+                    return Err("lookup never terminated".into());
+                }
+                if outstanding.is_empty() {
+                    return Err("stalled: not done but nothing outstanding".into());
+                }
+                let peer = outstanding.remove(rng.range(0, outstanding.len()));
+                if rng.chance(0.75) {
+                    let closer = topo.closer[&peer].clone();
+                    let providers = topo.providers[&peer].clone();
+                    legacy.on_reply(own, peer, &providers, &closer);
+                    extracted.on_reply(0, peer, providers, &closer);
+                } else {
+                    legacy.on_timeout();
+                    extracted.on_timeout(0);
+                }
+                match step(&mut legacy, &mut extracted)? {
+                    None => done = true,
+                    Some(q) => outstanding.extend(q),
+                }
+            }
+            if !extracted.is_done() {
+                return Err("extracted machine not done at termination".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Disjoint-path lookups: per-path queried sets are pairwise disjoint,
+// and the merged result is exactly the union of the per-path results
+// (k closest over the union of per-path closest sets; providers are the
+// union of everything any path was told).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_disjoint_paths_partition_queries_and_merge_results() {
+    check_with_rng(
+        "disjoint_paths_partition_queries",
+        |r| (r.range(6, 40), r.range(2, 5), r.range(1, 4), r.range(2, 9)),
+        |(n, d, alpha, k), rng| {
+            let topo = random_topology(rng, *n);
+            let own = PeerId::from_rng(rng);
+            let target = Key(rng.bytes32());
+            let mut seeds: Vec<PeerId> = topo.pool.clone();
+            seeds.sort_by_key(|p| target.distance(&Key::from_peer(*p)));
+            seeds.truncate(rng.range(1, topo.pool.len()));
+            let cfg = LookupConfig {
+                alpha: *alpha,
+                k: *k,
+                providers_needed: 0,
+                paths: *d,
+                verify_distance: false,
+            };
+            // Exhaustive provider lookup: no early exit, so every
+            // delivered provider must surface in the merged result.
+            let mut lk =
+                LookupState::new(own, LookupKind::GetProviders, target, true, cfg, seeds);
+            let mut outstanding: Vec<(usize, PeerId)> = Vec::new();
+            let mut delivered_providers: BTreeSet<PeerId> = BTreeSet::new();
+            for pi in 0..*d {
+                if let Drive::Query(q) = lk.drive(pi) {
+                    outstanding.extend(q.into_iter().map(|p| (pi, p)));
+                }
+            }
+            let mut hops = 0;
+            while !lk.is_done() {
+                hops += 1;
+                if hops > 10_000 {
+                    return Err("lookup never terminated".into());
+                }
+                if outstanding.is_empty() {
+                    return Err("stalled: not done but nothing outstanding".into());
+                }
+                let (pi, peer) = outstanding.remove(rng.range(0, outstanding.len()));
+                if rng.chance(0.75) {
+                    let closer = topo.closer[&peer].clone();
+                    let providers = topo.providers[&peer].clone();
+                    delivered_providers.extend(providers.iter().copied());
+                    lk.on_reply(pi, peer, providers, &closer);
+                } else {
+                    lk.on_timeout(pi);
+                }
+                if let Drive::Query(q) = lk.drive(pi) {
+                    outstanding.extend(q.into_iter().map(|p| (pi, p)));
+                }
+            }
+
+            // 1. Pairwise-disjoint queried sets.
+            for a in 0..*d {
+                let qa: BTreeSet<PeerId> = lk.queried(a).into_iter().collect();
+                for b in (a + 1)..*d {
+                    if lk.queried(b).iter().any(|p| qa.contains(p)) {
+                        return Err(format!("paths {a} and {b} queried a common peer"));
+                    }
+                }
+            }
+
+            // 2. Merged closest == k closest over the union of the
+            //    per-path closest sets, in distance order, no duplicates.
+            let (closest, providers) = lk.result();
+            let mut union: BTreeMap<[u8; 32], PeerId> = BTreeMap::new();
+            for pi in 0..*d {
+                for p in lk.path_closest(pi) {
+                    union.insert(target.distance(&Key::from_peer(p)).0, p);
+                }
+            }
+            let expect: Vec<PeerId> = union.into_values().take(*k).collect();
+            if closest != expect {
+                return Err(format!(
+                    "merged closest != union of per-path results: {closest:?} vs {expect:?}"
+                ));
+            }
+            for w in closest.windows(2) {
+                if target.distance(&Key::from_peer(w[0])) >= target.distance(&Key::from_peer(w[1]))
+                {
+                    return Err("merged closest not strictly distance-ordered".into());
+                }
+            }
+
+            // 3. Providers == union of everything delivered on any path.
+            let got: BTreeSet<PeerId> = providers.into_iter().collect();
+            if got != delivered_providers {
+                return Err(format!(
+                    "provider union mismatch: {} merged vs {} delivered",
+                    got.len(),
+                    delivered_providers.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Codec: roundtrips for random wire messages and JSON values
 // ---------------------------------------------------------------------------
 

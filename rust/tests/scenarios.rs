@@ -408,6 +408,95 @@ fn scenario_halfopen_holders_routes_around() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// 13. Defended eclipse: the same attack with NO recovery tail —
+//     disjoint-path lookups + distance-verified routing updates (with
+//     the pending_verify re-verification tier) must keep / restore the
+//     victim's honest view on their own.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scenario_defended_eclipse_survives_without_recovery_tail() {
+    use peersdb::sim::harness;
+
+    let sc = bank::defended_eclipse();
+    let (report, cluster) = scenario::run_cluster(&sc).expect("defended eclipse scenario");
+    // Replay determinism (run_cluster doesn't go through run_replayed).
+    let replay = scenario::run(&sc).expect("replay");
+    assert_eq!(report, replay, "defended eclipse scenario not deterministic");
+
+    assert_eq!(report.contributions, 3);
+    assert_eq!(report.checkpoints, 1);
+    // The attack genuinely ran: forged replies were served and the
+    // victim's isolation dropped honest traffic.
+    let forged: u64 = bank::ECLIPSE_ATTACKERS
+        .iter()
+        .map(|&i| cluster.node(i).dht.replies_forged)
+        .sum();
+    assert!(forged > 0, "attackers never forged a reply");
+    assert!(report.stats.msgs_dropped_blocked > 0, "victim isolation never bit");
+    // The defenses genuinely engaged, and the report carries the same
+    // totals the harness helper reads off the cluster.
+    let (paths, rejected, quarantined) = harness::dht_defense_totals(&cluster);
+    assert_eq!(
+        (paths, rejected, quarantined),
+        (
+            report.stats.lookup_paths_started,
+            report.stats.closer_peers_rejected,
+            report.stats.unverified_peers_quarantined,
+        ),
+        "report stats diverged from the cluster's engine counters"
+    );
+    assert!(paths > 0, "no disjoint-path lookup ever started");
+    assert!(rejected > 0, "distance verification never rejected a candidate");
+    assert!(quarantined > 0, "no hearsay peer was ever quarantined");
+    // The quiesce invariants already asserted the EclipseInvariant.
+    // The schedule contains no healed recovery tail AND shuts the
+    // repair loop down before the attack window closes, so during the
+    // quiesce the victim starts no lookups at all — there is no hearsay
+    // channel for an undefended table to rebuild through. The
+    // `pending_verify` re-verification pings are the only mechanism
+    // that can have restored the honest view. Make that explicit.
+    let ec = sc.invariants.eclipse.as_ref().unwrap();
+    scenario::check_eclipse(&cluster, ec).expect("victim kept honest neighbors on its own");
+    // The ROADMAP's second probe angle: the victim's availability-repair
+    // probes (exhaustive `find_providers_full` walks, every cycle of
+    // which lands inside the attack window) never observed an empty
+    // provider set — the attack lies *upward* (forged records), so the
+    // availability view degrades to attacker-poisoned, never to dark.
+    // This pins the probe trace the scenario exists to record; the
+    // defense claim above rests on the eclipse invariant, not on this.
+    let probes = cluster
+        .node(bank::ECLIPSE_VICTIM)
+        .metrics
+        .summary("repair_providers_found")
+        .expect("victim never ran a repair probe");
+    assert!(!probes.is_empty());
+    assert!(
+        probes.min() > 0.0,
+        "a victim provider-count probe went dark (min of {} samples hit zero)",
+        probes.len()
+    );
+}
+
+#[test]
+fn defended_eclipse_defense_matters() {
+    // Negative control, mirroring
+    // `eclipse_attack_is_detected_without_recovery_window`: the exact
+    // `bank::defended_eclipse` schedule with the defenses stripped
+    // (single-path lookups, hearsay admitted freely) and no quiesce to
+    // heal in. The victim must end fully eclipsed — proving the
+    // defended scenario passes because of the defenses, not because the
+    // truncated attack got weaker.
+    let mut sc = bank::defended_eclipse();
+    sc.cfg.dht.lookup_paths = 1;
+    sc.cfg.dht.verify_peers = false;
+    sc.quiesce = Duration::ZERO;
+    sc.quiesce_poll = Duration::ZERO;
+    let err = scenario::run(&sc).expect_err("undefended victim must fail the invariant");
+    assert!(err.contains("eclipse"), "wrong failure: {err}");
+}
+
 #[test]
 fn eclipse_attack_is_detected_without_recovery_window() {
     // The defense half of the eclipse scenario is the healed tail: links
