@@ -3,15 +3,22 @@
 //! Runs every scenario in `peersdb::sim::bank` (the seven original
 //! fault scenarios, the 100-peer multi-region scale-out, the half-open
 //! asymmetric region, the adversarial eclipse, the two GC-pressure
-//! repair scenarios, and the defended eclipse — multi-path +
-//! distance-verified lookups under the same attack) in this process,
-//! measuring wall time and events/second, and emits the results as
-//! `BENCH_sim.json` — the machine-readable perf-trajectory artifact CI
-//! uploads on every run. Each record also carries the run's `SimStats`
-//! checksum: because scenario runs are deterministic, the checksum is a
-//! behavioral fingerprint — comparing two artifacts tells you whether a
-//! change moved *performance* (events/sec) or *behavior* (checksum),
-//! which is the cross-version half of the replay-determinism guard.
+//! repair scenarios, the defended eclipse — multi-path +
+//! distance-verified lookups under the same attack — and the three
+//! striped-transfer scenarios: the slow-peer drag pair and the
+//! provider-death reassignment run) in this process, measuring wall
+//! time and events/second, and emits the results as `BENCH_sim.json` —
+//! the machine-readable perf-trajectory artifact CI uploads on every
+//! run. Each record also carries the run's `SimStats` checksum: because
+//! scenario runs are deterministic, the checksum is a behavioral
+//! fingerprint — comparing two artifacts tells you whether a change
+//! moved *performance* (events/sec) or *behavior* (checksum), which is
+//! the cross-version half of the replay-determinism guard. Records also
+//! carry cluster-wide time-to-replicate (mean/max `replication_ms`
+//! across every node) and the striped-transfer counters, so the
+//! heterogeneous-bandwidth scenarios double as a data-distribution
+//! measurement: the quality-vs-round-robin gap is read straight off the
+//! drag pair's records.
 
 use peersdb::codec::Json;
 use peersdb::sim::bank;
@@ -22,12 +29,14 @@ fn main() {
     print_environment("SIM SCALE: DES THROUGHPUT BASELINE (perf trajectory)");
     println!(
         "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves), \
-         asymmetric half-open region, adversarial + defended eclipse, and GC-pressure repair\n",
+         asymmetric half-open region, adversarial + defended eclipse, GC-pressure repair, \
+         and the striped-transfer trio (slow-peer drag pair + provider death)\n",
         bank::all().len()
     );
 
     let mut table = Table::new(&[
-        "scenario", "peers", "events", "wall ms", "Kevents/s", "virtual s", "stats checksum",
+        "scenario", "peers", "events", "wall ms", "Kevents/s", "repl ms", "virtual s",
+        "stats checksum",
     ]);
     let mut records: Vec<Json> = Vec::new();
     let mut total_events = 0u64;
@@ -36,7 +45,7 @@ fn main() {
     for sc in bank::all() {
         let name = sc.name;
         let t0 = std::time::Instant::now();
-        let report = match scenario::run(&sc) {
+        let (report, cluster) = match scenario::run_cluster(&sc) {
             Ok(r) => r,
             Err(e) => panic!("bank scenario '{name}' failed invariants: {e}"),
         };
@@ -47,12 +56,28 @@ fn main() {
         total_events += events;
         total_wall += wall;
 
+        // Cluster-wide time-to-replicate: every node's `replication_ms`
+        // samples folded into one mean/max — the data-distribution half
+        // of the trajectory (the DES half is events/sec).
+        let mut repl_sum = 0.0f64;
+        let mut repl_n = 0usize;
+        let mut repl_max = 0.0f64;
+        for i in 0..cluster.len() {
+            if let Some(s) = cluster.node(i).metrics.summary("replication_ms") {
+                repl_sum += s.mean() * s.len() as f64;
+                repl_n += s.len();
+                repl_max = repl_max.max(s.max());
+            }
+        }
+        let repl_mean = if repl_n > 0 { repl_sum / repl_n as f64 } else { 0.0 };
+
         table.row(&[
             name.to_string(),
             report.peers.to_string(),
             events.to_string(),
             format!("{:.0}", wall * 1e3),
             format!("{:.0}", eps / 1e3),
+            format!("{:.0}", repl_mean),
             format!("{:.0}", report.end.as_secs_f64()),
             checksum.clone(),
         ]);
@@ -66,6 +91,10 @@ fn main() {
                 .set("bytes_sent", report.stats.bytes_sent)
                 .set("wall_ms", wall * 1e3)
                 .set("events_per_sec", eps)
+                .set("replication_ms_mean", repl_mean)
+                .set("replication_ms_max", repl_max)
+                .set("chunks_striped", report.stats.chunks_striped)
+                .set("transfer_reassignments", report.stats.transfer_reassignments)
                 .set("virtual_secs", report.end.as_secs_f64())
                 .set("stats_checksum", checksum),
         );

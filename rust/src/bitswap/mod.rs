@@ -97,6 +97,22 @@ pub enum BitswapEvent {
     Exhausted { id: FetchId, cid: Cid },
 }
 
+/// Per-request transfer outcome, drained by the owning node alongside
+/// [`BitswapEvent`]s and fed into its
+/// [`PeerQuality`](crate::peersdb::PeerQuality) table.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Outcome {
+    /// A verified block arrived from `peer`, `latency` after its Want
+    /// was sent.
+    Block { peer: PeerId, latency: Duration },
+    /// `peer` answered `DontHave` — or served a block failing content
+    /// verification, which scores the same: it cannot provide this
+    /// content.
+    DontHave { peer: PeerId },
+    /// The request to `peer` timed out without any answer.
+    Timeout { peer: PeerId },
+}
+
 #[derive(Clone, Debug)]
 pub struct BitswapConfig {
     /// How many providers to ask concurrently per block.
@@ -121,7 +137,6 @@ struct Fetch {
     next_candidate: usize,
     /// req_id → (peer, sent_at)
     in_flight: HashMap<u64, (PeerId, Nanos)>,
-    done: bool,
 }
 
 /// Client-side bitswap engine. One per node.
@@ -135,6 +150,9 @@ pub struct Engine {
     /// req_id → fetch
     req_index: HashMap<u64, FetchId>,
     pub events: Vec<BitswapEvent>,
+    /// Per-request outcomes for the owner's peer-quality accounting,
+    /// drained like `events`.
+    pub outcomes: Vec<Outcome>,
     // Ledger / stats
     pub blocks_received: u64,
     pub bytes_received: u64,
@@ -153,6 +171,7 @@ impl Engine {
             fetches: BTreeMap::new(),
             req_index: HashMap::new(),
             events: Vec::new(),
+            outcomes: Vec::new(),
             blocks_received: 0,
             bytes_received: 0,
             tamper_detected: 0,
@@ -170,15 +189,24 @@ impl Engine {
     ) -> FetchId {
         let id = FetchId(self.next_fetch);
         self.next_fetch += 1;
+        // Dedupe while preserving order: a duplicate provider would
+        // consume several `spray` slots on the same peer, silently
+        // defeating the redundancy the config promises (late candidates
+        // via `add_candidates` were always deduped; initial ones not).
+        let mut deduped: Vec<PeerId> = Vec::with_capacity(candidates.len());
+        for p in candidates {
+            if !deduped.contains(&p) {
+                deduped.push(p);
+            }
+        }
         self.fetches.insert(
             id,
             Fetch {
                 id,
                 cid,
-                candidates,
+                candidates: deduped,
                 next_candidate: 0,
                 in_flight: HashMap::new(),
-                done: false,
             },
         );
         self.drive(now, id, out);
@@ -188,9 +216,6 @@ impl Engine {
     /// Add provider candidates discovered later (e.g. from a DHT lookup).
     pub fn add_candidates(&mut self, now: Nanos, id: FetchId, peers: Vec<PeerId>, out: &mut Sends) {
         let Some(f) = self.fetches.get_mut(&id) else { return };
-        if f.done {
-            return;
-        }
         for p in peers {
             if !f.candidates.contains(&p) {
                 f.candidates.push(p);
@@ -211,11 +236,14 @@ impl Engine {
         self.fetches.len()
     }
 
+    /// Live request-index entries (diagnostic surface: leak regression
+    /// tests assert this drops to zero when fetches are cancelled).
+    pub fn req_index_len(&self) -> usize {
+        self.req_index.len()
+    }
+
     fn drive(&mut self, now: Nanos, id: FetchId, out: &mut Sends) {
         let Some(f) = self.fetches.get_mut(&id) else { return };
-        if f.done {
-            return;
-        }
         // Issue Wants until `spray` are in flight or candidates run out.
         while f.in_flight.len() < self.cfg.spray && f.next_candidate < f.candidates.len() {
             let peer = f.candidates[f.next_candidate];
@@ -240,15 +268,19 @@ impl Engine {
             Msg::Block { req_id, cid, data } => {
                 let Some(fid) = self.req_index.remove(&req_id) else { return };
                 let Some(f) = self.fetches.get_mut(&fid) else { return };
-                f.in_flight.remove(&req_id);
+                let sent = f.in_flight.remove(&req_id).map(|(_, sent)| sent);
                 if !cid.verifies(&data) || cid != f.cid {
                     // Tampered or mismatched content: content addressing
                     // catches it; treat the peer as not having the block.
                     self.tamper_detected += 1;
+                    self.outcomes.push(Outcome::DontHave { peer: from });
                     self.drive(now, fid, out);
                     return;
                 }
-                f.done = true;
+                self.outcomes.push(Outcome::Block {
+                    peer: from,
+                    latency: sent.map(|s| now.saturating_sub(s)).unwrap_or(Duration::ZERO),
+                });
                 self.blocks_received += 1;
                 self.bytes_received += data.len() as u64;
                 // Cancel remaining in-flight requests for this fetch.
@@ -265,6 +297,7 @@ impl Engine {
                 if let Some(f) = self.fetches.get_mut(&fid) {
                     f.in_flight.remove(&req_id);
                 }
+                self.outcomes.push(Outcome::DontHave { peer: from });
                 self.drive(now, fid, out);
             }
             Msg::Want { .. } => {
@@ -286,7 +319,12 @@ impl Engine {
                 .collect();
             if !expired.is_empty() {
                 for r in expired {
-                    f.in_flight.remove(&r);
+                    if let Some((peer, _)) = f.in_flight.remove(&r) {
+                        // Timeout penalties are additive and commute, so
+                        // the HashMap-ordered sweep within one fetch
+                        // leaves the quality table deterministic.
+                        self.outcomes.push(Outcome::Timeout { peer });
+                    }
                     self.req_index.remove(&r);
                     self.timeouts += 1;
                 }
@@ -415,6 +453,69 @@ mod tests {
         let (to, Msg::Want { req_id, .. }) = out[0].clone() else { panic!() };
         e.on_msg(Nanos(5_100_000_000), to, Msg::Block { req_id, cid, data }, &mut out);
         assert!(matches!(e.events.pop(), Some(BitswapEvent::Fetched { .. })));
+    }
+
+    #[test]
+    fn duplicate_candidates_spray_distinct_peers() {
+        let (mut e, peers, cid, _) = setup();
+        let mut out = Sends::new();
+        // The same provider listed twice must not consume both spray
+        // slots: the initial candidate list is deduped like late ones.
+        e.fetch(Nanos(0), cid, vec![peers[0], peers[0], peers[1]], &mut out);
+        assert_eq!(out.len(), 2);
+        let targets: Vec<PeerId> = out.iter().map(|(p, _)| *p).collect();
+        assert_eq!(targets, vec![peers[0], peers[1]], "spray hits distinct peers");
+    }
+
+    #[test]
+    fn cancel_clears_request_state_and_sends_nothing() {
+        let (mut e, peers, cid, data) = setup();
+        let mut out = Sends::new();
+        let id = e.fetch(Nanos(0), cid, peers.clone(), &mut out);
+        assert_eq!(e.req_index_len(), 2);
+        let (to, Msg::Want { req_id, .. }) = out[0].clone() else { panic!() };
+        out.clear();
+        e.cancel(id);
+        assert_eq!(e.active_fetches(), 0);
+        assert_eq!(e.req_index_len(), 0, "cancel must not leak req_index entries");
+        // A straggler Block for the cancelled fetch is ignored: no event,
+        // no send, no rotation.
+        e.on_msg(Nanos(1), to, Msg::Block { req_id, cid, data }, &mut out);
+        e.tick(Nanos(10_000_000_000), &mut out);
+        assert!(out.is_empty());
+        assert!(e.events.is_empty());
+    }
+
+    #[test]
+    fn outcomes_record_block_latency_donthave_and_timeout() {
+        let (mut e, peers, cid, data) = setup();
+        let mut out = Sends::new();
+        e.fetch(Nanos(0), cid, peers.clone(), &mut out);
+        let (p0, Msg::Want { req_id: r0, .. }) = out[0].clone() else { panic!() };
+        let (p1, Msg::Want { req_id: r1, .. }) = out[1].clone() else { panic!() };
+        out.clear();
+        e.on_msg(Nanos(250_000_000), p1, Msg::DontHave { req_id: r1, cid }, &mut out);
+        assert_eq!(e.outcomes.pop(), Some(Outcome::DontHave { peer: p1 }));
+        e.on_msg(Nanos(250_000_000), p0, Msg::Block { req_id: r0, cid, data: data.clone() }, &mut out);
+        let Some(Outcome::Block { peer, latency }) = e.outcomes.pop() else { panic!() };
+        assert_eq!(peer, p0);
+        assert_eq!(latency, Duration::from_millis(250), "latency = now - sent_at");
+
+        // Timeout outcome names the peer whose request expired.
+        out.clear();
+        e.outcomes.clear();
+        e.fetch(Nanos(0), cid, peers[..1].to_vec(), &mut out);
+        e.tick(Nanos(5_000_000_000), &mut out);
+        assert_eq!(e.outcomes.pop(), Some(Outcome::Timeout { peer: peers[0] }));
+
+        // A tampered block scores as DontHave: the peer cannot provide
+        // this content.
+        out.clear();
+        e.outcomes.clear();
+        e.fetch(Nanos(0), cid, peers[..1].to_vec(), &mut out);
+        let (pt, Msg::Want { req_id: rt, .. }) = out[0].clone() else { panic!() };
+        e.on_msg(Nanos(1), pt, Msg::Block { req_id: rt, cid, data: b"EVIL".to_vec().into() }, &mut out);
+        assert_eq!(e.outcomes.pop(), Some(Outcome::DontHave { peer: pt }));
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //! harnesses use.
 
 pub mod node;
+pub mod quality;
 pub mod wire;
 
 pub use node::{Node, NodeConfig, NodeEvent, ValidationSource};
+pub use quality::{ChunkScheduler, PeerQuality};
 pub use wire::Message;

@@ -3,13 +3,14 @@
 //! §III-C, bootstrap §IV-A experiment 2).
 
 use crate::access::Gate;
-use crate::bitswap::{self, BitswapConfig, BitswapEvent, FetchId};
+use crate::bitswap::{self, BitswapConfig, BitswapEvent, FetchId, Outcome};
 use crate::blockstore::{chunker, BlockStore, Pin};
 use crate::cid::{Cid, Codec};
 use crate::dht::{self, DhtConfig, DhtEvent, Key, LookupId};
 use crate::ipfs_log::{Entry, Join};
 use crate::metrics::Metrics;
 use crate::net::{token, Outbox, PeerId, Runner};
+use crate::peersdb::quality::{ChunkScheduler, PeerQuality};
 use crate::peersdb::wire::Message;
 use crate::pubsub::{self, Topic};
 use crate::stores::documents::{ValidationRecord, ValidationsStore, Verdict};
@@ -18,7 +19,7 @@ use crate::util::time::{Duration, Nanos};
 use crate::util::{Blob, Rng};
 use crate::validation::{BatchQueue, CostModel, IdentityValidator, Task, Validator};
 use crate::validation::quorum::{QuorumConfig, VoteOutcome, VoteState};
-use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 /// Node configuration (the paper's Helm-chart parametrization).
 #[derive(Clone, Debug)]
@@ -45,6 +46,12 @@ pub struct NodeConfig {
     /// Max outstanding chunk requests per file fetch (bitswap-session
     /// window; keeps large files on slow links under the RPC timeout).
     pub chunk_window: usize,
+    /// How chunks of a multi-block file are assigned to providers.
+    /// Default [`ChunkScheduler::Single`] — the legacy one-source
+    /// window — so pre-striping schedules replay bit-identically; the
+    /// striped modes spread the window across the whole provider set
+    /// and reassign failed chunks to the next-best provider.
+    pub chunk_scheduler: ChunkScheduler,
     /// Start a partial batch after this long without new work.
     pub batch_flush: Duration,
     pub tick_interval: Duration,
@@ -99,6 +106,7 @@ impl Default for NodeConfig {
             cost_model: CostModel::Constant { ns: 1_000_000 },
             batch_size: 1,
             chunk_window: 8,
+            chunk_scheduler: ChunkScheduler::Single,
             batch_flush: Duration::from_millis(500),
             tick_interval: Duration::from_millis(100),
             dht: DhtConfig::default(),
@@ -156,11 +164,60 @@ enum FetchPurpose {
 /// Windowed multi-block file fetch (a bitswap "session"): at most
 /// `chunk_window` chunk requests outstanding per file, so large files on
 /// slow links do not overrun the per-request timeout (the retry storm a
-/// naive want-burst causes).
+/// naive want-burst causes). Under the striped schedulers the window is
+/// spread across `providers` instead of pinned to one `source`.
 struct DataFetch {
     pending: Vec<Cid>,
-    in_flight: HashSet<Cid>,
+    /// Chunk → the provider it is currently assigned to.
+    in_flight: HashMap<Cid, PeerId>,
+    /// Known providers of this file (order-preserving, deduped, never
+    /// contains self). Grows as the stripe lookup and served blocks
+    /// reveal more holders.
+    providers: Vec<PeerId>,
+    /// Per chunk: providers that already failed it (striped modes only;
+    /// reassignment never retries a peer that failed the same chunk).
+    tried: HashMap<Cid, Vec<PeerId>>,
+    /// Rotation cursor for [`ChunkScheduler::RoundRobin`].
+    rr_next: usize,
+    /// Legacy single-source peer (the peer that most recently served a
+    /// block of this file).
     source: PeerId,
+}
+
+impl DataFetch {
+    fn new(source: PeerId) -> DataFetch {
+        DataFetch {
+            pending: Vec::new(),
+            in_flight: HashMap::new(),
+            providers: Vec::new(),
+            tried: HashMap::new(),
+            rr_next: 0,
+            source,
+        }
+    }
+}
+
+/// Pick the cheapest provider in `avail` by observed [`PeerQuality`]
+/// cost, weighting each peer's cost by the load it already carries for
+/// this fetch (`(load + 1) · cost`), ties to provider order. A free
+/// function — not a method — so callers can hold a mutable borrow of
+/// the fetch entry alongside the shared quality table.
+fn pick_quality(
+    quality: &PeerQuality,
+    avail: &[PeerId],
+    in_flight: &HashMap<Cid, PeerId>,
+) -> PeerId {
+    let mut best = avail[0];
+    let mut best_cost = f64::INFINITY;
+    for &p in avail {
+        let load = in_flight.values().filter(|q| **q == p).count();
+        let cost = (load as f64 + 1.0) * quality.cost(&p);
+        if cost < best_cost {
+            best_cost = cost;
+            best = p;
+        }
+    }
+    best
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -202,6 +259,12 @@ pub struct Node {
     data_fetches: HashMap<Cid, DataFetch>,
     /// DHT provider lookups for block fetches: lookup → (cid, fetch).
     provider_lookups: HashMap<LookupId, (Cid, Option<FetchId>)>,
+    /// Provider-set widening lookups for striped fetches: lookup → root.
+    stripe_lookups: HashMap<LookupId, Cid>,
+    /// Observed per-peer transfer quality, fed unconditionally from
+    /// bitswap outcomes (pure bookkeeping — replay-inert) and consulted
+    /// by [`ChunkScheduler::Quality`].
+    quality: PeerQuality,
     /// DHT lookups that exist to announce a provider record.
     provide_lookups: HashMap<LookupId, Key>,
     /// Bootstrap self-lookup.
@@ -293,6 +356,8 @@ impl Node {
             entry_fetches: HashMap::new(),
             data_fetches: HashMap::new(),
             provider_lookups: HashMap::new(),
+            stripe_lookups: HashMap::new(),
+            quality: PeerQuality::new(),
             provide_lookups: HashMap::new(),
             bootstrap_lookup: None,
             contribution_meta: HashMap::new(),
@@ -570,6 +635,18 @@ impl Node {
         self.metrics.inc("entry_fetches_started");
     }
 
+    /// Order-preserving dedup of a provider candidate list, excluding
+    /// this node itself (a node never Wants from itself).
+    fn dedup_providers(&self, candidates: &[PeerId]) -> Vec<PeerId> {
+        let mut provs = Vec::with_capacity(candidates.len());
+        for p in candidates {
+            if *p != self.id && !provs.contains(p) {
+                provs.push(*p);
+            }
+        }
+        provs
+    }
+
     /// Begin fetching a contribution's data file.
     fn fetch_data(
         &mut self,
@@ -582,70 +659,232 @@ impl Node {
             return;
         }
         self.metrics.inc("data_fetches_started");
+        let providers = self.dedup_providers(&candidates);
         if self.bs.has(&data_cid) {
             // Root block already here (e.g. earlier partial fetch):
-            // go straight to chunk scheduling.
-            let source = candidates.first().copied().unwrap_or(self.id);
-            self.schedule_chunks(now, data_cid, source, out);
+            // go straight to chunk scheduling — or, with no usable
+            // candidate, to a provider lookup. (The old code defaulted
+            // the source to *ourselves* here: every chunk was Want'ed
+            // from self, a guaranteed DontHave → Exhausted → per-chunk
+            // DHT lookup storm.)
+            if providers.is_empty() {
+                self.begin_chunk_provider_lookup(now, data_cid, out);
+            } else {
+                self.schedule_chunks(now, data_cid, providers, out);
+            }
             return;
         }
         let mut sends = bitswap::Sends::new();
         let fid = self.bitswap.fetch(now, data_cid, candidates, &mut sends);
         self.fetch_purpose.insert(fid, FetchPurpose::DataRoot { data_cid });
-        self.data_fetches.insert(
-            data_cid,
-            DataFetch { pending: Vec::new(), in_flight: HashSet::new(), source: self.id },
-        );
+        let mut df = DataFetch::new(self.id);
+        df.providers = providers;
+        self.data_fetches.insert(data_cid, df);
         self.wrap_bitswap(sends, out);
     }
 
+    /// The root block is local but no chunk source is known: run one
+    /// provider lookup on the file's root key (chunk keys are never
+    /// announced — only roots are). Its completion re-enters chunk
+    /// scheduling with real providers via the `DataRoot` retry purpose.
+    fn begin_chunk_provider_lookup(&mut self, now: Nanos, root: Cid, out: &mut Outbox<Message>) {
+        self.metrics.inc("chunk_provider_lookups");
+        // Placeholder marks the file fetch live (dedup + bootstrap
+        // gating) while the lookup runs.
+        self.data_fetches.insert(root, DataFetch::new(self.id));
+        let mut sends = dht::engine::Sends::new();
+        let lid = self.dht.find_providers(now, Key::from_cid(&root), &mut sends);
+        self.provider_lookups.insert(lid, (root, None));
+        self.retry_purposes.insert(root, FetchPurpose::DataRoot { data_cid: root });
+        self.wrap_dht(sends, out);
+    }
+
     /// Set up the chunk window for a file whose root block is local.
+    /// `providers` is deduped and self-free; providers remembered on an
+    /// existing fetch entry for the root are merged in behind it.
     fn schedule_chunks(
         &mut self,
         now: Nanos,
         root: Cid,
-        source: PeerId,
+        providers: Vec<PeerId>,
         out: &mut Outbox<Message>,
     ) {
         let children = chunker::child_blocks(self.bs.get(&root).expect("root present"));
         let pending: Vec<Cid> = children.into_iter().filter(|c| !self.bs.has(c)).collect();
+        let mut merged = providers;
+        if let Some(old) = self.data_fetches.remove(&root) {
+            for p in old.providers {
+                if p != self.id && !merged.contains(&p) {
+                    merged.push(p);
+                }
+            }
+        }
         if pending.is_empty() {
-            self.data_fetches.remove(&root);
             self.finish_replication(now, root, out);
             return;
         }
-        self.data_fetches.insert(
-            root,
-            DataFetch { pending, in_flight: HashSet::new(), source },
-        );
+        let mut df = DataFetch::new(merged.first().copied().unwrap_or(self.id));
+        df.pending = pending;
+        df.providers = merged;
+        self.data_fetches.insert(root, df);
+        if self.cfg.chunk_scheduler != ChunkScheduler::Single {
+            self.start_stripe_lookup(now, root, out);
+        }
         self.pump_chunks(now, root, out);
     }
 
-    /// Issue chunk requests up to the window limit.
+    /// Striped fetches widen their provider set beyond whoever served
+    /// the root block: one provider lookup on the root key per fetch.
+    fn start_stripe_lookup(&mut self, now: Nanos, root: Cid, out: &mut Outbox<Message>) {
+        let mut sends = dht::engine::Sends::new();
+        let lid = self.dht.find_providers(now, Key::from_cid(&root), &mut sends);
+        self.stripe_lookups.insert(lid, root);
+        self.wrap_dht(sends, out);
+    }
+
+    /// Stripe-lookup completion: grow the provider set, then pump so
+    /// newly discovered providers pick up window slots immediately.
+    fn on_stripe_providers(
+        &mut self,
+        now: Nanos,
+        root: Cid,
+        providers: Vec<PeerId>,
+        out: &mut Outbox<Message>,
+    ) {
+        let my_id = self.id;
+        let Some(df) = self.data_fetches.get_mut(&root) else { return };
+        let mut grew = false;
+        for p in providers {
+            if p != my_id && !df.providers.contains(&p) {
+                df.providers.push(p);
+                grew = true;
+            }
+        }
+        if grew {
+            self.pump_chunks(now, root, out);
+        }
+    }
+
+    /// Issue chunk requests up to the window limit, assigning each
+    /// chunk a provider per the configured [`ChunkScheduler`].
     fn pump_chunks(&mut self, now: Nanos, root: Cid, out: &mut Outbox<Message>) {
         let window = self.cfg.chunk_window.max(1);
+        let sched = self.cfg.chunk_scheduler;
+        let quality = &self.quality;
         let Some(df) = self.data_fetches.get_mut(&root) else { return };
-        let source = df.source;
-        let mut to_issue = Vec::new();
-        while df.in_flight.len() + to_issue.len() < window {
+        let mut to_issue: Vec<(Cid, PeerId)> = Vec::new();
+        while df.in_flight.len() < window {
             let Some(chunk) = df.pending.pop() else { break };
-            to_issue.push(chunk);
+            let peer = match sched {
+                ChunkScheduler::Single => df.source,
+                ChunkScheduler::RoundRobin | ChunkScheduler::Quality
+                    if df.providers.is_empty() =>
+                {
+                    // No provider yet (stripe lookup still running):
+                    // hold the chunk rather than Want it from nobody.
+                    df.pending.push(chunk);
+                    break;
+                }
+                ChunkScheduler::RoundRobin => {
+                    let p = df.providers[df.rr_next % df.providers.len()];
+                    df.rr_next = df.rr_next.wrapping_add(1);
+                    p
+                }
+                ChunkScheduler::Quality => pick_quality(quality, &df.providers, &df.in_flight),
+            };
+            df.in_flight.insert(chunk, peer);
+            to_issue.push((chunk, peer));
         }
-        let complete = df.pending.is_empty() && df.in_flight.is_empty() && to_issue.is_empty();
-        for chunk in &to_issue {
-            df.in_flight.insert(*chunk);
-        }
+        let complete = df.pending.is_empty() && df.in_flight.is_empty();
         if complete {
             self.data_fetches.remove(&root);
             self.finish_replication(now, root, out);
             return;
         }
+        if sched != ChunkScheduler::Single && !to_issue.is_empty() {
+            self.metrics.add("chunks_striped", to_issue.len() as u64);
+        }
         let mut sends = bitswap::Sends::new();
-        for chunk in to_issue {
-            let fid = self.bitswap.fetch(now, chunk, vec![source], &mut sends);
+        for (chunk, peer) in to_issue {
+            let fid = self.bitswap.fetch(now, chunk, vec![peer], &mut sends);
             self.fetch_purpose.insert(fid, FetchPurpose::DataChunk { root });
         }
         self.wrap_bitswap(sends, out);
+    }
+
+    /// A striped chunk ran out of its assigned provider (timeout,
+    /// `DontHave`, or departure): reassign it to the next-best provider
+    /// that has not already failed it, or give up on the whole file —
+    /// cancelling live siblings — when every provider has.
+    fn on_chunk_exhausted(&mut self, now: Nanos, root: Cid, chunk: Cid, out: &mut Outbox<Message>) {
+        let sched = self.cfg.chunk_scheduler;
+        let quality = &self.quality;
+        let Some(df) = self.data_fetches.get_mut(&root) else {
+            return; // file fetch already cancelled or completed
+        };
+        if let Some(failed) = df.in_flight.remove(&chunk) {
+            let tried = df.tried.entry(chunk).or_default();
+            if !tried.contains(&failed) {
+                tried.push(failed);
+            }
+        }
+        let tried = df.tried.get(&chunk);
+        let avail: Vec<PeerId> = df
+            .providers
+            .iter()
+            .copied()
+            .filter(|p| tried.map_or(true, |t| !t.contains(p)))
+            .collect();
+        if avail.is_empty() {
+            // Every known provider failed this chunk: the file cannot
+            // complete from here. Kill the fetch and its live siblings;
+            // the anti-entropy sweep retries the whole root later.
+            self.cancel_file_fetch(root);
+            self.metrics.inc("fetch_failed");
+            return;
+        }
+        let peer = match sched {
+            ChunkScheduler::RoundRobin => {
+                let p = avail[df.rr_next % avail.len()];
+                df.rr_next = df.rr_next.wrapping_add(1);
+                p
+            }
+            _ => pick_quality(quality, &avail, &df.in_flight),
+        };
+        df.in_flight.insert(chunk, peer);
+        self.metrics.inc("transfer_reassignments");
+        let mut sends = bitswap::Sends::new();
+        let fid = self.bitswap.fetch(now, chunk, vec![peer], &mut sends);
+        self.fetch_purpose.insert(fid, FetchPurpose::DataChunk { root });
+        self.wrap_bitswap(sends, out);
+    }
+
+    /// Abandon a whole file fetch: drop the window bookkeeping AND
+    /// cancel every live sibling block fetch in the bitswap engine.
+    /// Without the sweep, siblings stay live until they independently
+    /// exhaust, leaking `fetch_purpose` entries and spraying doomed
+    /// retries in the meantime.
+    fn cancel_file_fetch(&mut self, root: Cid) {
+        self.data_fetches.remove(&root);
+        self.repair_fetches.remove(&root);
+        let mut doomed: Vec<FetchId> = self
+            .fetch_purpose
+            .iter()
+            .filter(|(_, p)| match p {
+                FetchPurpose::DataChunk { root: r } => *r == root,
+                FetchPurpose::DataRoot { data_cid } => *data_cid == root,
+                FetchPurpose::LogEntry => false,
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        // `fetch_purpose` is a HashMap; cancel in FetchId order so the
+        // sweep's side effects are reproducible.
+        doomed.sort();
+        for fid in doomed {
+            self.fetch_purpose.remove(&fid);
+            self.bitswap.cancel(fid);
+            self.metrics.inc("sibling_fetches_cancelled");
+        }
     }
 
     fn on_entry_fetched(
@@ -721,12 +960,20 @@ impl Node {
         self.bs.pin(&cid, Pin::Replica);
         match purpose {
             FetchPurpose::DataRoot { data_cid } => {
-                self.schedule_chunks(now, data_cid, from, out);
+                let provs = self.dedup_providers(&[from]);
+                self.schedule_chunks(now, data_cid, provs, out);
             }
             FetchPurpose::DataChunk { root } => {
+                let my_id = self.id;
                 if let Some(df) = self.data_fetches.get_mut(&root) {
                     df.in_flight.remove(&cid);
+                    df.tried.remove(&cid);
                     df.source = from;
+                    // A peer serving chunks is a provider, whether or
+                    // not the DHT has caught up with that fact.
+                    if from != my_id && !df.providers.contains(&from) {
+                        df.providers.push(from);
+                    }
                 }
                 self.pump_chunks(now, root, out);
             }
@@ -1060,32 +1307,74 @@ impl Node {
                     if let Some(cid) = self.repair_probes.remove(&id) {
                         self.probing.remove(&cid);
                         self.on_repair_probe(now, cid, providers, out);
+                    } else if let Some(root) = self.stripe_lookups.remove(&id) {
+                        self.on_stripe_providers(now, root, providers, out);
                     } else if let Some((cid, fetch)) = self.provider_lookups.remove(&id) {
                         debug_assert_eq!(Key::from_cid(&cid).0, key.0);
                         if providers.is_empty() {
                             self.metrics.inc("provider_lookup_empty");
-                            // A failed chunk kills the whole file fetch;
-                            // the anti-entropy sweep will retry the root.
+                            // A failed chunk kills the whole file fetch
+                            // — including its still-live sibling chunk
+                            // fetches; the anti-entropy sweep will
+                            // retry the root.
                             if let Some(FetchPurpose::DataChunk { root }) =
                                 self.retry_purposes.remove(&cid)
                             {
-                                self.data_fetches.remove(&root);
-                                self.repair_fetches.remove(&root);
+                                self.cancel_file_fetch(root);
                             }
                             self.fetch_failed(cid, fetch);
                         } else {
-                            let mut sends = bitswap::Sends::new();
-                            let purpose = self.purpose_for_retry(cid);
-                            let is_entry = matches!(purpose, FetchPurpose::LogEntry);
-                            let fid = self.bitswap.fetch(now, cid, providers, &mut sends);
-                            self.fetch_purpose.insert(fid, purpose);
-                            if is_entry {
-                                self.entry_fetches.insert(cid, fid);
+                            match self.purpose_for_retry(cid) {
+                                FetchPurpose::DataChunk { root }
+                                    if !self.data_fetches.contains_key(&root) =>
+                                {
+                                    // The file fetch this chunk served is
+                                    // gone (cancelled or completed): a
+                                    // retry would orphan the chunk.
+                                    self.metrics.inc("orphan_chunk_lookups_dropped");
+                                }
+                                FetchPurpose::DataRoot { data_cid }
+                                    if self.bs.has(&data_cid) =>
+                                {
+                                    // Root already local (the fetch was
+                                    // parked on this lookup): schedule
+                                    // chunks straight from the
+                                    // discovered providers.
+                                    let provs = self.dedup_providers(&providers);
+                                    if provs.is_empty() {
+                                        self.fetch_failed(data_cid, fetch);
+                                    } else {
+                                        self.schedule_chunks(now, data_cid, provs, out);
+                                    }
+                                }
+                                purpose => {
+                                    let mut sends = bitswap::Sends::new();
+                                    let is_entry =
+                                        matches!(purpose, FetchPurpose::LogEntry);
+                                    let fid =
+                                        self.bitswap.fetch(now, cid, providers, &mut sends);
+                                    self.fetch_purpose.insert(fid, purpose);
+                                    if is_entry {
+                                        self.entry_fetches.insert(cid, fid);
+                                    }
+                                    self.wrap_bitswap(sends, out);
+                                }
                             }
-                            self.wrap_bitswap(sends, out);
                         }
                     }
                 }
+            }
+        }
+        // Per-request outcomes feed the peer-quality table. Pure local
+        // bookkeeping — no RNG, no sends — so draining unconditionally
+        // (even with the striping knob off) cannot perturb replay.
+        for o in std::mem::take(&mut self.bitswap.outcomes) {
+            match o {
+                Outcome::Block { peer, latency } => {
+                    self.quality.observe_block(peer, latency.as_millis_f64())
+                }
+                Outcome::DontHave { peer } => self.quality.observe_dont_have(peer),
+                Outcome::Timeout { peer } => self.quality.observe_timeout(peer),
             }
         }
         // Bitswap events.
@@ -1102,10 +1391,21 @@ impl Node {
                     }
                 }
                 BitswapEvent::Exhausted { id, cid } => {
+                    let purpose = self.fetch_purpose.remove(&id);
+                    if self.cfg.chunk_scheduler != ChunkScheduler::Single {
+                        if let Some(FetchPurpose::DataChunk { root }) = &purpose {
+                            // Striped modes reassign within the known
+                            // provider set instead of asking the DHT:
+                            // chunk keys are never announced (only file
+                            // roots are), so a chunk lookup can only
+                            // ever come back empty.
+                            self.on_chunk_exhausted(now, *root, cid, out);
+                            continue;
+                        }
+                    }
                     // Last resort: look up providers in the DHT. Clear the
                     // in-flight marker so later announcements/anti-entropy
                     // can retry the fetch independently.
-                    let purpose = self.fetch_purpose.remove(&id);
                     self.entry_fetches.remove(&cid);
                     self.metrics.inc("fetch_exhausted");
                     let key = Key::from_cid(&cid);
@@ -1137,6 +1437,7 @@ impl Node {
         // Nested engine work may have produced more events.
         if !self.dht.events.is_empty()
             || !self.bitswap.events.is_empty()
+            || !self.bitswap.outcomes.is_empty()
             || !self.pubsub.deliveries.is_empty()
         {
             self.drain_engines(now, out);
@@ -1224,6 +1525,56 @@ impl Node {
         let mut sends = pubsub::Sends::new();
         self.pubsub.set_neighbors(peers, &mut sends);
         self.wrap_pubsub(sends, out);
+    }
+
+    /// Roots of data fetches that owe chunks but have NO forward driver:
+    /// no live bitswap fetch referencing the file, no provider / stripe
+    /// lookup in flight for it, nothing that will ever issue another
+    /// request. The sim's stall invariant asserts no such fetch exists
+    /// while another live node still holds the data — a fetch must
+    /// either be making progress or have been abandoned outright.
+    pub fn stalled_data_fetches(&self) -> Vec<Cid> {
+        fn refs(p: &FetchPurpose, root: &Cid) -> bool {
+            match p {
+                FetchPurpose::DataChunk { root: r } => r == root,
+                FetchPurpose::DataRoot { data_cid } => data_cid == root,
+                FetchPurpose::LogEntry => false,
+            }
+        }
+        let mut stalled: Vec<Cid> = Vec::new();
+        for (root, df) in &self.data_fetches {
+            if df.pending.is_empty() && df.in_flight.is_empty() {
+                // Placeholder (root fetch or provider lookup running);
+                // nothing owed yet.
+                continue;
+            }
+            let driven = self.fetch_purpose.values().any(|p| refs(p, root))
+                || self.provider_lookups.values().any(|(c, _)| {
+                    c == root
+                        || self.retry_purposes.get(c).map_or(false, |p| refs(p, root))
+                })
+                || self.stripe_lookups.values().any(|r| r == root);
+            if !driven {
+                stalled.push(*root);
+            }
+        }
+        stalled.sort();
+        stalled
+    }
+
+    /// Number of live fetch-purpose entries (leak diagnostics).
+    pub fn fetch_purposes_len(&self) -> usize {
+        self.fetch_purpose.len()
+    }
+
+    /// Number of active bitswap fetch sessions (leak diagnostics).
+    pub fn bitswap_active_fetches(&self) -> usize {
+        self.bitswap.active_fetches()
+    }
+
+    /// Live bitswap request-index entries (leak diagnostics).
+    pub fn bitswap_req_index_len(&self) -> usize {
+        self.bitswap.req_index_len()
     }
 
     fn check_bootstrap_done(&mut self, now: Nanos) {

@@ -1,0 +1,220 @@
+//! Per-peer transfer-quality tracking for the striped fetch scheduler.
+//!
+//! The paper's bulk workload is replicating performance datasets between
+//! peers (§III-B); a multi-source fetch is only faster than a
+//! single-source one if chunks land on the providers that actually
+//! deliver. [`PeerQuality`] is the node-local observation table that
+//! makes that possible: every bitswap request outcome
+//! ([`crate::bitswap::Outcome`]) updates a per-peer cost estimate, and
+//! [`ChunkScheduler::Quality`] assigns each chunk to the provider with
+//! the lowest estimated cost weighted by its current load.
+
+use crate::net::PeerId;
+use std::collections::BTreeMap;
+
+/// Chunk-assignment policy for multi-chunk file fetches
+/// ([`crate::peersdb::NodeConfig::chunk_scheduler`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkScheduler {
+    /// Legacy single-source window: every chunk is requested from one
+    /// source peer (the peer that served the root block). The default —
+    /// schedules recorded before striping existed replay bit-identically.
+    Single,
+    /// Stripe chunks across the whole provider set in rotation,
+    /// ignoring observed peer quality. Exists as the negative control
+    /// for [`ChunkScheduler::Quality`]: a slow provider keeps receiving
+    /// its share of chunks and drags the transfer.
+    RoundRobin,
+    /// Stripe chunks across the provider set weighted by the observed
+    /// [`PeerQuality`] cost: cheap (fast, reliable) providers absorb
+    /// proportionally more of the window, and a provider that times out
+    /// or answers `DontHave` is penalized away from future assignments.
+    Quality,
+}
+
+/// Newest-sample weight of the block-latency EWMA. 0.3 adapts within a
+/// few blocks while smoothing over single-sample jitter.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Optimistic prior cost (milliseconds) for a peer we have never
+/// observed. Low enough that unknown providers get tried — discovering
+/// a fast peer requires sending it at least one chunk — but nonzero so
+/// a peer with one good observation immediately outranks strangers.
+const DEFAULT_COST_MS: f64 = 300.0;
+
+/// Penalty (milliseconds) added when a request to the peer times out.
+/// A timeout costs the transfer a full RPC-timeout window (4 s by
+/// default) plus the reassignment round-trip, so it is scored far above
+/// any plausible block latency.
+const TIMEOUT_PENALTY_MS: f64 = 2_000.0;
+
+/// Penalty (milliseconds) added when the peer answers `DontHave` (or
+/// serves a block that fails content verification — equivalent from the
+/// fetcher's point of view: the peer cannot provide this content).
+const DONTHAVE_PENALTY_MS: f64 = 500.0;
+
+/// Observed statistics for one peer.
+#[derive(Clone, Copy, Debug, Default)]
+struct PeerScore {
+    /// EWMA of block latency in milliseconds; 0.0 until the first block.
+    ewma_ms: f64,
+    /// Whether `ewma_ms` has at least one sample behind it.
+    observed: bool,
+    /// Accumulated failure penalty in milliseconds. Grows on timeout /
+    /// `DontHave`, halves on every successful block, so a peer that
+    /// recovers earns its way back instead of being banned forever.
+    penalty_ms: f64,
+}
+
+/// Per-node table of observed transfer quality, one entry per peer this
+/// node has exchanged bitswap requests with.
+///
+/// ## Cost model
+///
+/// A peer's cost (milliseconds, lower is better) is
+///
+/// ```text
+/// cost(p) = ewma(p) + penalty(p)
+/// ```
+///
+/// where
+///
+/// * `ewma(p)` is an exponentially weighted moving average of observed
+///   block latencies with newest-sample weight `EWMA_ALPHA` (0.3):
+///   `ewma ← 0.3·sample + 0.7·ewma`. Before the first block arrives the
+///   optimistic prior `DEFAULT_COST_MS` (300 ms) stands in, so unknown
+///   providers are competitive enough to get sampled at all;
+/// * `penalty(p)` accumulates failures — `+2000 ms` per timeout,
+///   `+500 ms` per `DontHave` (or tampered block) — and *halves* on
+///   every successful block, so transient failures decay once the peer
+///   behaves again.
+///
+/// The table is pure bookkeeping: updates draw no randomness and send
+/// no messages, so feeding it unconditionally (even with the scheduler
+/// knob off) cannot perturb replay determinism. Iteration is over a
+/// `BTreeMap` keyed by [`PeerId`] so any future ordered walk is
+/// deterministic too.
+#[derive(Clone, Debug, Default)]
+pub struct PeerQuality {
+    scores: BTreeMap<PeerId, PeerScore>,
+}
+
+impl PeerQuality {
+    pub fn new() -> PeerQuality {
+        PeerQuality::default()
+    }
+
+    /// A verified block arrived from `peer` after `latency_ms`.
+    pub fn observe_block(&mut self, peer: PeerId, latency_ms: f64) {
+        let s = self.scores.entry(peer).or_default();
+        if s.observed {
+            s.ewma_ms = EWMA_ALPHA * latency_ms + (1.0 - EWMA_ALPHA) * s.ewma_ms;
+        } else {
+            s.ewma_ms = latency_ms;
+            s.observed = true;
+        }
+        s.penalty_ms *= 0.5;
+    }
+
+    /// A request to `peer` timed out.
+    pub fn observe_timeout(&mut self, peer: PeerId) {
+        self.scores.entry(peer).or_default().penalty_ms += TIMEOUT_PENALTY_MS;
+    }
+
+    /// `peer` answered `DontHave` (or served unverifiable content).
+    pub fn observe_dont_have(&mut self, peer: PeerId) {
+        self.scores.entry(peer).or_default().penalty_ms += DONTHAVE_PENALTY_MS;
+    }
+
+    /// Estimated cost of requesting a chunk from `peer`, in
+    /// milliseconds; lower is better. Unobserved peers cost the
+    /// optimistic prior.
+    pub fn cost(&self, peer: &PeerId) -> f64 {
+        match self.scores.get(peer) {
+            Some(s) => {
+                let base = if s.observed { s.ewma_ms } else { DEFAULT_COST_MS };
+                base + s.penalty_ms
+            }
+            None => DEFAULT_COST_MS,
+        }
+    }
+
+    /// Number of peers with at least one recorded observation.
+    pub fn len(&self) -> usize {
+        self.scores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scores.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn peer(n: u64) -> PeerId {
+        let mut rng = Rng::new(n);
+        PeerId::from_rng(&mut rng)
+    }
+
+    #[test]
+    fn unknown_peer_costs_the_prior() {
+        let q = PeerQuality::new();
+        assert_eq!(q.cost(&peer(1)), DEFAULT_COST_MS);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn first_block_replaces_the_prior_not_blends_it() {
+        let mut q = PeerQuality::new();
+        let p = peer(1);
+        q.observe_block(p, 40.0);
+        assert_eq!(q.cost(&p), 40.0, "first sample is adopted verbatim");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn ewma_converges_toward_recent_latency() {
+        let mut q = PeerQuality::new();
+        let p = peer(2);
+        q.observe_block(p, 100.0);
+        for _ in 0..20 {
+            q.observe_block(p, 500.0);
+        }
+        let c = q.cost(&p);
+        assert!(c > 450.0 && c <= 500.0, "ewma converged: {c}");
+    }
+
+    #[test]
+    fn failures_penalize_and_successes_forgive() {
+        let mut q = PeerQuality::new();
+        let p = peer(3);
+        q.observe_block(p, 50.0);
+        q.observe_timeout(p);
+        assert_eq!(q.cost(&p), 50.0 + TIMEOUT_PENALTY_MS);
+        q.observe_dont_have(p);
+        assert_eq!(q.cost(&p), 50.0 + TIMEOUT_PENALTY_MS + DONTHAVE_PENALTY_MS);
+        // Each successful block halves the accumulated penalty.
+        q.observe_block(p, 50.0);
+        let c = q.cost(&p);
+        assert!(c < 50.0 + (TIMEOUT_PENALTY_MS + DONTHAVE_PENALTY_MS) * 0.6, "{c}");
+        for _ in 0..12 {
+            q.observe_block(p, 50.0);
+        }
+        assert!(q.cost(&p) < 55.0, "penalty decays to noise: {}", q.cost(&p));
+    }
+
+    #[test]
+    fn slow_peer_ranks_below_fast_peer_but_above_nothing() {
+        let mut q = PeerQuality::new();
+        let (fast, slow) = (peer(4), peer(5));
+        q.observe_block(fast, 30.0);
+        q.observe_block(slow, 900.0);
+        assert!(q.cost(&fast) < q.cost(&slow));
+        // A known-slow peer is still assignable (finite cost): striping
+        // over a bad provider beats stalling with no provider.
+        assert!(q.cost(&slow).is_finite());
+    }
+}

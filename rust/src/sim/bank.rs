@@ -8,7 +8,7 @@
 //! invalidates recorded `SimStats` checksums, which is exactly the
 //! signal the perf-trajectory artifact is meant to carry.
 
-use crate::peersdb::NodeConfig;
+use crate::peersdb::{ChunkScheduler, NodeConfig};
 use crate::sim::regions::Region;
 use crate::sim::scenario::{AvailabilityInvariant, EclipseInvariant, Fault, Scenario};
 use crate::util::time::Duration;
@@ -417,10 +417,101 @@ pub fn halfopen_holders() -> Scenario {
         .at(150, Fault::Heal)
 }
 
+/// Rows in the striped-transfer scenarios' one large contribution —
+/// sized so the gzip'd file spans dozens of chunker blocks (≈ 10 MB at
+/// ≈ 75 B/row compressed), forcing several chunk-window refills per
+/// fetch. The single-block files of the other scenarios never exercise
+/// striping at all.
+pub const STRIPE_ROWS: usize = 140_000;
+
+/// Initial cluster size in the striped-transfer scenarios; flash-crowd
+/// joiners land at indices `STRIPE_PEERS..`.
+pub const STRIPE_PEERS: usize = 6;
+
+/// Latency multiplier on the slow author's links in [`slow_peer_drag`]
+/// / [`slow_peer_drag_rr`].
+pub const DRAG_FACTOR: f64 = 10.0;
+
+/// The shared drag schedule: one multi-chunk contribution replicates to
+/// the whole cluster (`announce_replicas` on, so every replica plants a
+/// provider record), then two joiners land behind [`DRAG_FACTOR`]×-slow
+/// links to the author. The author still answers every Want — just very
+/// late — so it is exactly the provider a striped fetch should learn to
+/// de-weight, and never a correctness problem a timeout would surface.
+fn drag_schedule(name: &'static str, seed: u64) -> Scenario {
+    let mut sc = Scenario::named(name, seed, STRIPE_PEERS);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.cfg.announce_replicas = true;
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: STRIPE_ROWS })
+        // Two newcomers join once every original peer holds (and has
+        // announced) the file…
+        .at(60, Fault::FlashCrowd { n: 2, region: Region::UsWest1 })
+        // …and the same instant (declaration order breaks the tie, so
+        // the joiners exist when the fault applies) the author's links
+        // to both go 10× slow.
+        .at(60, Fault::SlowLink { a: 1, b: STRIPE_PEERS, factor: DRAG_FACTOR })
+        .at(60, Fault::SlowLink { a: 1, b: STRIPE_PEERS + 1, factor: DRAG_FACTOR })
+        .at(90, Fault::Checkpoint)
+}
+
+/// 14. Slow-peer drag — the peer-quality scheduler headline. The drag
+/// schedule under [`ChunkScheduler::Quality`]: the joiners' striped
+/// fetches sample one slow block from the degraded author, the EWMA
+/// inflates its cost, and the remaining stripes land on the five fast
+/// replicas — the joiners' time-to-replicate barely notices the drag.
+/// The negative control [`slow_peer_drag_rr`] shows what ignoring the
+/// observation costs; `tests/scenarios.rs` asserts the gap.
+pub fn slow_peer_drag() -> Scenario {
+    let mut sc = drag_schedule("slow-peer-drag", 1616);
+    sc.cfg.chunk_scheduler = ChunkScheduler::Quality;
+    sc
+}
+
+/// 15. Slow-peer drag, round-robin control: the identical schedule under
+/// [`ChunkScheduler::RoundRobin`], which keeps dealing every Nth chunk
+/// to the 10×-slow author no matter what it observes. Exists so the
+/// quality scheduler's win in [`slow_peer_drag`] is measured against a
+/// striping baseline, not against the single-source fetcher.
+pub fn slow_peer_drag_rr() -> Scenario {
+    let mut sc = drag_schedule("slow-peer-drag-rr", 1717);
+    sc.cfg.chunk_scheduler = ChunkScheduler::RoundRobin;
+    sc
+}
+
+/// 16. Provider death mid-transfer — the reassignment headline. Same
+/// replicate-then-join shape as the drag pair, but moments after the
+/// joiner lands, a replica holding an announced provider record
+/// crashes. The record outlives the corpse in the DHT, so the joiner's
+/// quality scheduler assigns stripes to a dead peer: those Wants must
+/// time out and the chunks be reassigned to live providers
+/// (`transfer_reassignments > 0`), completing the fetch — the
+/// fetch-stall invariant at quiesce is the pass condition. The crashed
+/// replica returns well before quiesce so convergence is unaffected.
+pub fn provider_death_midtransfer() -> Scenario {
+    let mut sc = Scenario::named("provider-death-midtransfer", 1818, STRIPE_PEERS);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.cfg.announce_replicas = true;
+    sc.cfg.chunk_scheduler = ChunkScheduler::Quality;
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: STRIPE_ROWS })
+        .at(60, Fault::FlashCrowd { n: 1, region: Region::UsWest1 })
+        // 600 ms in — the joiner has synced the log and is a few chunk
+        // waves into the file (a ~40-chunk fetch started around t+60.4
+        // cannot finish before t+61) — a replica dies. Its provider
+        // record stays behind in the DHT either way, so stripes land on
+        // the corpse whether they were in flight at the crash or
+        // assigned after it.
+        .at_ms(60_600, Fault::Crash { node: 2 })
+        .at(90, Fault::Checkpoint)
+        .at(120, Fault::Restart { node: 2 })
+}
+
 /// Every replayable bank scenario, in canonical order: the seven
 /// original fault scenarios, the multi-region scale-out headline, the
 /// two directional-plane scenarios (half-open region, eclipse), the two
-/// GC-pressure repair scenarios, and the defended eclipse.
+/// GC-pressure repair scenarios, the defended eclipse, and the three
+/// striped-transfer scenarios (drag pair + provider death).
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -436,6 +527,9 @@ pub fn all() -> Vec<Scenario> {
         gc_pressure(),
         halfopen_holders(),
         defended_eclipse(),
+        slow_peer_drag(),
+        slow_peer_drag_rr(),
+        provider_death_midtransfer(),
     ]
 }
 
@@ -611,6 +705,78 @@ mod tests {
                 assert!(c_at < *drop_at, "{}: drop precedes contribution", sc.name);
             }
         }
+    }
+
+    #[test]
+    fn scheduler_default_off_outside_striped_scenarios() {
+        // Replay-compatibility guard, mirroring the DHT-defense guard
+        // above: every pre-striping scenario keeps the single-source
+        // fetcher and kubo-faithful batched announces, so its SimStats
+        // (and checksum) are bit-identical to the pre-PR recordings.
+        let striped = ["slow-peer-drag", "slow-peer-drag-rr", "provider-death-midtransfer"];
+        for sc in all() {
+            if striped.contains(&sc.name) {
+                continue;
+            }
+            assert_eq!(
+                sc.cfg.chunk_scheduler,
+                ChunkScheduler::Single,
+                "{}: striping leaked in",
+                sc.name
+            );
+            assert!(!sc.cfg.announce_replicas, "{}: replica announces leaked in", sc.name);
+        }
+    }
+
+    #[test]
+    fn striped_transfer_shapes_are_consistent() {
+        // The drag pair differs in scheduler (and seed) only: the
+        // quality-vs-round-robin comparison is schedule-for-schedule.
+        let drag = slow_peer_drag();
+        let rr = slow_peer_drag_rr();
+        assert_eq!(drag.cfg.chunk_scheduler, ChunkScheduler::Quality);
+        assert_eq!(rr.cfg.chunk_scheduler, ChunkScheduler::RoundRobin);
+        let fmt = |sc: &Scenario| {
+            sc.events.iter().map(|e| format!("{:?}@{}", e.fault, e.at.0)).collect::<Vec<_>>()
+        };
+        assert_eq!(fmt(&drag), fmt(&rr), "drag control drifted from the quality schedule");
+        for sc in [&drag, &rr, &provider_death_midtransfer()] {
+            assert!(sc.cfg.announce_replicas, "{}: striping needs provider records", sc.name);
+            assert_ne!(sc.cfg.chunk_scheduler, ChunkScheduler::Single, "{}", sc.name);
+            // One multi-chunk contribution, authored before the joiners
+            // exist, big enough to out-span the chunk window.
+            let rows: Vec<usize> = sc
+                .events
+                .iter()
+                .filter_map(|e| match e.fault {
+                    Fault::Contribute { rows, .. } => Some(rows),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(rows, vec![STRIPE_ROWS], "{}: exactly one big contribution", sc.name);
+            assert!(
+                STRIPE_ROWS * 75 > sc.cfg.chunk_window * 256 * 1024,
+                "file must out-span the chunk window for striping to matter"
+            );
+        }
+        // The dying provider is a replica, not the author (the author's
+        // copy must survive so reassignment has somewhere to land), and
+        // it returns before quiesce.
+        let death = provider_death_midtransfer();
+        let (mut crashed, mut restarted) = (None, None);
+        for e in &death.events {
+            match e.fault {
+                Fault::Crash { node } => crashed = Some((e.at.0, node)),
+                Fault::Restart { node } => restarted = Some((e.at.0, node)),
+                _ => {}
+            }
+        }
+        let (crash_at, victim) = crashed.expect("a provider dies");
+        let (restart_at, revived) = restarted.expect("the provider returns");
+        assert_eq!(victim, revived);
+        assert_ne!(victim, 1, "the author must survive");
+        assert!(victim < STRIPE_PEERS, "the victim is an original replica");
+        assert!(crash_at < restart_at);
     }
 
     #[test]

@@ -53,6 +53,13 @@ pub struct SimStats {
     pub closer_peers_rejected: u64,
     /// Peers quarantined in a routing table's `pending_verify` tier.
     pub unverified_peers_quarantined: u64,
+    /// Chunk requests issued by a striped (non-`Single`) scheduler,
+    /// cluster-wide. Like the defense trio, summed from per-node
+    /// metrics by `run_cluster` — the transport never writes it.
+    pub chunks_striped: u64,
+    /// Chunks reassigned to another provider after timeout / `DontHave`
+    /// / provider departure, cluster-wide.
+    pub transfer_reassignments: u64,
 }
 
 impl SimStats {
@@ -93,6 +100,16 @@ impl SimStats {
         ];
         if defense.iter().any(|v| *v != 0) {
             for v in defense {
+                mix(&mut h, v);
+            }
+        }
+        // The striped-transfer counters form a second independent
+        // only-when-nonzero group: scheduler-off runs (all recordings
+        // that predate striping, defenses engaged or not) hash exactly
+        // the byte stream they always did.
+        let transfer = [self.chunks_striped, self.transfer_reassignments];
+        if transfer.iter().any(|v| *v != 0) {
+            for v in transfer {
                 mix(&mut h, v);
             }
         }
@@ -817,6 +834,19 @@ mod tests {
         assert_ne!(on.checksum(), off.checksum());
         let on2 = SimStats { closer_peers_rejected: 1, ..on.clone() };
         assert_ne!(on2.checksum(), on.checksum());
+        // The striped-transfer group is independent of the defense
+        // group: zero transfer counters leave both the legacy digest
+        // and a defenses-on digest untouched…
+        let striped_zero =
+            SimStats { chunks_striped: 0, transfer_reassignments: 0, ..off.clone() };
+        assert_eq!(striped_zero.checksum(), legacy(&off));
+        let on_striped_zero = SimStats { chunks_striped: 0, ..on.clone() };
+        assert_eq!(on_striped_zero.checksum(), on.checksum());
+        // …while an engaged scheduler extends the digest.
+        let striped = SimStats { chunks_striped: 40, ..off.clone() };
+        assert_ne!(striped.checksum(), off.checksum());
+        let reassigned = SimStats { transfer_reassignments: 2, ..striped.clone() };
+        assert_ne!(reassigned.checksum(), striped.checksum());
     }
 
     #[test]

@@ -158,6 +158,24 @@ pub fn dht_defense_totals(cluster: &Cluster<Node>) -> (u64, u64, u64) {
     totals
 }
 
+/// Cluster-wide totals of the striped-transfer counters, summed over
+/// every node's metrics: `(chunks_striped, transfer_reassignments)`.
+/// Like [`dht_defense_totals`], `sim::scenario::run_cluster` folds
+/// these into the report's [`crate::sim::des::SimStats`] so scenario
+/// replays guard them; tests use the totals directly to assert the
+/// scheduler actually striped or reassigned. Both are zero unless a
+/// node ran with a non-`Single`
+/// [`crate::peersdb::ChunkScheduler`].
+pub fn transfer_totals(cluster: &Cluster<Node>) -> (u64, u64) {
+    let mut totals = (0u64, 0u64);
+    for i in 0..cluster.len() {
+        let m = &cluster.node(i).metrics;
+        totals.0 += m.counter("chunks_striped");
+        totals.1 += m.counter("transfer_reassignments");
+    }
+    totals
+}
+
 /// Drain accumulated [`NodeEvent`]s from every node.
 pub fn drain_events(cluster: &mut Cluster<Node>) -> Vec<(usize, NodeEvent)> {
     let mut all = Vec::new();

@@ -41,7 +41,13 @@
 //!      contribution's data file must remain fetchable from at least
 //!      `min_holders` live honest peers, i.e. GC pressure and holder
 //!      churn did not destroy the last copy (`peersdb`'s availability-
-//!      repair loop is what keeps this true).
+//!      repair loop is what keeps this true);
+//!
+//!   7. **fetch-stall freedom** — at quiesce no node's data fetch may
+//!      sit idle (chunks owed, nothing in flight, no lookup pending)
+//!      while a live provider still holds the file: a fetch either
+//!      makes progress or is abandoned outright, never wedged
+//!      (`peersdb`'s striped chunk scheduler and reassignment paths).
 //!
 //! Runs are deterministic: executing the same scenario twice yields the
 //! identical [`SimStats`], digest, and report — which is what makes a
@@ -516,6 +522,12 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
     stats.lookup_paths_started = paths;
     stats.closer_peers_rejected = rejected;
     stats.unverified_peers_quarantined = quarantined;
+    // Same for the striped-transfer counters: all-zero (and
+    // checksum-invisible) unless a scenario ran a non-`Single`
+    // chunk scheduler.
+    let (striped, reassigned) = harness::transfer_totals(&cluster);
+    stats.chunks_striped = striped;
+    stats.transfer_reassignments = reassigned;
 
     let report = ScenarioReport {
         name: sc.name,
@@ -626,6 +638,25 @@ pub fn check_invariants(
     // total loss reads as "data loss", not as a replica shortfall)
     if let Some(av) = &cfg.availability {
         check_availability(cluster, av, &cfg.byzantine)?;
+    }
+
+    // ---- Fetch-stall freedom (quiesce) ---------------------------------
+    // No data fetch may sit idle — chunks owed but nothing in flight and
+    // no lookup pending — while a live node still holds the whole file.
+    // Every abandon path must tear the fetch down outright; a stalled
+    // entry means a scheduler or reassignment path dropped its driver.
+    for &i in &online {
+        for root in cluster.node(i).stalled_data_fetches() {
+            let holder = online.iter().any(|&j| {
+                j != i && crate::blockstore::chunker::has_file(&cluster.node(j).bs, &root)
+            });
+            if holder {
+                return Err(format!(
+                    "fetch stall: node {i}'s fetch of {root:?} has no request in \
+                     flight and no lookup pending while a live provider holds the file"
+                ));
+            }
+        }
     }
 
     // ---- Bootstrap + log convergence (quiesce) -------------------------

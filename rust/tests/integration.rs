@@ -6,7 +6,7 @@
 
 use peersdb::blockstore::chunker::CHUNK_SIZE;
 use peersdb::net::Outbox;
-use peersdb::peersdb::{Node, NodeConfig, NodeEvent, ValidationSource};
+use peersdb::peersdb::{ChunkScheduler, Node, NodeConfig, NodeEvent, ValidationSource};
 use peersdb::sim::harness::{assert_converged, build_cluster, contribute, drain_events, PeerSpec};
 use peersdb::sim::model::NetModel;
 use peersdb::sim::regions::{Region, ALL};
@@ -230,6 +230,115 @@ fn chunked_large_file_replicates() {
             "node {i}"
         );
     }
+}
+
+#[test]
+fn local_root_with_no_candidates_uses_one_provider_lookup_not_self_wants() {
+    // Regression for the self-addressed-Want storm: a fetch that finds
+    // the file's root block already local but arrives with no usable
+    // candidate used to default its chunk source to *itself* — every
+    // chunk was Want'ed from self, a guaranteed DontHave → Exhausted →
+    // one doomed DHT lookup per chunk (chunk keys are never announced).
+    // The fix runs exactly one provider lookup on the root key and
+    // schedules chunks from whatever it finds.
+    let specs = default_specs(3, |_| NodeConfig {
+        auto_pin: false, // nobody replicates on their own
+        ..NodeConfig::default()
+    });
+    let mut cluster = build_cluster(31, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+
+    // Node 1 contributes a 3-block file (manifest + 2 chunks) and, per
+    // the announce default, plants a provider record for the root.
+    let mut rng = Rng::new(29);
+    let mut big = vec![0u8; CHUNK_SIZE * 2 + 100];
+    rng.fill_bytes(&mut big);
+    let root = contribute(&mut cluster, 1, &big, "spark-sort");
+    cluster.run_for(Duration::from_secs(5));
+
+    // Hand node 2 the root block alone, then fetch with no candidates.
+    let root_block = cluster.node(1).bs.get(&root).expect("author holds the root").to_vec();
+    cluster.with_node(2, move |n: &mut Node, _now, _out: &mut Outbox<_>| {
+        n.bs.put(peersdb::cid::Codec::Raw, root_block);
+    });
+    cluster.with_node(2, move |n: &mut Node, now, out: &mut Outbox<_>| {
+        n.fetch_cid(now, root, vec![], out);
+    });
+    cluster.run_for(Duration::from_secs(30));
+
+    // The lookup found the author's record and the chunks arrived.
+    assert_eq!(
+        cluster.node(2).get_file(&root).as_deref(),
+        Some(&big[..]),
+        "chunks never arrived"
+    );
+    let m = &cluster.node(2).metrics;
+    assert_eq!(m.counter("chunk_provider_lookups"), 1, "exactly one root-key lookup");
+    // The storm signature of the old bug: per-chunk self-Wants dying as
+    // DontHave → Exhausted → empty per-chunk lookups. All absent.
+    assert_eq!(m.counter("fetch_exhausted"), 0, "a chunk Want died");
+    assert_eq!(m.counter("provider_lookup_empty"), 0, "a doomed chunk lookup ran");
+    assert_eq!(m.counter("fetch_failed"), 0);
+    // No fetch state leaks behind the completed file.
+    assert_eq!(cluster.node(2).fetch_purposes_len(), 0);
+    assert_eq!(cluster.node(2).bitswap_active_fetches(), 0);
+    assert_eq!(cluster.node(2).bitswap_req_index_len(), 0);
+}
+
+#[test]
+fn cancelled_file_fetch_cancels_live_siblings_and_leaks_nothing() {
+    // Regression for the sibling-fetch leak: when one chunk exhausts
+    // every provider and kills the whole file fetch, its still-live
+    // sibling chunk fetches used to stay registered in the bitswap
+    // engine (and their `fetch_purpose` entries leaked) until each
+    // independently failed. The kill must now sweep them via
+    // `bitswap::Engine::cancel`.
+    //
+    // Construction: node 2 holds only a 2-chunk file's root block and is
+    // pointed at two providers that hold nothing at all. Striped
+    // scheduling assigns one chunk to each; both DontHave, both chunks
+    // get reassigned to the *other* provider, and whichever second
+    // DontHave lands first exhausts its chunk's provider set while the
+    // sibling's reassigned fetch is still in flight — exactly the state
+    // the sweep exists for.
+    let specs = default_specs(4, |_| NodeConfig {
+        auto_pin: false,
+        chunk_scheduler: ChunkScheduler::Quality,
+        ..NodeConfig::default()
+    });
+    let mut cluster = build_cluster(32, NetModel::default(), specs);
+    cluster.run_for(Duration::from_secs(10));
+
+    // Build the file in a scratch store; only its root block enters the
+    // cluster (content addressing keeps the CIDs identical).
+    let mut rng = Rng::new(37);
+    let mut big = vec![0u8; CHUNK_SIZE * 2 + 100];
+    rng.fill_bytes(&mut big);
+    let mut scratch = peersdb::blockstore::BlockStore::new();
+    let added = peersdb::blockstore::chunker::add_file(&mut scratch, &big);
+    let root = added.root;
+    let root_block = scratch.get(&root).expect("scratch root").to_vec();
+
+    let (p3, p0) = (cluster.peer_id(3), cluster.peer_id(0));
+    cluster.with_node(2, move |n: &mut Node, now, out: &mut Outbox<_>| {
+        n.bs.put(peersdb::cid::Codec::Raw, root_block);
+        n.fetch_cid(now, root, vec![p3, p0], out);
+    });
+    cluster.run_for(Duration::from_secs(30));
+
+    let m = &cluster.node(2).metrics;
+    // Both chunks striped out, both bounced once to the other provider,
+    // and the first chunk to exhaust both swept its live sibling.
+    assert_eq!(m.counter("chunks_striped"), 2);
+    assert_eq!(m.counter("transfer_reassignments"), 2);
+    assert_eq!(m.counter("sibling_fetches_cancelled"), 1, "the live sibling was not swept");
+    assert_eq!(m.counter("fetch_failed"), 1, "the file fetch must die exactly once");
+    // The file is (correctly) absent, and so is every trace of the
+    // fetch: no purpose entries, no engine fetches, no request index.
+    assert!(cluster.node(2).get_file(&root).is_none());
+    assert_eq!(cluster.node(2).fetch_purposes_len(), 0, "fetch_purpose leaked");
+    assert_eq!(cluster.node(2).bitswap_active_fetches(), 0, "engine fetch leaked");
+    assert_eq!(cluster.node(2).bitswap_req_index_len(), 0, "req_index leaked");
 }
 
 #[test]

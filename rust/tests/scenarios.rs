@@ -497,6 +497,112 @@ fn defended_eclipse_defense_matters() {
     assert!(err.contains("eclipse"), "wrong failure: {err}");
 }
 
+// ---------------------------------------------------------------------------
+// 14/15. Slow-peer drag: the quality scheduler samples the 10×-slow
+//     author once and routes the remaining stripes around it; the
+//     round-robin control keeps dealing to it. Same schedule, both
+//     striped — the gap is the scheduler's doing.
+// ---------------------------------------------------------------------------
+
+/// Worst joiner time-to-replicate (ms) across the flash-crowd joiners
+/// (indices `STRIPE_PEERS..`) — the striped-transfer scenarios' figure
+/// of merit.
+fn joiner_repl_max(cluster: &peersdb::sim::Cluster<peersdb::peersdb::Node>) -> f64 {
+    let mut worst = 0.0f64;
+    for i in bank::STRIPE_PEERS..cluster.len() {
+        let s = cluster
+            .node(i)
+            .metrics
+            .summary("replication_ms")
+            .unwrap_or_else(|| panic!("joiner {i} never replicated"));
+        worst = worst.max(s.max());
+    }
+    worst
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "two ~10 MB striped-transfer DES runs need the release profile; CI runs `cargo test --release`"
+)]
+fn scenario_slow_peer_drag_quality_beats_round_robin() {
+    let q = bank::slow_peer_drag();
+    let (q_report, q_cluster) = scenario::run_cluster(&q).expect("quality drag scenario");
+    // Replay determinism of the quality-scheduler path (run_cluster
+    // doesn't go through run_replayed).
+    let replay = scenario::run(&q).expect("replay");
+    assert_eq!(q_report, replay, "slow-peer-drag not deterministic");
+
+    let (rr_report, rr_cluster) =
+        scenario::run_cluster(&bank::slow_peer_drag_rr()).expect("round-robin control");
+
+    assert_eq!(q_report.contributions, 1);
+    assert_eq!(rr_report.contributions, 1);
+    // Both runs genuinely striped chunks across providers.
+    assert!(q_report.stats.chunks_striped > 0, "quality run never striped");
+    assert!(rr_report.stats.chunks_striped > 0, "control run never striped");
+
+    // The joiners fetch behind a 10×-slow link to the author. Quality
+    // pays roughly one slow round-trip (the sample that inflates the
+    // author's EWMA); round-robin pays one per dealt chunk, all the way
+    // down the file. Same schedule, so the gap is the scheduler's.
+    let (q_ms, rr_ms) = (joiner_repl_max(&q_cluster), joiner_repl_max(&rr_cluster));
+    assert!(q_ms > 0.0 && rr_ms > 0.0, "joiners must have replicated");
+    assert!(
+        q_ms + 100.0 < rr_ms,
+        "quality joiners ({q_ms:.0} ms) not measurably faster than round-robin ({rr_ms:.0} ms)"
+    );
+    println!(
+        "slow-peer drag joiner worst-case replication: quality {q_ms:.0} ms, \
+         round-robin {rr_ms:.0} ms (striped {} vs {})",
+        q_report.stats.chunks_striped, rr_report.stats.chunks_striped
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 16. Provider death mid-transfer: a dead replica's provider record
+//     outlives it; stripes assigned to the corpse must time out, get
+//     reassigned to live providers, and the fetch must still complete.
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "~10 MB striped-transfer DES run needs the release profile; CI runs `cargo test --release`"
+)]
+fn scenario_provider_death_midtransfer_reassigns() {
+    use peersdb::sim::harness;
+
+    let sc = bank::provider_death_midtransfer();
+    let (report, cluster) = scenario::run_cluster(&sc).expect("provider-death scenario");
+    // Replay determinism of the reassignment path.
+    let replay = scenario::run(&sc).expect("replay");
+    assert_eq!(report, replay, "provider-death scenario not deterministic");
+
+    assert_eq!(report.contributions, 1);
+    assert_eq!(report.checkpoints, 1);
+    // The scheduler striped, a stripe landed on the corpse, and the
+    // chunk moved on to a live provider.
+    assert!(report.stats.chunks_striped > 0, "nothing was ever striped");
+    assert!(report.stats.transfer_reassignments > 0, "no chunk was ever reassigned");
+    // The report's totals are exactly the cluster's metric totals (the
+    // same identity the defended-eclipse test pins for the DHT trio).
+    let (striped, reassigned) = harness::transfer_totals(&cluster);
+    assert_eq!(
+        (striped, reassigned),
+        (report.stats.chunks_striped, report.stats.transfer_reassignments),
+        "report stats diverged from the cluster's metric totals"
+    );
+    // The joiner holds the whole file at quiesce — reassignment finished
+    // the fetch (the fetch-stall + availability invariants already
+    // insisted; make it explicit).
+    let (cid, _) = report.cids[0];
+    assert!(
+        peersdb::blockstore::chunker::has_file(&cluster.node(bank::STRIPE_PEERS).bs, &cid),
+        "joiner never completed the striped fetch"
+    );
+}
+
 #[test]
 fn eclipse_attack_is_detected_without_recovery_window() {
     // The defense half of the eclipse scenario is the healed tail: links
