@@ -1,0 +1,252 @@
+//! Quorum safety envelope under delayed honest verdicts.
+//!
+//! The attack this maps: a late joiner's validation vote samples a
+//! byzantine *majority* that answers instantly with a unanimous lie,
+//! while the honest minority's verdicts crawl in over slowed links and
+//! miss `QuorumConfig::timeout`. The legacy forced tally then decides
+//! from whatever answered — i.e. from the lie. This bench sweeps the
+//! quorum knobs (`fanout` × `agreement` × `min_force_verdicts`) against
+//! an honest-verdict delay factor and measures, per cell, the
+//! *adopted-lie rate*: the fraction of seeded trials in which any honest
+//! node ends holding a network-adopted verdict that contradicts ground
+//! truth. The result is the empirical safety map — `BENCH_quorum.json`
+//! — naming the cliff edge where the envelope fails, plus a rerun of
+//! that cliff cell with the `timeout_grace` defense switched on
+//! (mirroring `bank::delayed_honest_majority`) showing the same cell
+//! held open past the timeout resolves honestly.
+//!
+//! Cluster shape per trial (fixed, mirroring the bank scenario): node 0
+//! is the honest root in asia-east2, nodes 1–4 run
+//! `ByzantineValidator` (node 1 authors the one *clean* contribution,
+//! so data distribution rides fast links), node 5 is honest in
+//! australia-southeast1, and node 6 — the victim voter — starts 40 s
+//! late in us-west1 with its links to *both* honest validators slowed
+//! by the cell's delay factor. By vote time every early node holds a
+//! local verdict, the four byzantine peers answer the voter's
+//! `ValQuery` within ~300 ms, and the two honest answers take
+//! `factor × ~130 ms` round trips.
+
+use peersdb::codec::Json;
+use peersdb::modeling::datagen;
+use peersdb::peersdb::NodeConfig;
+use peersdb::sim::harness::{self, PeerSpec};
+use peersdb::sim::model::NetModel;
+use peersdb::sim::regions::{Region, ALL};
+use peersdb::util::bench::{print_environment, Table};
+use peersdb::util::time::{Duration, Nanos};
+use peersdb::util::Rng;
+use peersdb::validation::{ByzantineValidator, CostModel, StatsValidator, Validator};
+
+/// Cluster indices, mirroring `bank::delayed_honest_majority`.
+const BYZANTINE: [usize; 4] = [1, 2, 3, 4];
+const HONEST: [usize; 2] = [0, 5];
+const VOTER: usize = 6;
+const TRIALS: u64 = 5;
+
+/// The defended rerun's grace window (30 s, as in the bank scenario).
+const GRACE: Duration = Duration(30_000_000_000);
+
+struct Cell {
+    fanout: usize,
+    agreement: f64,
+    min_force: usize,
+    factor: f64,
+}
+
+struct CellResult {
+    lie_trials: u64,
+    extended: u64,
+    rescued: u64,
+}
+
+fn node_cfg(fanout: usize, agreement: f64, min_force: usize, grace: Duration) -> NodeConfig {
+    let mut cfg = NodeConfig {
+        auto_validate: true,
+        cost_model: CostModel::Linear { base_ns: 2_000_000, ns_per_kb: 50_000.0 },
+        ..NodeConfig::default()
+    };
+    cfg.quorum.fanout = fanout;
+    cfg.quorum.responses_needed = fanout.saturating_sub(1).max(1);
+    cfg.quorum.agreement = agreement;
+    cfg.quorum.min_force_verdicts = min_force;
+    cfg.quorum.timeout_grace = grace;
+    cfg
+}
+
+/// One seeded trial of one cell. Returns (lie_adopted, votes_extended,
+/// votes_rescued_by_grace).
+fn run_trial(seed: u64, cell: &Cell, grace: Duration) -> (bool, u64, u64) {
+    let cfg = node_cfg(cell.fanout, cell.agreement, cell.min_force, grace);
+    let mut specs = Vec::new();
+    for i in 0..VOTER {
+        let region = if i == 0 { Region::AsiaEast2 } else { ALL[i % ALL.len()] };
+        let validator: Box<dyn Validator> = if BYZANTINE.contains(&i) {
+            Box::new(ByzantineValidator::default())
+        } else {
+            Box::new(StatsValidator::default())
+        };
+        specs.push(PeerSpec {
+            region,
+            cfg: cfg.clone(),
+            validator: Some(validator),
+            ..Default::default()
+        });
+    }
+    // The victim voter: late joiner, far from both honest validators.
+    specs.push(PeerSpec {
+        region: Region::UsWest1,
+        start_at: Nanos(Duration::from_secs(40).0),
+        cfg: cfg.clone(),
+        validator: Some(Box::new(StatsValidator::default())),
+        ..Default::default()
+    });
+
+    let mut cluster = harness::build_cluster(seed, NetModel::default(), specs);
+    // Slow the voter's links to both honest validators before anything
+    // runs (links are directed — set both ways, as Fault::SlowLink does).
+    for &h in &HONEST {
+        cluster.set_link_latency_factor(VOTER, h, cell.factor);
+        cluster.set_link_latency_factor(h, VOTER, cell.factor);
+    }
+
+    // Warmup: the early cluster joins and settles, then the byzantine
+    // author injects the one *clean* contribution. By the time the
+    // voter arrives at 40 s, every early node holds a local verdict.
+    cluster.run_for(Duration::from_secs(10));
+    let (data, _) = datagen::generate_contribution(&mut Rng::new(seed ^ 0xDA7A), 0, 40);
+    let cid = harness::contribute(&mut cluster, 1, &data, "workload-0");
+    // Long tail: covers the slowest cell's bootstrap-over-slow-link plus
+    // a full grace window with margin.
+    cluster.run_until(Nanos(Duration::from_secs(240).0));
+
+    let truth = [(cid, false)];
+    let lies = harness::false_verdicts(&cluster, &truth, &BYZANTINE);
+    let (_forced, extended, rescued) = harness::quorum_totals(&cluster);
+    (lies > 0, extended, rescued)
+}
+
+fn run_cell(cell: &Cell, grace: Duration, seed_base: u64) -> CellResult {
+    let mut r = CellResult { lie_trials: 0, extended: 0, rescued: 0 };
+    for t in 0..TRIALS {
+        let (lied, extended, rescued) = run_trial(seed_base + t * 7919, cell, grace);
+        if lied {
+            r.lie_trials += 1;
+        }
+        r.extended += extended;
+        r.rescued += rescued;
+    }
+    r
+}
+
+fn main() {
+    print_environment("QUORUM ENVELOPE: ADOPTED-LIE RATE UNDER DELAYED HONEST VERDICTS");
+    println!(
+        "7-peer clusters, 4 byzantine validators, honest verdicts delayed by `factor`; \
+         {TRIALS} seeded trials per cell\n"
+    );
+
+    let fanouts = [4usize, 6];
+    let agreements = [0.67f64, 0.85];
+    let min_forces = [1usize, 2, 5];
+    let factors = [1.0f64, 20.0, 60.0, 120.0];
+
+    let mut table =
+        Table::new(&["fanout", "agreement", "min_force", "delay ×", "lie rate", "extended"]);
+    let mut records: Vec<Json> = Vec::new();
+    // The cliff edge: among cells safe at nominal latency (factor 1),
+    // the first that adopts the lie once honest verdicts are delayed —
+    // the delay flips the verdict, not the parameters alone.
+    let mut cliff: Option<Json> = None;
+    let mut seed_base = 0x0051_AFE0u64;
+    let t0 = std::time::Instant::now();
+
+    for &fanout in &fanouts {
+        for &agreement in &agreements {
+            let mut safe_at_nominal = false;
+            for &min_force in &min_forces {
+                for &factor in &factors {
+                    let cell = Cell { fanout, agreement, min_force, factor };
+                    let r = run_cell(&cell, Duration::ZERO, seed_base);
+                    seed_base += 1_000_003;
+                    let rate = r.lie_trials as f64 / TRIALS as f64;
+                    if factor == 1.0 {
+                        safe_at_nominal = r.lie_trials == 0;
+                    }
+                    table.row(&[
+                        fanout.to_string(),
+                        format!("{agreement:.2}"),
+                        min_force.to_string(),
+                        format!("{factor:.0}"),
+                        format!("{rate:.2}"),
+                        r.extended.to_string(),
+                    ]);
+                    let rec = Json::obj()
+                        .set("fanout", fanout)
+                        .set("agreement", agreement)
+                        .set("min_force_verdicts", min_force)
+                        .set("delay_factor", factor)
+                        .set("trials", TRIALS)
+                        .set("lie_trials", r.lie_trials)
+                        .set("adopted_lie_rate", rate);
+                    if cliff.is_none() && safe_at_nominal && factor > 1.0 && r.lie_trials > 0 {
+                        cliff = Some(rec.clone());
+                    }
+                    records.push(rec);
+                }
+            }
+        }
+    }
+    table.print();
+
+    // Defense rerun: the bank scenario's cell — fanout 6, agreement
+    // 0.85, min_force 2, factor 60 — with the grace window on. The
+    // rescue counters are the proof the extension engaged; the bank
+    // test `scenario_delayed_honest_majority_grace_rescues` owns the
+    // hard assertion, this records the measurement alongside the map.
+    let cliff_cell = Cell { fanout: 6, agreement: 0.85, min_force: 2, factor: 60.0 };
+    let defended = run_cell(&cliff_cell, GRACE, 0x00DE_F300);
+    let defended_rate = defended.lie_trials as f64 / TRIALS as f64;
+    println!(
+        "\ndefended cliff cell (fanout 6, agreement 0.85, min_force 2, delay 60×, grace 30 s): \
+         lie rate {defended_rate:.2}, votes extended {}, rescued {}",
+        defended.extended, defended.rescued
+    );
+    match &cliff {
+        Some(c) => println!(
+            "cliff edge: fanout {} agreement {} min_force {} first adopts the lie at delay {}×",
+            c.get("fanout").and_then(Json::as_u64).unwrap_or(0),
+            c.get("agreement").and_then(Json::as_f64).unwrap_or(0.0),
+            c.get("min_force_verdicts").and_then(Json::as_u64).unwrap_or(0),
+            c.get("delay_factor").and_then(Json::as_f64).unwrap_or(0.0),
+        ),
+        None => println!("cliff edge: no delay-induced adoption observed (unexpected)"),
+    }
+
+    let doc = Json::obj()
+        .set("bench", "quorum_envelope")
+        .set("version", env!("CARGO_PKG_VERSION"))
+        .set("trials_per_cell", TRIALS)
+        .set("wall_s", t0.elapsed().as_secs_f64())
+        .set("cells", Json::Arr(records))
+        .set(
+            "cliff_edge",
+            cliff.unwrap_or_else(|| Json::obj().set("note", "no delay-induced adoption observed")),
+        )
+        .set(
+            "defense",
+            Json::obj()
+                .set("fanout", 6u64)
+                .set("agreement", 0.85)
+                .set("min_force_verdicts", 2u64)
+                .set("delay_factor", 60.0)
+                .set("timeout_grace_ms", 30_000u64)
+                .set("trials", TRIALS)
+                .set("lie_trials", defended.lie_trials)
+                .set("adopted_lie_rate", defended_rate)
+                .set("votes_extended", defended.extended)
+                .set("votes_rescued_by_grace", defended.rescued),
+        );
+    std::fs::write("BENCH_quorum.json", doc.pretty()).expect("write BENCH_quorum.json");
+    println!("wrote BENCH_quorum.json");
+    println!("quorum_envelope OK");
+}

@@ -4,9 +4,10 @@
 //! fault scenarios, the 100-peer multi-region scale-out, the half-open
 //! asymmetric region, the adversarial eclipse, the two GC-pressure
 //! repair scenarios, the defended eclipse — multi-path +
-//! distance-verified lookups under the same attack — and the three
+//! distance-verified lookups under the same attack — the three
 //! striped-transfer scenarios: the slow-peer drag pair and the
-//! provider-death reassignment run) in this process, measuring wall
+//! provider-death reassignment run — and the delayed-honest-majority
+//! quorum-grace scenario) in this process, measuring wall
 //! time and events/second, and emits the results as `BENCH_sim.json` —
 //! the machine-readable perf-trajectory artifact CI uploads on every
 //! run. Each record also carries the run's `SimStats` checksum: because
@@ -30,7 +31,8 @@ fn main() {
     println!(
         "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves), \
          asymmetric half-open region, adversarial + defended eclipse, GC-pressure repair, \
-         and the striped-transfer trio (slow-peer drag pair + provider death)\n",
+         the striped-transfer trio (slow-peer drag pair + provider death), and the \
+         delayed-honest-majority quorum-grace run\n",
         bank::all().len()
     );
 

@@ -65,6 +65,14 @@ fn quorum_from_json(j: &Json) -> Result<QuorumConfig, String> {
     if let Some(v) = j.path("timeout_ms").and_then(|v| v.as_u64()) {
         q.timeout = Duration::from_millis(v);
     }
+    if let Some(v) = j.path("min_force_verdicts").and_then(|v| v.as_u64()) {
+        q.min_force_verdicts = v as usize;
+    }
+    // Delayed-honest-verdict defense (defaults off; see
+    // `QuorumConfig::timeout_grace`).
+    if let Some(v) = j.path("timeout_grace_ms").and_then(|v| v.as_u64()) {
+        q.timeout_grace = Duration::from_millis(v);
+    }
     Ok(q)
 }
 
@@ -141,6 +149,8 @@ mod tests {
         let cfg = node_config_from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(cfg.store_name, "contributions");
         assert!(cfg.auto_pin);
+        // The delay-defense knob defaults off.
+        assert_eq!(cfg.quorum.timeout_grace, Duration::ZERO);
     }
 
     #[test]
@@ -149,7 +159,8 @@ mod tests {
             "passphrase": "secret",
             "auto_validate": true,
             "batch_size": 8,
-            "quorum": {"fanout": 7, "responses_needed": 4, "agreement": 0.75, "timeout_ms": 2000},
+            "quorum": {"fanout": 7, "responses_needed": 4, "agreement": 0.75, "timeout_ms": 2000,
+                       "min_force_verdicts": 3, "timeout_grace_ms": 10000},
             "cost_model": {"kind": "polynomial", "base_ns": 1000, "ns_per_kb": 50, "power": 1.5},
             "dht": {"alpha": 4, "k": 16, "rpc_timeout_ms": 1500}
         }"#;
@@ -160,6 +171,11 @@ mod tests {
         assert_eq!(cfg.quorum.fanout, 7);
         assert_eq!(cfg.quorum.agreement, 0.75);
         assert_eq!(cfg.dht.alpha, 4);
+        // Every quorum knob round-trips, including the timeout pair.
+        assert_eq!(cfg.quorum.responses_needed, 4);
+        assert_eq!(cfg.quorum.timeout, Duration::from_millis(2000));
+        assert_eq!(cfg.quorum.min_force_verdicts, 3);
+        assert_eq!(cfg.quorum.timeout_grace, Duration::from_millis(10_000));
         assert!(matches!(cfg.cost_model, CostModel::Polynomial { power, .. } if power == 1.5));
     }
 

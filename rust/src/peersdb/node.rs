@@ -303,6 +303,11 @@ pub struct Node {
     // map so the sweep (and everything it triggers) is deterministic.
     votes: BTreeMap<Cid, VoteState>,
     val_req_index: HashMap<u64, Cid>,
+    /// Data roots whose *current* verdict was adopted from the network
+    /// (quorum vote) rather than computed locally. Ground-truth-aware
+    /// harnesses read this to tell a lie this node swallowed from a lie
+    /// it merely relayed an opinion about.
+    network_verdicts: BTreeSet<Cid>,
 
     pub events: Vec<NodeEvent>,
     pub metrics: Metrics,
@@ -371,6 +376,7 @@ impl Node {
             withdraw_lookups: HashMap::new(),
             votes: BTreeMap::new(),
             val_req_index: HashMap::new(),
+            network_verdicts: BTreeSet::new(),
             events: Vec::new(),
             metrics: Metrics::new(),
             tick_count: 0,
@@ -1220,6 +1226,14 @@ impl Node {
             ValidationSource::Local => "validations_local",
             ValidationSource::Network => "validations_network",
         });
+        match source {
+            ValidationSource::Local => {
+                self.network_verdicts.remove(&data_cid);
+            }
+            ValidationSource::Network => {
+                self.network_verdicts.insert(data_cid);
+            }
+        }
         self.metrics
             .observe("validation_cost_ms", cost_ns as f64 / 1e6);
         if let Some(started) = self.validation_started.remove(&data_cid) {
@@ -1244,6 +1258,11 @@ impl Node {
         let Some(vote) = self.votes.get_mut(&cid) else { return };
         vote.record(from, record.map(|r| (r.verdict, r.score)));
         if let Some(outcome) = vote.tally(&self.cfg.quorum, false) {
+            if vote.is_extended() {
+                // A late reply completed the quorum inside the grace
+                // window — exactly what the extension exists for.
+                self.metrics.inc("votes_rescued_by_grace");
+            }
             self.votes.remove(&cid);
             match outcome {
                 VoteOutcome::Decided { verdict, mean_score, .. } => {
@@ -1258,21 +1277,63 @@ impl Node {
 
     fn expire_votes(&mut self, now: Nanos, out: &mut Outbox<Message>) {
         let timeout = self.cfg.quorum.timeout;
+        let grace = self.cfg.quorum.timeout_grace;
         let expired: Vec<Cid> = self
             .votes
             .iter()
-            .filter(|(_, v)| now.saturating_sub(v.started_at) >= timeout)
+            .filter(|(_, v)| {
+                let deadline = if v.is_extended() { timeout + grace } else { timeout };
+                now.saturating_sub(v.started_at) >= deadline
+            })
             .map(|(c, _)| *c)
             .collect();
         for cid in expired {
+            // Grace extension: a vote that timed out short of its quorum
+            // while asked peers are still outstanding gets one more
+            // window before the force tally — their verdicts may merely
+            // be *late* (slow links), not lost, and adopting whatever
+            // the prompt subset of the sample said is exactly the delay
+            // attack `timeout_grace` exists to close.
+            if grace > Duration::ZERO {
+                let vote = self.votes.get_mut(&cid).unwrap();
+                if !vote.is_extended()
+                    && vote.verdict_count() < self.cfg.quorum.responses_needed
+                    && vote.outstanding() > 0
+                {
+                    vote.mark_extended();
+                    self.metrics.inc("votes_extended");
+                    continue;
+                }
+            }
             let vote = self.votes.remove(&cid).unwrap();
-            match vote.tally(&self.cfg.quorum, true) {
+            self.metrics.inc("votes_forced");
+            let outcome = vote.tally(&self.cfg.quorum, true);
+            if vote.is_extended()
+                && matches!(outcome, Some(VoteOutcome::Inconclusive { .. }))
+                && matches!(
+                    vote.forced_outcome_at_legacy_floor(&self.cfg.quorum),
+                    Some(VoteOutcome::Decided { .. })
+                )
+            {
+                // The stricter extended floor blocked a verdict the
+                // legacy timeout tally would have adopted from the
+                // prompt (attacker-majority) subset — a rescue, degraded
+                // to local validation instead of a swallowed lie.
+                self.metrics.inc("votes_rescued_by_grace");
+            }
+            match outcome {
                 Some(VoteOutcome::Decided { verdict, mean_score, .. }) => {
                     self.store_verdict(now, cid, verdict, mean_score, 0, ValidationSource::Network);
                 }
                 _ => self.enqueue_local_validation(now, cid, out),
             }
         }
+    }
+
+    /// Whether this node's verdict for `cid` (if any) was adopted from
+    /// the network rather than computed locally.
+    pub fn network_adopted(&self, cid: &Cid) -> bool {
+        self.network_verdicts.contains(cid)
     }
 
     // ======================================================================

@@ -10,7 +10,9 @@
 
 use crate::peersdb::{ChunkScheduler, NodeConfig};
 use crate::sim::regions::Region;
-use crate::sim::scenario::{AvailabilityInvariant, EclipseInvariant, Fault, Scenario};
+use crate::sim::scenario::{
+    AvailabilityInvariant, EclipseInvariant, Fault, Scenario, VerdictIntegrityInvariant,
+};
 use crate::util::time::Duration;
 use crate::validation::CostModel;
 
@@ -507,11 +509,100 @@ pub fn provider_death_midtransfer() -> Scenario {
         .at(120, Fault::Restart { node: 2 })
 }
 
+/// Initial cluster size in [`delayed_honest_majority`]; the flash-crowd
+/// victim joins at index [`DELAY_VOTER`].
+pub const DELAY_PEERS: usize = 6;
+
+/// The colluding liars in [`delayed_honest_majority`] — a *majority* of
+/// the victim's 6-peer vote sample (the other 2 sampled peers are the
+/// honest-but-slow [`DELAY_HONEST`]).
+pub const DELAY_BYZANTINE: [usize; 4] = [1, 2, 3, 4];
+
+/// The honest early validators in [`delayed_honest_majority`], placed
+/// behind [`DELAY_FACTOR`]×-slow links to the late voter.
+pub const DELAY_HONEST: [usize; 2] = [0, 5];
+
+/// The late joiner whose vote the colluders dominate (first flash-crowd
+/// index after the initial [`DELAY_PEERS`]).
+pub const DELAY_VOTER: usize = DELAY_PEERS;
+
+/// Latency multiplier on the voter↔honest links in
+/// [`delayed_honest_majority`]. At 60× the honest ValQuery→ValReply
+/// round trip over the UsWest1↔AsiaEast2 / UsWest1↔AustraliaSoutheast1
+/// legs (≈ 65–70 ms one-way nominal) lands around 8 s — past the 5 s
+/// vote timeout but comfortably inside the grace window: *late, not
+/// lost*, which is the whole attack.
+pub const DELAY_FACTOR: f64 = 60.0;
+
+/// The grace granted by the defended scenario's knob (30 s: well past
+/// the ~8 s late honest replies, well short of the quiesce tail).
+pub const DELAY_GRACE: Duration = Duration(30_000_000_000);
+
+/// 17. Delayed honest majority — the quorum-safety-envelope headline,
+/// pinned at the cliff edge named by `benches/quorum_envelope.rs`
+/// (`BENCH_quorum.json`). Six peers; four are byzantine, including the
+/// author of the schedule's one **clean** contribution. The first-wave
+/// votes are deterministic non-events: nobody holds a verdict inside
+/// anyone's 5 s vote window, so every early vote collects only empty
+/// answers, force-tallies `Inconclusive`, and falls back to local
+/// validation (honest → `Valid`, liars → `Invalid`). Then the victim
+/// joins: a flash-crowd peer whose links to *both* honest validators go
+/// [`DELAY_FACTOR`]×-slow the same instant. Its auto-validation vote
+/// samples the whole cluster — four prompt unanimous lies arrive in
+/// ~300 ms; the two honest `Valid`s are ~8 s out. At the timeout the
+/// force tally would see 4/4 `Invalid`: over the `min_force_verdicts`
+/// floor of 2, unanimity over the 0.85 agreement bar — a clean file
+/// poisoned as a `ValidationSource::Network` verdict. With
+/// [`QuorumConfig::timeout_grace`] on, the vote is instead extended
+/// once; the first late honest `Valid` completes the 5-verdict quorum,
+/// where 4/5 = 0.8 misses the 0.85 agreement bar → `Inconclusive` →
+/// local validation says `Valid`. The [`VerdictIntegrityInvariant`]
+/// holds and `votes_rescued_by_grace > 0`; the knob-stripped negative
+/// control in `tests/scenarios.rs` proves the same schedule swallows
+/// the lie without the grace (`false_verdicts_adopted > 0`).
+///
+/// [`QuorumConfig::timeout_grace`]: crate::validation::quorum::QuorumConfig::timeout_grace
+pub fn delayed_honest_majority() -> Scenario {
+    let mut sc = Scenario::named("delayed-honest-majority", 1919, DELAY_PEERS);
+    sc.quiesce = Duration::from_secs(400);
+    sc.quiesce_poll = Duration::from_secs(5);
+    sc.stats_validators = true;
+    sc.byzantine = DELAY_BYZANTINE.to_vec();
+    sc.cfg = NodeConfig {
+        auto_validate: true,
+        cost_model: CostModel::Linear { base_ns: 2_000_000, ns_per_kb: 50_000.0 },
+        ..NodeConfig::default()
+    };
+    // The cliff-edge cell: sample the whole cluster, demand all-but-one
+    // verdicts, with an agreement bar the 4 colluders can only clear
+    // while the honest verdicts are still in flight.
+    sc.cfg.quorum.fanout = DELAY_PEERS;
+    sc.cfg.quorum.responses_needed = DELAY_PEERS - 1;
+    sc.cfg.quorum.agreement = 0.85;
+    sc.cfg.quorum.min_force_verdicts = 2;
+    sc.cfg.quorum.timeout_grace = DELAY_GRACE;
+    sc.invariants.verdict_integrity = Some(VerdictIntegrityInvariant);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 40 })
+        // The victim joins once every original peer holds a local
+        // verdict, and the same instant (declaration order breaks the
+        // tie) its links to both honest validators go slow — the data
+        // fetch and the four lies still travel fast byzantine links.
+        .at(30, Fault::FlashCrowd { n: 1, region: Region::UsWest1 })
+        .at(30, Fault::SlowLink { a: DELAY_VOTER, b: DELAY_HONEST[0], factor: DELAY_FACTOR })
+        .at(30, Fault::SlowLink { a: DELAY_VOTER, b: DELAY_HONEST[1], factor: DELAY_FACTOR })
+        // Restore the links only after the vote (extended or not) must
+        // have resolved — the slow window outliving the schedule is what
+        // keeps teardown's global heal from rescuing the attack early.
+        .at(240, Fault::SlowLink { a: DELAY_VOTER, b: DELAY_HONEST[0], factor: 1.0 })
+        .at(240, Fault::SlowLink { a: DELAY_VOTER, b: DELAY_HONEST[1], factor: 1.0 })
+}
+
 /// Every replayable bank scenario, in canonical order: the seven
 /// original fault scenarios, the multi-region scale-out headline, the
 /// two directional-plane scenarios (half-open region, eclipse), the two
-/// GC-pressure repair scenarios, the defended eclipse, and the three
-/// striped-transfer scenarios (drag pair + provider death).
+/// GC-pressure repair scenarios, the defended eclipse, the three
+/// striped-transfer scenarios (drag pair + provider death), and the
+/// quorum-grace delayed-honest-majority scenario.
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -530,6 +621,7 @@ pub fn all() -> Vec<Scenario> {
         slow_peer_drag(),
         slow_peer_drag_rr(),
         provider_death_midtransfer(),
+        delayed_honest_majority(),
     ]
 }
 
@@ -777,6 +869,92 @@ mod tests {
         assert_ne!(victim, 1, "the author must survive");
         assert!(victim < STRIPE_PEERS, "the victim is an original replica");
         assert!(crash_at < restart_at);
+    }
+
+    #[test]
+    fn grace_default_off_outside_delayed_honest_majority() {
+        // Replay-compatibility guard, mirroring the defense/scheduler
+        // guards above: every pre-grace scenario keeps `timeout_grace`
+        // at ZERO, so its timeout path (and therefore its SimStats
+        // checksum) is bit-identical to the pre-PR recordings.
+        for sc in all() {
+            if sc.name == "delayed-honest-majority" {
+                continue;
+            }
+            assert_eq!(
+                sc.cfg.quorum.timeout_grace,
+                Duration::ZERO,
+                "{}: quorum grace leaked in",
+                sc.name
+            );
+        }
+    }
+
+    #[test]
+    fn delayed_honest_majority_shape_is_consistent() {
+        let sc = delayed_honest_majority();
+        assert_eq!(sc.peers, DELAY_PEERS);
+        assert_eq!(sc.byzantine, DELAY_BYZANTINE.to_vec());
+        assert!(sc.invariants.verdict_integrity.is_some(), "ground-truth guard configured");
+        // The cliff-edge arithmetic the scenario is pinned at: the
+        // colluders dominate the sample but fall short of the quorum,
+        // and their unanimous bloc cannot clear the agreement bar once
+        // a single honest verdict completes it.
+        let q = &sc.cfg.quorum;
+        assert_eq!(q.fanout, DELAY_PEERS, "the victim samples the whole cluster");
+        assert!(DELAY_BYZANTINE.len() * 2 > q.fanout, "colluders are a sample majority");
+        assert!(q.responses_needed > DELAY_BYZANTINE.len(), "liars alone can't fill the quorum");
+        let lie_frac = DELAY_BYZANTINE.len() as f64 / q.responses_needed as f64;
+        assert!(lie_frac < q.agreement, "a completed quorum out-argues the lie bloc");
+        assert!(DELAY_BYZANTINE.len() >= q.min_force_verdicts, "the lie clears the legacy floor");
+        assert!(q.timeout_grace > q.timeout, "the grace must outlast the slow replies");
+        // The one contribution is clean and byzantine-authored (the data
+        // fetch rides a fast link; only verdicts are slow), and the slow
+        // window opens with the join and outlives the vote.
+        let contributions: Vec<_> = sc
+            .events
+            .iter()
+            .filter_map(|e| match e.fault {
+                Fault::Contribute { node, .. } => Some(node),
+                Fault::ContributeCorrupt { .. } => panic!("the attack poisons a CLEAN file"),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(contributions.len(), 1, "exactly one contribution");
+        assert!(DELAY_BYZANTINE.contains(&contributions[0]), "authored by a colluder");
+        let mut slow: Vec<(u64, usize, usize, f64)> = Vec::new();
+        let mut join_at = None;
+        for e in &sc.events {
+            match e.fault {
+                Fault::SlowLink { a, b, factor } => slow.push((e.at.0, a, b, factor)),
+                Fault::FlashCrowd { n, .. } => {
+                    assert_eq!(n, 1, "exactly one victim");
+                    join_at = Some(e.at);
+                }
+                _ => {}
+            }
+        }
+        let join_at = join_at.expect("the victim joins");
+        let (slowed, restored): (Vec<_>, Vec<_>) =
+            slow.iter().partition(|(_, _, _, f)| *f > 1.0);
+        for group in [&slowed, &restored] {
+            let mut honest: Vec<usize> = group.iter().map(|(_, _, b, _)| *b).collect();
+            honest.sort_unstable();
+            assert_eq!(honest, DELAY_HONEST.to_vec(), "both honest links covered");
+            assert!(group.iter().all(|(_, a, _, _)| *a == DELAY_VOTER), "victim-side links");
+        }
+        for (at, _, _, f) in &slowed {
+            assert_eq!(Duration(*at), join_at, "slow window opens with the join");
+            assert_eq!(*f, DELAY_FACTOR);
+        }
+        for (at, _, _, _) in &restored {
+            // started_at + timeout + grace, with the join/vote slack on top.
+            let vote_deadline = join_at + sc.cfg.quorum.timeout + sc.cfg.quorum.timeout_grace;
+            assert!(
+                Duration(*at) > vote_deadline + Duration::from_secs(60),
+                "restore must wait out even an extended vote"
+            );
+        }
     }
 
     #[test]

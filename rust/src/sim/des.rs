@@ -60,6 +60,25 @@ pub struct SimStats {
     /// Chunks reassigned to another provider after timeout / `DontHave`
     /// / provider departure, cluster-wide.
     pub transfer_reassignments: u64,
+    /// Quorum votes tallied by the timeout path (`force = true`),
+    /// cluster-wide. Summed from per-node metrics by `run_cluster` like
+    /// the groups above. Deliberately **not** part of the checksum: the
+    /// timeout tally predates this counter, so pre-existing byzantine
+    /// recordings force-tally with it nonzero — hashing it would shift
+    /// their recorded digests. Replays still guard it via `SimStats`
+    /// equality.
+    pub votes_forced: u64,
+    /// Votes granted the one-shot `QuorumConfig::timeout_grace`
+    /// extension (expired short of quorum with asked peers outstanding).
+    pub votes_extended: u64,
+    /// Extended votes saved by the grace: completed by a late reply, or
+    /// held back from adopting a prompt-minority verdict by the stricter
+    /// extended forced-tally floor.
+    pub votes_rescued_by_grace: u64,
+    /// Ground-truth violations: network-adopted verdicts held by honest
+    /// peers that contradict the scenario's contribution schedule (a
+    /// clean contribution marked `Invalid`, or a corrupt one `Valid`).
+    pub false_verdicts_adopted: u64,
 }
 
 impl SimStats {
@@ -110,6 +129,21 @@ impl SimStats {
         let transfer = [self.chunks_striped, self.transfer_reassignments];
         if transfer.iter().any(|v| *v != 0) {
             for v in transfer {
+                mix(&mut h, v);
+            }
+        }
+        // Third only-when-nonzero group: the quorum grace/integrity
+        // counters. `votes_forced` is excluded on purpose — see its
+        // field doc — so every recorded scenario with `timeout_grace` at
+        // its ZERO default (and no adopted lies) keeps its byte-identical
+        // legacy digest even though its timeout path force-tallies.
+        let quorum = [
+            self.votes_extended,
+            self.votes_rescued_by_grace,
+            self.false_verdicts_adopted,
+        ];
+        if quorum.iter().any(|v| *v != 0) {
+            for v in quorum {
                 mix(&mut h, v);
             }
         }
@@ -847,6 +881,22 @@ mod tests {
         assert_ne!(striped.checksum(), off.checksum());
         let reassigned = SimStats { transfer_reassignments: 2, ..striped.clone() };
         assert_ne!(reassigned.checksum(), striped.checksum());
+        // The quorum grace/integrity group is a third independent
+        // only-when-nonzero group. Crucially, `votes_forced` alone never
+        // extends the digest: pre-existing byzantine recordings
+        // force-tally (nonzero forced count) with the grace knob off,
+        // and their checksums must stay byte-identical.
+        let forced_only = SimStats { votes_forced: 9, ..off.clone() };
+        assert_eq!(forced_only.checksum(), legacy(&off), "forced count is digest-excluded");
+        let forced_on_defended = SimStats { votes_forced: 9, ..on.clone() };
+        assert_eq!(forced_on_defended.checksum(), on.checksum());
+        // An engaged grace (or an adopted lie) extends the digest.
+        let extended = SimStats { votes_extended: 1, ..off.clone() };
+        assert_ne!(extended.checksum(), off.checksum());
+        let rescued = SimStats { votes_rescued_by_grace: 1, ..extended.clone() };
+        assert_ne!(rescued.checksum(), extended.checksum());
+        let lied = SimStats { false_verdicts_adopted: 1, ..off.clone() };
+        assert_ne!(lied.checksum(), off.checksum());
     }
 
     #[test]

@@ -176,6 +176,60 @@ pub fn transfer_totals(cluster: &Cluster<Node>) -> (u64, u64) {
     totals
 }
 
+/// Cluster-wide totals of the quorum timeout-path counters, summed over
+/// every node's metrics:
+/// `(votes_forced, votes_extended, votes_rescued_by_grace)`. Like
+/// [`transfer_totals`], `sim::scenario::run_cluster` folds these into
+/// the report's [`crate::sim::des::SimStats`] so scenario replays guard
+/// them; tests use the totals directly to assert the grace extension
+/// actually engaged. The latter two are zero unless a node ran with a
+/// nonzero [`crate::validation::quorum::QuorumConfig::timeout_grace`].
+pub fn quorum_totals(cluster: &Cluster<Node>) -> (u64, u64, u64) {
+    let mut totals = (0u64, 0u64, 0u64);
+    for i in 0..cluster.len() {
+        let m = &cluster.node(i).metrics;
+        totals.0 += m.counter("votes_forced");
+        totals.1 += m.counter("votes_extended");
+        totals.2 += m.counter("votes_rescued_by_grace");
+    }
+    totals
+}
+
+/// Ground-truth audit of network-adopted verdicts: counts, over every
+/// honest node, verdicts adopted *from the network* that contradict what
+/// the contribution schedule actually injected (`corrupt = true` ⇒ the
+/// honest verdict is `Invalid`, else `Valid`). Locally computed verdicts
+/// are exempt — a node is entitled to its own wrong opinion; the counter
+/// exists to catch lies the *quorum plane* laundered into
+/// [`crate::peersdb::ValidationSource::Network`] adoptions. Byzantine
+/// nodes are excluded: their stores lie by construction.
+pub fn false_verdicts(
+    cluster: &Cluster<Node>,
+    ground_truth: &[(crate::cid::Cid, bool)],
+    byzantine: &[usize],
+) -> u64 {
+    use crate::stores::documents::Verdict;
+    let mut n = 0u64;
+    for (cid, corrupt) in ground_truth {
+        let expected = if *corrupt { Verdict::Invalid } else { Verdict::Valid };
+        for i in 0..cluster.len() {
+            if byzantine.contains(&i) {
+                continue;
+            }
+            let node = cluster.node(i);
+            if !node.network_adopted(cid) {
+                continue;
+            }
+            if let Some(r) = node.validations.get(cid) {
+                if r.verdict != expected {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
 /// Drain accumulated [`NodeEvent`]s from every node.
 pub fn drain_events(cluster: &mut Cluster<Node>) -> Vec<(usize, NodeEvent)> {
     let mut all = Vec::new();

@@ -199,6 +199,22 @@ impl Default for AvailabilityInvariant {
     }
 }
 
+/// The verdict-integrity invariant: checked at quiesce when configured on
+/// [`InvariantConfig::verdict_integrity`].
+///
+/// No honest peer may hold a **network-adopted** verdict that contradicts
+/// the schedule's ground truth — a clean [`Fault::Contribute`] marked
+/// `Invalid`, or a [`Fault::ContributeCorrupt`] marked `Valid`. This is
+/// strictly sharper than the quorum-safety conflict check: a colluding
+/// byzantine *majority* of one vote's sample lies unanimously, so the
+/// victim's adopted verdict conflicts with no other honest peer until
+/// their own (local) verdicts land — and the poisoned record is already
+/// in `ValidationSource::Network` by then. Ground truth is the only
+/// oracle that catches the adoption itself. Locally computed verdicts
+/// are exempt: the invariant polices the quorum plane, not validators.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerdictIntegrityInvariant;
+
 /// Invariant-checker knobs.
 #[derive(Clone, Debug)]
 pub struct InvariantConfig {
@@ -214,6 +230,10 @@ pub struct InvariantConfig {
     /// Data-survival guard (quiesce-only: holder loss mid-run is the
     /// scenario's whole point; what matters is that repair recovered).
     pub availability: Option<AvailabilityInvariant>,
+    /// Ground-truth verdict guard (quiesce-only: an in-flight vote may
+    /// still be waiting out its grace mid-run; what matters is that no
+    /// lie survived to the end).
+    pub verdict_integrity: Option<VerdictIntegrityInvariant>,
 }
 
 impl Default for InvariantConfig {
@@ -223,6 +243,7 @@ impl Default for InvariantConfig {
             byzantine: Vec::new(),
             eclipse: None,
             availability: None,
+            verdict_integrity: None,
         }
     }
 }
@@ -473,9 +494,9 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
                 harness::set_repair(&mut cluster, *on);
             }
             Fault::Checkpoint => {
-                check_invariants(&cluster, &inv, contributed, Phase::Checkpoint).map_err(|e| {
-                    format!("scenario '{}' checkpoint at {}: {e}", sc.name, cluster.now())
-                })?;
+                check_invariants(&cluster, &inv, contributed, &cids, Phase::Checkpoint).map_err(
+                    |e| format!("scenario '{}' checkpoint at {}: {e}", sc.name, cluster.now()),
+                )?;
                 checkpoints += 1;
             }
         }
@@ -503,7 +524,7 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
         while cluster.now() < deadline {
             let step = sc.quiesce_poll.min(deadline - cluster.now());
             cluster.run_for(step);
-            if check_invariants(&cluster, &inv, contributed, Phase::Quiesce).is_ok() {
+            if check_invariants(&cluster, &inv, contributed, &cids, Phase::Quiesce).is_ok() {
                 converged_at = Some(cluster.now());
                 break;
             }
@@ -511,7 +532,7 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
     } else {
         cluster.run_until(deadline);
     }
-    check_invariants(&cluster, &inv, contributed, Phase::Quiesce)
+    check_invariants(&cluster, &inv, contributed, &cids, Phase::Quiesce)
         .map_err(|e| format!("scenario '{}' at quiesce ({}): {e}", sc.name, cluster.now()))?;
 
     // Fold the per-node DHT lookup-hardening counters into the report's
@@ -528,6 +549,15 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
     let (striped, reassigned) = harness::transfer_totals(&cluster);
     stats.chunks_striped = striped;
     stats.transfer_reassignments = reassigned;
+    // And the quorum timeout-path counters plus the ground-truth audit.
+    // Of these, only the grace pair and the false-adoption count reach
+    // the checksum (when nonzero); `votes_forced` is digest-excluded but
+    // still replay-guarded through `ScenarioReport` equality.
+    let (forced, extended, rescued) = harness::quorum_totals(&cluster);
+    stats.votes_forced = forced;
+    stats.votes_extended = extended;
+    stats.votes_rescued_by_grace = rescued;
+    stats.false_verdicts_adopted = harness::false_verdicts(&cluster, &cids, &inv.byzantine);
 
     let report = ScenarioReport {
         name: sc.name,
@@ -574,6 +604,7 @@ pub fn check_invariants(
     cluster: &Cluster<Node>,
     cfg: &InvariantConfig,
     expected_contributions: usize,
+    ground_truth: &[(crate::cid::Cid, bool)],
     phase: Phase,
 ) -> Result<(), String> {
     let online: Vec<usize> = (0..cluster.len()).filter(|&i| cluster.is_online(i)).collect();
@@ -590,6 +621,14 @@ pub fn check_invariants(
                 return Err(format!("node {i}: routing table references unknown peer {p:?}"));
             }
         }
+    }
+
+    // ---- Verdict integrity vs ground truth (quiesce; before the
+    // conflict check so an adopted lie is reported as the adoption it
+    // is, not as the downstream honest-vs-honest conflict it causes
+    // once the slow honest verdicts land) -------------------------------
+    if phase == Phase::Quiesce && cfg.verdict_integrity.is_some() {
+        check_verdict_integrity(cluster, ground_truth, &cfg.byzantine)?;
     }
 
     // ---- Quorum safety: no conflicting accepted verdicts (safety) ------
@@ -769,6 +808,42 @@ pub fn check_availability(
         }
     }
     Ok(())
+}
+
+/// The [`VerdictIntegrityInvariant`] predicate, exposed for
+/// scenario-specific assertions: no honest node may hold a
+/// *network-adopted* verdict contradicting the contribution schedule's
+/// ground truth. The error names the first offending adoption and
+/// carries the cluster-wide `false_verdicts_adopted` total, so a
+/// negative control can assert on the count straight from the failure
+/// message.
+pub fn check_verdict_integrity(
+    cluster: &Cluster<Node>,
+    ground_truth: &[(crate::cid::Cid, bool)],
+    byzantine: &[usize],
+) -> Result<(), String> {
+    let total = harness::false_verdicts(cluster, ground_truth, byzantine);
+    if total == 0 {
+        return Ok(());
+    }
+    for (cid, corrupt) in ground_truth {
+        let expected = if *corrupt { Verdict::Invalid } else { Verdict::Valid };
+        for i in 0..cluster.len() {
+            if byzantine.contains(&i) || !cluster.node(i).network_adopted(cid) {
+                continue;
+            }
+            if let Some(got) = cluster.node(i).validations.verdict(cid) {
+                if got != expected {
+                    return Err(format!(
+                        "verdict integrity violated: node {i} network-adopted {got:?} \
+                         for {cid:?}, but ground truth is {expected:?} \
+                         (false_verdicts_adopted={total})"
+                    ));
+                }
+            }
+        }
+    }
+    unreachable!("false_verdicts counted {total} violations but the walk found none")
 }
 
 #[cfg(test)]

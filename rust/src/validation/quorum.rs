@@ -32,6 +32,26 @@ pub struct QuorumConfig {
     /// through a sparsely-answered vote (with `agreement` > 0.5, one
     /// honest verdict then always blocks the lie).
     pub min_force_verdicts: usize,
+    /// Extra time granted **once** to a vote that expires with fewer
+    /// than `responses_needed` verdicts while some asked peers are still
+    /// outstanding. `ZERO` (the default) disables the extension and
+    /// keeps the legacy force-tally-at-timeout behaviour.
+    ///
+    /// This closes a delay attack the plain timeout path is open to: a
+    /// colluding byzantine *majority* of one vote's `fanout` sample can
+    /// answer promptly with a unanimous lie while the honest responders
+    /// sit behind slow links, so their truthful verdicts arrive *late*
+    /// rather than never. At the timeout, `tally(force=true)` sees only
+    /// the prompt liars — enough of them to clear `min_force_verdicts`
+    /// *and* `agreement` — and the lie is adopted as a
+    /// `ValidationSource::Network` verdict. With a grace period, the
+    /// vote is instead extended once (no re-query, just more patience),
+    /// and while extended the forced tally applies a stricter floor of
+    /// `responses_needed` verdicts — so the late honest majority gets to
+    /// outvote the prompt liars, and if it still hasn't arrived when the
+    /// grace runs out the vote degrades to local validation instead of
+    /// adopting the attacker-only sample.
+    pub timeout_grace: Duration,
 }
 
 impl Default for QuorumConfig {
@@ -42,6 +62,7 @@ impl Default for QuorumConfig {
             agreement: 2.0 / 3.0,
             timeout: Duration::from_secs(5),
             min_force_verdicts: 1,
+            timeout_grace: Duration::ZERO,
         }
     }
 }
@@ -60,6 +81,10 @@ pub enum VoteOutcome {
 pub struct VoteState {
     pub started_at: Nanos,
     asked: Vec<PeerId>,
+    /// Set once when the vote's first deadline passes under a nonzero
+    /// [`QuorumConfig::timeout_grace`]; an extended vote waits the grace
+    /// out and force-tallies under a stricter verdict floor.
+    extended: bool,
     /// Keyed deterministically: tallies (and their float means) must not
     /// depend on map iteration order — the simulator's reproducibility
     /// guarantee reaches down to here.
@@ -68,22 +93,42 @@ pub struct VoteState {
 
 impl VoteState {
     pub fn new(started_at: Nanos, asked: Vec<PeerId>) -> Self {
-        VoteState { started_at, asked, answers: BTreeMap::new() }
+        VoteState { started_at, asked, extended: false, answers: BTreeMap::new() }
     }
 
     pub fn asked(&self) -> &[PeerId] {
         &self.asked
     }
 
-    /// Record an answer; ignores peers that were never asked.
+    /// Record an answer; ignores peers that were never asked. The first
+    /// answer from a peer wins: a responder (or a forged duplicate
+    /// reply) cannot revise a verdict mid-vote.
     pub fn record(&mut self, from: PeerId, verdict: Option<(Verdict, f64)>) {
         if self.asked.contains(&from) {
-            self.answers.insert(from, verdict);
+            self.answers.entry(from).or_insert(verdict);
         }
     }
 
     pub fn responses(&self) -> usize {
         self.answers.len()
+    }
+
+    /// Asked peers that have not answered yet.
+    pub fn outstanding(&self) -> usize {
+        self.asked.len().saturating_sub(self.answers.len())
+    }
+
+    /// Verdict-carrying responses received so far.
+    pub fn verdict_count(&self) -> usize {
+        self.verdicts().len()
+    }
+
+    pub fn is_extended(&self) -> bool {
+        self.extended
+    }
+
+    pub fn mark_extended(&mut self) {
+        self.extended = true;
     }
 
     fn verdicts(&self) -> Vec<(Verdict, f64)> {
@@ -92,13 +137,42 @@ impl VoteState {
 
     /// Tally if possible. `force` tallies with whatever arrived (timeout
     /// path); otherwise requires `responses_needed` verdicts first.
+    ///
+    /// A grace-extended vote already blew its first deadline with asked
+    /// peers outstanding, so its forced tally applies the stricter floor
+    /// of `responses_needed` verdicts: the extension exists to let late
+    /// honest responders catch up, not to adopt whatever the prompt
+    /// (possibly colluding) minority of the sample said.
     pub fn tally(&self, cfg: &QuorumConfig, force: bool) -> Option<VoteOutcome> {
+        let floor = if self.extended {
+            cfg.min_force_verdicts.max(cfg.responses_needed)
+        } else {
+            cfg.min_force_verdicts
+        };
+        self.tally_with_floor(cfg, force, floor)
+    }
+
+    /// The outcome a *forced* tally would produce at the legacy
+    /// (un-extended) floor, regardless of this vote's extension state.
+    /// Comparing it against the real extended tally is how the node
+    /// detects a rescue: the stricter floor degraded a would-be verdict
+    /// adoption to local validation.
+    pub fn forced_outcome_at_legacy_floor(&self, cfg: &QuorumConfig) -> Option<VoteOutcome> {
+        self.tally_with_floor(cfg, true, cfg.min_force_verdicts)
+    }
+
+    fn tally_with_floor(
+        &self,
+        cfg: &QuorumConfig,
+        force: bool,
+        min_force_verdicts: usize,
+    ) -> Option<VoteOutcome> {
         let verdicts = self.verdicts();
         if !force {
             if verdicts.len() < cfg.responses_needed {
                 return None;
             }
-        } else if verdicts.len() < cfg.min_force_verdicts.max(1) {
+        } else if verdicts.len() < min_force_verdicts.max(1) {
             return Some(VoteOutcome::Inconclusive { responses: self.responses() });
         }
         // Majority verdict. BTreeMap keeps ties deterministic (the last
@@ -207,6 +281,183 @@ mod tests {
         v.record(ps[1], Some((Verdict::Valid, 1.0)));
         let out = v.tally(&cfg, true).unwrap();
         assert!(matches!(out, VoteOutcome::Inconclusive { .. }));
+    }
+
+    #[test]
+    fn first_answer_wins() {
+        let cfg = QuorumConfig { responses_needed: 1, ..Default::default() };
+        let ps = peers(3);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        v.record(ps[0], Some((Verdict::Valid, 0.9)));
+        // A duplicate (or forged) second reply must not revise the verdict.
+        v.record(ps[0], Some((Verdict::Invalid, 0.0)));
+        assert_eq!(v.responses(), 1);
+        let out = v.tally(&cfg, false).unwrap();
+        let VoteOutcome::Decided { verdict, .. } = out else { panic!() };
+        assert_eq!(verdict, Verdict::Valid);
+        // Nor can a duplicate upgrade an earlier empty answer.
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        v.record(ps[1], None);
+        v.record(ps[1], Some((Verdict::Invalid, 0.0)));
+        assert_eq!(v.verdict_count(), 0);
+    }
+
+    #[test]
+    fn outstanding_tracks_unanswered_peers() {
+        let ps = peers(4);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        assert_eq!(v.outstanding(), 4);
+        v.record(ps[0], Some((Verdict::Valid, 1.0)));
+        v.record(ps[1], None);
+        assert_eq!(v.outstanding(), 2);
+        assert_eq!(v.verdict_count(), 1);
+        // Unasked strangers and duplicates don't change the count.
+        v.record(peers(5)[4], Some((Verdict::Valid, 1.0)));
+        v.record(ps[0], Some((Verdict::Valid, 1.0)));
+        assert_eq!(v.outstanding(), 2);
+    }
+
+    #[test]
+    fn extended_vote_applies_stricter_forced_floor() {
+        // 4 prompt unanimous liars in a 6-peer sample, responses_needed 5:
+        // the legacy forced tally adopts the lie, the extended one holds.
+        let cfg = QuorumConfig {
+            fanout: 6,
+            responses_needed: 5,
+            agreement: 0.85,
+            min_force_verdicts: 2,
+            ..Default::default()
+        };
+        let ps = peers(6);
+        let mut v = VoteState::new(Nanos(0), ps.clone());
+        for p in &ps[..4] {
+            v.record(*p, Some((Verdict::Invalid, 0.0)));
+        }
+        let legacy = v.forced_outcome_at_legacy_floor(&cfg).unwrap();
+        assert!(
+            matches!(legacy, VoteOutcome::Decided { verdict: Verdict::Invalid, .. }),
+            "un-extended timeout tally adopts the attacker-majority sample"
+        );
+        v.mark_extended();
+        let out = v.tally(&cfg, true).unwrap();
+        assert!(
+            matches!(out, VoteOutcome::Inconclusive { .. }),
+            "extended tally demands responses_needed verdicts"
+        );
+        // A late honest verdict completes the quorum — and the honest
+        // 1-of-5 dissent now denies the liars the agreement threshold.
+        v.record(ps[4], Some((Verdict::Valid, 1.0)));
+        let out = v.tally(&cfg, false).unwrap();
+        assert!(matches!(out, VoteOutcome::Inconclusive { .. }));
+    }
+
+    /// Table-driven walk of the forced-tally envelope boundary: verdict
+    /// counts straddling `min_force_verdicts`, agreement fractions
+    /// straddling `cfg.agreement`, and all-byzantine vs mixed samples.
+    /// These cells pin at the unit level the cliff edge that
+    /// `benches/quorum_envelope.rs` finds empirically.
+    #[test]
+    fn forced_tally_envelope() {
+        struct Case {
+            name: &'static str,
+            // (invalid_lies, honest_valids) answered; the rest of the
+            // 8-peer sample stays outstanding.
+            lies: usize,
+            valids: usize,
+            min_force_verdicts: usize,
+            agreement: f64,
+            // None => Inconclusive; Some(v) => Decided { verdict: v, .. }.
+            expect: Option<Verdict>,
+        }
+        let cases = [
+            Case {
+                name: "below the verdict floor: one lie, floor 2",
+                lies: 1,
+                valids: 0,
+                min_force_verdicts: 2,
+                agreement: 0.5,
+                expect: None,
+            },
+            Case {
+                name: "at the verdict floor: two unanimous lies clear floor 2",
+                lies: 2,
+                valids: 0,
+                min_force_verdicts: 2,
+                agreement: 0.5,
+                expect: Some(Verdict::Invalid),
+            },
+            Case {
+                name: "above the verdict floor: three unanimous lies, floor 2",
+                lies: 3,
+                valids: 0,
+                min_force_verdicts: 2,
+                agreement: 0.5,
+                expect: Some(Verdict::Invalid),
+            },
+            Case {
+                name: "all-byzantine sample: unanimity clears any agreement",
+                lies: 4,
+                valids: 0,
+                min_force_verdicts: 1,
+                agreement: 1.0,
+                expect: Some(Verdict::Invalid),
+            },
+            Case {
+                name: "mixed sample just over agreement: 3 of 4 at 0.75",
+                lies: 3,
+                valids: 1,
+                min_force_verdicts: 1,
+                agreement: 0.75,
+                expect: Some(Verdict::Invalid),
+            },
+            Case {
+                name: "mixed sample just under agreement: 3 of 4 at 0.76",
+                lies: 3,
+                valids: 1,
+                min_force_verdicts: 1,
+                agreement: 0.76,
+                expect: None,
+            },
+            Case {
+                name: "honest majority outvotes lies: 1 of 4 at 0.75",
+                lies: 1,
+                valids: 3,
+                min_force_verdicts: 1,
+                agreement: 0.75,
+                expect: Some(Verdict::Valid),
+            },
+            Case {
+                name: "even split never clears a >0.5 agreement",
+                lies: 2,
+                valids: 2,
+                min_force_verdicts: 1,
+                agreement: 0.51,
+                expect: None,
+            },
+        ];
+        for c in cases {
+            let cfg = QuorumConfig {
+                fanout: 8,
+                responses_needed: 8, // force path only: never tallied non-forced
+                agreement: c.agreement,
+                min_force_verdicts: c.min_force_verdicts,
+                ..Default::default()
+            };
+            let ps = peers(8);
+            let mut v = VoteState::new(Nanos(0), ps.clone());
+            for p in &ps[..c.lies] {
+                v.record(*p, Some((Verdict::Invalid, 0.0)));
+            }
+            for p in &ps[c.lies..c.lies + c.valids] {
+                v.record(*p, Some((Verdict::Valid, 1.0)));
+            }
+            let out = v.tally(&cfg, true).unwrap();
+            match (c.expect, out) {
+                (None, VoteOutcome::Inconclusive { .. }) => {}
+                (Some(want), VoteOutcome::Decided { verdict, .. }) if verdict == want => {}
+                (_, got) => panic!("case '{}': unexpected outcome {:?}", c.name, got),
+            }
+        }
     }
 
     #[test]
