@@ -4,111 +4,12 @@
 //! ```bash
 //! cargo run --release --example tcp_cluster
 //! ```
-
-use peersdb::api::http::{http_get, http_post, HttpServer};
-use peersdb::codec::json::Json;
-use peersdb::modeling::datagen;
-use peersdb::net::tcp::{Directory, TcpNode};
-use peersdb::net::PeerId;
-use peersdb::peersdb::{Node, NodeConfig};
-use peersdb::util::Rng;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+//!
+//! The whole flow lives in `peersdb::sim::parity::tcp_cluster_demo`,
+//! which `tests/tcp.rs` also runs (quietly) as a release-gated
+//! integration test — so this example is verified in CI and can never
+//! silently rot.
 
 fn main() -> anyhow::Result<()> {
-    let mut rng = Rng::new(3);
-    let dir = Directory::new();
-
-    // Root node.
-    let root_id = PeerId::from_rng(&mut rng);
-    let root = Arc::new(TcpNode::start(
-        Node::new(root_id, NodeConfig::default(), rng.next_u64()),
-        dir.clone(),
-    )?);
-    println!("root {} on {}", root_id.short(), root.addr);
-
-    // Three joining peers.
-    let mut peers = Vec::new();
-    for i in 0..3 {
-        let id = PeerId::from_rng(&mut rng);
-        let cfg = NodeConfig { bootstrap: Some(root_id), ..NodeConfig::default() };
-        let node = Node::new(id, cfg, rng.next_u64());
-        let tcp = Arc::new(TcpNode::start(node, dir.clone())?);
-        println!("peer {i} {} on {}", id.short(), tcp.addr);
-        peers.push(tcp);
-    }
-
-    // Wait for bootstrap over real sockets.
-    let deadline = Instant::now() + Duration::from_secs(15);
-    loop {
-        let ready = peers
-            .iter()
-            .filter(|p| p.call_sync(|n, _, _| n.is_bootstrapped()))
-            .count();
-        if ready == peers.len() {
-            break;
-        }
-        if Instant::now() > deadline {
-            anyhow::bail!("bootstrap timed out ({ready}/3 ready)");
-        }
-        std::thread::sleep(Duration::from_millis(100));
-    }
-    println!("all peers bootstrapped over TCP");
-
-    // HTTP API on peer 0 (the prototype's access path).
-    let http = HttpServer::start(peers[0].clone())?;
-    println!("http api on http://{}", http.addr);
-    let (file, _) = datagen::generate_contribution(&mut rng, 2, 100);
-    let (code, body) = http_post(
-        http.addr,
-        "/contributions?workload=spark-pagerank&platform=loopback",
-        &file,
-    )?;
-    anyhow::ensure!(code == 200, "contribute failed: {code}");
-    let cid = Json::parse(std::str::from_utf8(&body)?)
-        .map_err(|e| anyhow::anyhow!("{e}"))?
-        .path("cid")
-        .and_then(|v| v.as_str())
-        .unwrap()
-        .to_string();
-    println!("contributed via HTTP: cid {}", &cid[..16]);
-
-    // The contribution replicates to every other peer through real
-    // sockets (pubsub → log entry fetch → data fetch).
-    let cid_parsed = peersdb::cid::Cid::parse(&cid).unwrap();
-    let deadline = Instant::now() + Duration::from_secs(20);
-    loop {
-        let have = peers
-            .iter()
-            .map(|p| p.call_sync(move |n, _, _| n.get_file(&cid_parsed).is_some()))
-            .filter(|b| *b)
-            .count();
-        let root_has = root.call_sync(move |n, _, _| n.get_file(&cid_parsed).is_some());
-        if have == peers.len() && root_has {
-            break;
-        }
-        if Instant::now() > deadline {
-            anyhow::bail!("replication timed out ({have}/3 peers + root {root_has})");
-        }
-        std::thread::sleep(Duration::from_millis(100));
-    }
-    println!("replicated to root + all 3 peers over TCP");
-
-    // Check status endpoint.
-    let (code, body) = http_get(http.addr, "/status")?;
-    anyhow::ensure!(code == 200);
-    println!("status: {}", String::from_utf8_lossy(&body));
-
-    http.stop();
-    for p in peers {
-        match Arc::try_unwrap(p) {
-            Ok(t) => t.stop(),
-            Err(_) => {}
-        }
-    }
-    if let Ok(t) = Arc::try_unwrap(root) {
-        t.stop();
-    }
-    println!("tcp_cluster OK");
-    Ok(())
+    peersdb::sim::parity::tcp_cluster_demo(true)
 }

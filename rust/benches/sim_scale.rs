@@ -6,8 +6,10 @@
 //! repair scenarios, the defended eclipse — multi-path +
 //! distance-verified lookups under the same attack — the three
 //! striped-transfer scenarios: the slow-peer drag pair and the
-//! provider-death reassignment run — and the delayed-honest-majority
-//! quorum-grace scenario) in this process, measuring wall
+//! provider-death reassignment run — the delayed-honest-majority
+//! quorum-grace scenario, and the three parity-tagged rows that
+//! `tests/parity.rs` also replays over real TCP) in this process,
+//! measuring wall
 //! time and events/second, and emits the results as `BENCH_sim.json` —
 //! the machine-readable perf-trajectory artifact CI uploads on every
 //! run. Each record also carries the run's `SimStats` checksum: because

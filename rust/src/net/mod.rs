@@ -12,8 +12,13 @@
 //! This mirrors how the paper's prototype separates its service routine
 //! from go-libp2p transports, and is what makes the evaluation
 //! reproducible: given a seed, a simulation run is bit-identical.
+//! `sim::parity` runs the same fault schedules through both drivers
+//! (partitions and slow links lowered onto [`LinkPolicy`]) and
+//! differentially compares the convergence outcomes.
 
 pub mod tcp;
+
+pub use tcp::{Directory, LinkPolicy, NodeStopped, TcpNode};
 
 use crate::codec::bin::{Decode, DecodeError, Encode, Reader, Writer};
 use crate::util::hex;

@@ -10,6 +10,18 @@
 //! production deployment this would be the DHT's address records; for the
 //! loopback clusters in `examples/tcp_cluster.rs` a process-wide map is
 //! exactly what Kubernetes DNS gave the paper's prototype.
+//!
+//! Fault injection: a shared [`LinkPolicy`] handed to
+//! [`TcpNode::start_with_policy`] lets a harness drop or pace frames per
+//! directed `(src, dst)` link — the real-socket counterpart of the DES's
+//! link-state plane, and what `sim::parity` lowers `Fault::Partition` /
+//! `Fault::SlowLink` schedules onto.
+//!
+//! Lifecycle: [`TcpNode::shutdown`] stops all threads, reaps every
+//! `JoinHandle`, and hands the runner back with its state intact — a
+//! crash/restart in `sim::parity` is `shutdown()` followed by a fresh
+//! `start` of the same runner, mirroring the DES's `set_offline` /
+//! `set_online` (which re-runs `on_start`).
 
 use crate::codec::bin::{Decode, Encode, Reader as BinReader, Writer};
 use crate::net::{Outbox, PeerId, Runner};
@@ -40,7 +52,99 @@ impl Directory {
     pub fn get(&self, id: &PeerId) -> Option<SocketAddr> {
         self.inner.lock().unwrap().get(id).copied()
     }
+
+    /// Remove `id`'s registration, but only while it still maps to
+    /// `addr`. Shutdown withdraws its own entry this way so a restarted
+    /// successor that already re-registered under a fresh address is
+    /// never clobbered by the old handle's teardown.
+    pub fn remove_if(&self, id: PeerId, addr: SocketAddr) {
+        let mut m = self.inner.lock().unwrap();
+        if m.get(&id) == Some(&addr) {
+            m.remove(&id);
+        }
+    }
 }
+
+#[derive(Clone, Copy, Debug, Default)]
+struct LinkRule {
+    drop: bool,
+    delay: Duration,
+}
+
+/// Per-directed-link fault rules applied by reader threads on the
+/// receiving node — the real-socket counterpart of the DES link-state
+/// plane. [`LinkPolicy::block`] makes frames `from → to` vanish (a
+/// partition); [`LinkPolicy::set_delay`] paces their delivery (a slow
+/// link). One shared instance is handed to every node of a cluster via
+/// [`TcpNode::start_with_policy`]; rules take effect on frames read
+/// after the change, no reconnect needed.
+#[derive(Clone, Default)]
+pub struct LinkPolicy {
+    inner: Arc<Mutex<HashMap<(PeerId, PeerId), LinkRule>>>,
+}
+
+impl LinkPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop every frame sent `from → to` (one direction only).
+    pub fn block(&self, from: PeerId, to: PeerId) {
+        self.inner.lock().unwrap().entry((from, to)).or_default().drop = true;
+    }
+
+    /// Let frames `from → to` through again (pacing, if any, persists).
+    pub fn unblock(&self, from: PeerId, to: PeerId) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(r) = m.get_mut(&(from, to)) {
+            r.drop = false;
+        }
+    }
+
+    /// Heal every blocked link while keeping pacing rules — mirrors
+    /// `Fault::Heal`, whose DES lowering unblocks links but leaves
+    /// latency multipliers in place until teardown.
+    pub fn unblock_all(&self) {
+        self.inner.lock().unwrap().retain(|_, r| {
+            r.drop = false;
+            !r.delay.is_zero()
+        });
+    }
+
+    /// Delay each frame `from → to` by `delay` before delivery
+    /// (pacing). `Duration::ZERO` removes the pacing.
+    pub fn set_delay(&self, from: PeerId, to: PeerId, delay: Duration) {
+        self.inner.lock().unwrap().entry((from, to)).or_default().delay = delay;
+    }
+
+    /// Drop every rule — the teardown reset (`reset_links` in the DES).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+
+    fn rule(&self, from: &PeerId, to: &PeerId) -> LinkRule {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&(*from, *to))
+            .copied()
+            .unwrap_or_default()
+    }
+}
+
+/// Error returned by [`TcpNode::call`] / [`TcpNode::try_call_sync`]
+/// after the node has been stopped: sends after stop are errors, not
+/// panics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeStopped;
+
+impl std::fmt::Display for NodeStopped {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tcp node is stopped")
+    }
+}
+
+impl std::error::Error for NodeStopped {}
 
 enum Op<R: Runner> {
     Incoming { from: PeerId, msg: R::Msg },
@@ -48,14 +152,21 @@ enum Op<R: Runner> {
     Stop,
 }
 
+struct ReaderSlot {
+    stream: TcpStream,
+    handle: JoinHandle<()>,
+}
+
 /// Handle to a running TCP node.
 pub struct TcpNode<R: Runner> {
     pub id: PeerId,
     pub addr: SocketAddr,
     tx: Sender<Op<R>>,
+    dir: Directory,
     stopping: Arc<std::sync::atomic::AtomicBool>,
-    event_thread: Option<JoinHandle<()>>,
-    listener_thread: Option<JoinHandle<()>>,
+    event_thread: Mutex<Option<JoinHandle<R>>>,
+    listener_thread: Mutex<Option<JoinHandle<()>>>,
+    readers: Arc<Mutex<Vec<ReaderSlot>>>,
 }
 
 struct TimerEntry {
@@ -90,6 +201,10 @@ fn write_frame(stream: &mut TcpStream, from: PeerId, payload: &[u8]) -> std::io:
     Ok(())
 }
 
+/// Frames above this are rejected before any allocation: the length
+/// prefix arrives from the network and is otherwise an attacker-chosen
+/// `Vec` size (a 4 GiB allocation per connection). A hostile prefix
+/// costs the peer its connection, nothing else.
 const MAX_FRAME: u32 = 64 * 1024 * 1024;
 
 fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<(PeerId, Vec<u8>)>> {
@@ -121,6 +236,16 @@ where
     /// Start a node: binds a listener on 127.0.0.1, registers in the
     /// directory, runs `on_start`, and begins the event loop.
     pub fn start(runner: R, dir: Directory) -> std::io::Result<TcpNode<R>> {
+        Self::start_with_policy(runner, dir, LinkPolicy::default())
+    }
+
+    /// Like [`TcpNode::start`], with a shared [`LinkPolicy`] applied to
+    /// every frame this node receives.
+    pub fn start_with_policy(
+        runner: R,
+        dir: Directory,
+        policy: LinkPolicy,
+    ) -> std::io::Result<TcpNode<R>> {
         let id = runner.id();
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
@@ -128,21 +253,34 @@ where
         let (tx, rx) = mpsc::channel::<Op<R>>();
 
         let stopping = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Arc<Mutex<Vec<ReaderSlot>>> = Arc::new(Mutex::new(Vec::new()));
 
-        // Listener: accept → spawn frame-reader per connection.
+        // Listener: accept → spawn frame-reader per connection. Each
+        // reader registers in `readers` (with a handle to its stream)
+        // so shutdown can unblock and join it.
         let tx_listen = tx.clone();
         let stop_flag = stopping.clone();
+        let readers_reg = readers.clone();
         let listener_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop_flag.load(std::sync::atomic::Ordering::SeqCst) {
                     break;
                 }
                 let Ok(mut stream) = conn else { break };
+                let registered = stream.try_clone().ok();
                 let tx = tx_listen.clone();
-                std::thread::spawn(move || {
+                let policy = policy.clone();
+                let handle = std::thread::spawn(move || {
                     loop {
                         match read_frame(&mut stream) {
                             Ok(Some((from, payload))) => {
+                                let rule = policy.rule(&from, &id);
+                                if rule.drop {
+                                    continue; // partitioned: the frame vanishes
+                                }
+                                if !rule.delay.is_zero() {
+                                    std::thread::sleep(rule.delay); // paced link
+                                }
                                 let mut r = BinReader::new(&payload);
                                 let Ok(msg) = R::Msg::decode(&mut r) else { break };
                                 // A closed event loop ends this reader.
@@ -150,58 +288,143 @@ where
                                     break;
                                 }
                             }
+                            // Clean EOF, an oversized/hostile frame, or
+                            // a mid-frame I/O error: drop the connection
+                            // (the sender re-dials) — never the node.
                             _ => break,
                         }
                     }
                 });
+                let mut reg = readers_reg.lock().unwrap();
+                reg.retain(|s: &ReaderSlot| !s.handle.is_finished());
+                if let Some(stream) = registered {
+                    reg.push(ReaderSlot { stream, handle });
+                }
             }
         });
 
-        let event_thread = std::thread::spawn(move || event_loop(runner, rx, dir));
+        let dir_loop = dir.clone();
+        let event_thread = std::thread::spawn(move || event_loop(runner, rx, dir_loop));
         Ok(TcpNode {
             id,
             addr,
             tx,
+            dir,
             stopping,
-            event_thread: Some(event_thread),
-            listener_thread: Some(listener_thread),
+            event_thread: Mutex::new(Some(event_thread)),
+            listener_thread: Mutex::new(Some(listener_thread)),
+            readers,
         })
     }
+}
 
+impl<R: Runner> TcpNode<R> {
     /// Run a closure on the event-loop thread against the runner
-    /// (API-call injection, mirrors `Cluster::with_node`).
-    pub fn call(&self, f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) + Send + 'static) {
-        let _ = self.tx.send(Op::Call(Box::new(f)));
+    /// (API-call injection, mirrors `Cluster::with_node`). Errors —
+    /// instead of panicking — once the node is stopped.
+    pub fn call(
+        &self,
+        f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) + Send + 'static,
+    ) -> Result<(), NodeStopped> {
+        self.tx.send(Op::Call(Box::new(f))).map_err(|_| NodeStopped)
     }
 
-    /// Run a closure returning a value, blocking until it completes.
+    /// Run a closure returning a value, blocking until it completes;
+    /// errors once the node is stopped.
+    pub fn try_call_sync<T: Send + 'static>(
+        &self,
+        f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) -> T + Send + 'static,
+    ) -> Result<T, NodeStopped> {
+        let (tx, rx) = mpsc::channel();
+        self.call(move |r, now, out| {
+            let _ = tx.send(f(r, now, out));
+        })?;
+        rx.recv().map_err(|_| NodeStopped)
+    }
+
+    /// [`TcpNode::try_call_sync`] for paths that hold a live node by
+    /// construction; panics if the node was stopped underneath.
     pub fn call_sync<T: Send + 'static>(
         &self,
         f: impl FnOnce(&mut R, Nanos, &mut Outbox<R::Msg>) -> T + Send + 'static,
     ) -> T {
-        let (tx, rx) = mpsc::channel();
-        self.call(move |r, now, out| {
-            let _ = tx.send(f(r, now, out));
-        });
-        rx.recv().expect("event loop gone")
+        self.try_call_sync(f).expect("event loop gone")
     }
 
-    /// Stop the node and join its threads.
-    pub fn stop(mut self) {
-        let _ = self.tx.send(Op::Stop);
-        if let Some(t) = self.event_thread.take() {
-            let _ = t.join();
-        }
-        // Unblock the accept loop; the flag makes it exit.
+    /// Stop the node, join every thread it spawned (event loop,
+    /// listener, per-connection readers), withdraw its directory entry,
+    /// and hand back the runner with its state intact. Idempotent: the
+    /// first call returns `Some(runner)`, later calls (and `Drop`)
+    /// return `None` without touching anything.
+    pub fn shutdown(&self) -> Option<R> {
+        let event = self.event_thread.lock().unwrap().take()?;
+        // Flag first: the accept loop must not hand the wake-up
+        // connection below to a fresh reader thread.
         self.stopping.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = self.tx.send(Op::Stop);
+        let runner = event.join().ok();
+        self.dir.remove_if(self.id, self.addr);
+        // Unblock the accept loop; the flag makes it exit.
         let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.listener_thread.take() {
+        if let Some(t) = self.listener_thread.lock().unwrap().take() {
             let _ = t.join();
         }
+        // Readers block in `read_exact` (or a pacing sleep); closing
+        // their sockets errors the read and the dead Op channel ends
+        // any send, so every join terminates.
+        let slots = std::mem::take(&mut *self.readers.lock().unwrap());
+        for slot in slots {
+            let _ = slot.stream.shutdown(std::net::Shutdown::Both);
+            let _ = slot.handle.join();
+        }
+        runner
+    }
+
+    /// Stop the node and join its threads, discarding the runner.
+    pub fn stop(self) {
+        let _ = self.shutdown();
+    }
+
+    /// Number of this node's threads still alive (event loop, listener,
+    /// readers). Zero after [`TcpNode::shutdown`]; the lifecycle tests
+    /// assert on it.
+    pub fn thread_count(&self) -> usize {
+        let mut n = 0;
+        if self
+            .event_thread
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|t| !t.is_finished())
+        {
+            n += 1;
+        }
+        if self
+            .listener_thread
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|t| !t.is_finished())
+        {
+            n += 1;
+        }
+        n + self
+            .readers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| !s.handle.is_finished())
+            .count()
     }
 }
 
-fn event_loop<R: Runner>(mut runner: R, rx: Receiver<Op<R>>, dir: Directory) {
+impl<R: Runner> Drop for TcpNode<R> {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+fn event_loop<R: Runner>(mut runner: R, rx: Receiver<Op<R>>, dir: Directory) -> R {
     let epoch = Instant::now();
     let now = |at: Instant| Nanos((at - epoch).as_nanos() as u64);
     let mut timers: BinaryHeap<TimerEntry> = BinaryHeap::new();
@@ -220,9 +443,9 @@ fn event_loop<R: Runner>(mut runner: R, rx: Receiver<Op<R>>, dir: Directory) {
                 runner.on_message(now(Instant::now()), from, msg, &mut out);
             }
             Ok(Op::Call(f)) => f(&mut runner, now(Instant::now()), &mut out),
-            Ok(Op::Stop) => return,
+            Ok(Op::Stop) => return runner,
             Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => return,
+            Err(RecvTimeoutError::Disconnected) => return runner,
         }
         // Fire due timers.
         while timers.peek().map(|t| t.at <= Instant::now()).unwrap_or(false) {
@@ -305,6 +528,24 @@ mod tests {
         }
     }
 
+    fn ids(n: usize) -> Vec<PeerId> {
+        let mut rng = Rng::new(1);
+        (0..n).map(|_| PeerId::from_rng(&mut rng)).collect()
+    }
+
+    /// Messages delivered (timer hits excluded).
+    fn msgs(hits: &AtomicU64) -> u64 {
+        hits.load(Ordering::SeqCst) % 100
+    }
+
+    fn socket_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
     #[test]
     fn tcp_ping_pong_and_timers() {
         let mut rng = Rng::new(1);
@@ -335,6 +576,207 @@ mod tests {
         assert!(hits_b.load(Ordering::SeqCst) >= 103, "b={}", hits_b.load(Ordering::SeqCst));
         let n = a.call_sync(|r, _, _| r.id());
         assert_eq!(n, a_id);
+        a.stop();
+        b.stop();
+    }
+
+    #[test]
+    fn framing_round_trips_over_a_real_socket_pair() {
+        let (mut client, mut server) = socket_pair();
+        let from = ids(1)[0];
+        let payload: Vec<u8> = (0..1000u32).flat_map(|x| x.to_be_bytes()).collect();
+        write_frame(&mut client, from, &payload).unwrap();
+        let (got_from, got_payload) = read_frame(&mut server).unwrap().unwrap();
+        assert_eq!(got_from, from);
+        assert_eq!(got_payload, payload);
+        // Clean shutdown reads as end-of-stream, not an error.
+        client.shutdown(std::net::Shutdown::Both).unwrap();
+        assert!(read_frame(&mut server).unwrap().is_none());
+    }
+
+    #[test]
+    fn framing_reassembles_partial_reads() {
+        let (mut client, mut server) = socket_pair();
+        let from = ids(1)[0];
+        let payload = vec![0xABu8; 257];
+        // Serialize the frame, then trickle it in three chunks with
+        // pauses: read_frame must reassemble across short reads.
+        let mut wire = Vec::new();
+        {
+            let mut hdr = Writer::new();
+            from.encode(&mut hdr);
+            let head = hdr.into_bytes();
+            wire.extend_from_slice(&((head.len() + payload.len()) as u32).to_be_bytes());
+            wire.extend_from_slice(&head);
+            wire.extend_from_slice(&payload);
+        }
+        let writer = std::thread::spawn(move || {
+            for chunk in wire.chunks(wire.len() / 3 + 1) {
+                client.write_all(chunk).unwrap();
+                client.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            client
+        });
+        let (got_from, got_payload) = read_frame(&mut server).unwrap().unwrap();
+        assert_eq!(got_from, from);
+        assert_eq!(got_payload, payload);
+        drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn mid_frame_connection_drop_is_an_error() {
+        let (mut client, mut server) = socket_pair();
+        // Claim a 100-byte frame, deliver 10 bytes, hang up.
+        client.write_all(&100u32.to_be_bytes()).unwrap();
+        client.write_all(&[0u8; 10]).unwrap();
+        drop(client);
+        let err = read_frame(&mut server).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_rejected_without_allocating() {
+        for bad in [u32::MAX, MAX_FRAME + 1, 4, 0] {
+            let (mut client, mut server) = socket_pair();
+            client.write_all(&bad.to_be_bytes()).unwrap();
+            client.write_all(b"junk that must never be read as a frame").unwrap();
+            let err = read_frame(&mut server).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "prefix {bad:#x}");
+        }
+    }
+
+    #[test]
+    fn hostile_prefix_drops_the_connection_not_the_node() {
+        let peer_ids = ids(2);
+        let hits = Arc::new(AtomicU64::new(0));
+        let dir = Directory::new();
+        let node = TcpNode::start(
+            Echo { id: peer_ids[0], peer: None, hits: hits.clone() },
+            dir.clone(),
+        )
+        .unwrap();
+
+        // Attacker claims a 4 GiB frame; the node must close this
+        // connection rather than allocate.
+        let mut evil = TcpStream::connect(node.addr).unwrap();
+        evil.write_all(&u32::MAX.to_be_bytes()).unwrap();
+        let mut probe = [0u8; 1];
+        // The read unblocks with EOF (Ok(0)) or a reset once the reader
+        // thread drops its end; either proves the connection died.
+        evil.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        match evil.read(&mut probe) {
+            Ok(0) | Err(_) => {}
+            Ok(n) => panic!("unexpected {n} bytes from the node"),
+        }
+
+        // The node itself is still alive: a well-formed frame from a
+        // fresh connection is processed.
+        let mut good = TcpStream::connect(node.addr).unwrap();
+        write_frame(&mut good, peer_ids[1], &crate::codec::to_bytes(&7u64)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while msgs(&hits) == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(msgs(&hits), 1, "node wedged after hostile prefix");
+        assert_eq!(node.call_sync(|r, _, _| r.id()), peer_ids[0]);
+        node.stop();
+    }
+
+    #[test]
+    fn shutdown_reaps_threads_and_is_idempotent() {
+        let peer_ids = ids(2);
+        let hits_a = Arc::new(AtomicU64::new(0));
+        let hits_b = Arc::new(AtomicU64::new(0));
+        let dir = Directory::new();
+        let b = TcpNode::start(
+            Echo { id: peer_ids[1], peer: None, hits: hits_b.clone() },
+            dir.clone(),
+        )
+        .unwrap();
+        let a = TcpNode::start(
+            Echo { id: peer_ids[0], peer: Some(peer_ids[1]), hits: hits_a.clone() },
+            dir.clone(),
+        )
+        .unwrap();
+        // Wait for the ping-pong so both nodes have live reader threads.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while (msgs(&hits_a) < 3 || msgs(&hits_b) < 3) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(a.thread_count() >= 3, "expected event+listener+reader threads");
+
+        let runner = a.shutdown().expect("first shutdown returns the runner");
+        assert_eq!(runner.id, peer_ids[0], "runner state survives shutdown");
+        assert_eq!(a.thread_count(), 0, "all JoinHandles reaped");
+        assert!(a.shutdown().is_none(), "double-stop is a no-op");
+        assert_eq!(dir.get(&peer_ids[0]), None, "directory entry withdrawn");
+
+        // Sends after stop are errors, not panics.
+        assert_eq!(a.call(|_, _, _| {}), Err(NodeStopped));
+        assert_eq!(a.try_call_sync(|r, _, _| r.id()), Err(NodeStopped));
+
+        // The reclaimed runner restarts on fresh threads (the parity
+        // harness's crash → restart path) and answers again.
+        let a2 = TcpNode::start(runner, dir.clone()).unwrap();
+        assert_eq!(a2.call_sync(|r, _, _| r.id()), peer_ids[0]);
+        assert!(dir.get(&peer_ids[0]).is_some());
+        a2.stop();
+        b.stop();
+        assert_eq!(b.thread_count(), 0);
+    }
+
+    #[test]
+    fn link_policy_drops_then_delivers_after_unblock() {
+        let peer_ids = ids(2);
+        let hits_a = Arc::new(AtomicU64::new(0));
+        let hits_b = Arc::new(AtomicU64::new(0));
+        let dir = Directory::new();
+        let policy = LinkPolicy::new();
+        policy.block(peer_ids[0], peer_ids[1]);
+        let b = TcpNode::start_with_policy(
+            Echo { id: peer_ids[1], peer: None, hits: hits_b.clone() },
+            dir.clone(),
+            policy.clone(),
+        )
+        .unwrap();
+        let a = TcpNode::start_with_policy(
+            Echo { id: peer_ids[0], peer: Some(peer_ids[1]), hits: hits_a.clone() },
+            dir.clone(),
+            policy.clone(),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(msgs(&hits_b), 0, "blocked a→b frame leaked through");
+
+        // Heal and resend: the same connection starts delivering.
+        policy.unblock_all();
+        a.call(|r, _, out| {
+            if let Some(p) = r.peer {
+                out.send(p, 1);
+            }
+        })
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while msgs(&hits_b) == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(msgs(&hits_b) >= 1, "unblocked link still dropping");
+
+        // Pacing delays but never loses frames.
+        policy.set_delay(peer_ids[0], peer_ids[1], Duration::from_millis(50));
+        let before = msgs(&hits_b);
+        a.call(|r, _, out| {
+            if let Some(p) = r.peer {
+                out.send(p, 1);
+            }
+        })
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while msgs(&hits_b) <= before && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(msgs(&hits_b) > before, "paced frame never arrived");
         a.stop();
         b.stop();
     }

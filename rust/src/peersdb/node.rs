@@ -470,6 +470,28 @@ impl Node {
         self.validations.verdict(cid)
     }
 
+    /// Whether this node fully holds the data file rooted at `cid` —
+    /// root block plus every chunk, not marked private. The holder
+    /// predicate behind the availability invariant and the per-peer
+    /// `holds` column of `sim::parity`'s convergence report.
+    pub fn holds_data(&self, cid: &Cid) -> bool {
+        chunker::has_file(&self.bs, cid) && !self.bs.is_private(cid)
+    }
+
+    /// Digest of the contribution log — the cross-replica convergence
+    /// fingerprint (equal digests ⇒ identical logs).
+    pub fn log_digest(&self) -> [u8; 32] {
+        self.contributions.digest()
+    }
+
+    /// Current contribution-log heads, sorted, for timing-free head-set
+    /// comparison across peers.
+    pub fn log_heads(&self) -> Vec<Cid> {
+        let mut heads = self.contributions.heads();
+        heads.sort();
+        heads
+    }
+
     /// Manually trigger validation of a replicated contribution.
     pub fn validate(&mut self, now: Nanos, data_cid: Cid, out: &mut Outbox<Message>) {
         self.begin_validation(now, data_cid, out);

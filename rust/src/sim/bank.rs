@@ -597,12 +597,94 @@ pub fn delayed_honest_majority() -> Scenario {
         .at(240, Fault::SlowLink { a: DELAY_VOTER, b: DELAY_HONEST[1], factor: 1.0 })
 }
 
+/// 18. Parity: partition/heal under churn — the sim-to-real flagship.
+/// Everything here lowers onto the TCP driver: the partition becomes
+/// per-direction frame-drop rules, the slow link becomes per-frame
+/// pacing, the crash/restart cycle becomes real thread stop/spawn, and
+/// the flash-crowd joiner is a freshly spawned node bootstrapping
+/// through the root. Contributions land on both sides of the split (one
+/// on a crashed-then-restarted node's side), so convergence genuinely
+/// depends on the post-heal anti-entropy path in both worlds. Sized for
+/// a real-clock run: 6 peers + 1 joiner, last fault at t+13 s.
+/// `sim::parity::differential` runs this schedule in the DES *and* over
+/// loopback TCP and asserts the two `ConvergenceReport`s are equal.
+pub fn parity_partition() -> Scenario {
+    let mut sc = Scenario::named("parity-partition-heal", 2020, 6);
+    sc.parity = true;
+    sc.warmup = Duration::from_secs(5);
+    sc.quiesce = Duration::from_secs(300);
+    sc.quiesce_poll = Duration::from_secs(2);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(1, Fault::Crash { node: 3 })
+        .at(2, Fault::Partition { a: vec![0, 1, 2, 3], b: vec![4, 5] })
+        // Both sides keep publishing while split (node 3 is down).
+        .at(3, Fault::Contribute { node: 2, workload: 1, rows: 30 })
+        .at(4, Fault::Contribute { node: 4, workload: 2, rows: 30 })
+        .at(5, Fault::SlowLink { a: 0, b: 5, factor: 4.0 })
+        .at(7, Fault::Restart { node: 3 })
+        .at(8, Fault::Heal)
+        .at(10, Fault::FlashCrowd { n: 1, region: Region::UsWest1 })
+        .at(11, Fault::Contribute { node: 5, workload: 3, rows: 30 })
+        .at(13, Fault::Checkpoint)
+}
+
+/// 19. Parity: GC-pressure repair. The [`gc_pressure`] story shrunk to
+/// a timing-free fixed point the parity harness can differentially
+/// check: auto-pin off, one author contributes twice, repair (node
+/// target = the whole cluster, so *which* peers replicate is not a
+/// race) spreads both files everywhere, then the author drops and GCs
+/// them. Repair on the survivors must leave every non-dropper holding
+/// both files; the dropper — who authored everything it ever held, so
+/// its `dropped` set is deterministic — holds nothing.
+pub fn parity_gc_repair() -> Scenario {
+    let mut sc = Scenario::named("parity-gc-repair", 2121, 7);
+    sc.parity = true;
+    sc.warmup = Duration::from_secs(5);
+    sc.quiesce = Duration::from_secs(300);
+    sc.quiesce_poll = Duration::from_secs(2);
+    sc.cfg.auto_pin = false;
+    sc.cfg.repair_interval = Duration::from_secs(2);
+    sc.cfg.replication_target = 7;
+    sc.invariants.availability = Some(AvailabilityInvariant::default());
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 30 })
+        .at(2, Fault::Contribute { node: 1, workload: 1, rows: 30 })
+        // Seven repair cycles later every peer holds both files; the
+        // author frees its disk and must never resurrect the data.
+        .at(16, Fault::UnpinAndGc { node: 1 })
+}
+
+/// 20. Parity: quorum validation with a byzantine minority. Stats
+/// validators everywhere, one liar (node 3), clean and corrupt
+/// contributions from three different authors. With the verdict floor
+/// of 2 on timeout tallies, the single liar can never push a wrong
+/// verdict through a vote in either world, so every honest non-author
+/// converges to the ground-truth verdict — a per-peer, per-file outcome
+/// the differential check compares directly (authors never
+/// self-validate and are expected to hold *no* verdict; the liar's
+/// store is masked). [`VerdictIntegrityInvariant`] guards both runs.
+pub fn parity_quorum() -> Scenario {
+    let mut sc = Scenario::named("parity-quorum", 2222, 7);
+    sc.parity = true;
+    sc.warmup = Duration::from_secs(5);
+    sc.quiesce = Duration::from_secs(300);
+    sc.quiesce_poll = Duration::from_secs(2);
+    sc.stats_validators = true;
+    sc.byzantine = vec![3];
+    sc.cfg.auto_validate = true;
+    sc.cfg.quorum.min_force_verdicts = 2;
+    sc.invariants.verdict_integrity = Some(VerdictIntegrityInvariant);
+    sc.at(0, Fault::Contribute { node: 1, workload: 0, rows: 60 })
+        .at(3, Fault::ContributeCorrupt { node: 2, workload: 1, rows: 60, frac: 0.9 })
+        .at(6, Fault::Contribute { node: 5, workload: 2, rows: 60 })
+}
+
 /// Every replayable bank scenario, in canonical order: the seven
 /// original fault scenarios, the multi-region scale-out headline, the
 /// two directional-plane scenarios (half-open region, eclipse), the two
 /// GC-pressure repair scenarios, the defended eclipse, the three
-/// striped-transfer scenarios (drag pair + provider death), and the
-/// quorum-grace delayed-honest-majority scenario.
+/// striped-transfer scenarios (drag pair + provider death), the
+/// quorum-grace delayed-honest-majority scenario, and the three
+/// parity-tagged scenarios the sim-to-real harness replays over TCP.
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -622,6 +704,9 @@ pub fn all() -> Vec<Scenario> {
         slow_peer_drag_rr(),
         provider_death_midtransfer(),
         delayed_honest_majority(),
+        parity_partition(),
+        parity_gc_repair(),
+        parity_quorum(),
     ]
 }
 
@@ -954,6 +1039,32 @@ mod tests {
                 Duration(*at) > vote_deadline + Duration::from_secs(60),
                 "restore must wait out even an extended vote"
             );
+        }
+    }
+
+    #[test]
+    fn parity_rows_are_tagged_and_real_clock_sized() {
+        let rows = [parity_partition(), parity_gc_repair(), parity_quorum()];
+        for sc in &rows {
+            assert!(sc.parity, "{}: parity tag missing", sc.name);
+            // Eligibility proper (lowering + timing-free fixed point) is
+            // asserted by `sim::parity`'s own tests; here we guard the
+            // real-clock budget: short warmup, early quiesce probes, and
+            // a schedule that ends within seconds of warmup.
+            assert!(sc.warmup <= Duration::from_secs(5), "{}: warmup too long", sc.name);
+            assert!(sc.quiesce_poll.0 > 0, "{}: quiesce polling required", sc.name);
+            let last = sc.events.iter().map(|e| e.at).max().expect("nonempty schedule");
+            assert!(last <= Duration::from_secs(20), "{}: schedule too long", sc.name);
+        }
+        // And no sim-only scenario is accidentally tagged.
+        for sc in all() {
+            if sc.parity {
+                assert!(
+                    rows.iter().any(|r| r.name == sc.name),
+                    "{}: unexpected parity tag",
+                    sc.name
+                );
+            }
         }
     }
 

@@ -1,7 +1,7 @@
 //! Cluster-building helpers shared by tests, benches and examples:
 //! the "Helm chart" of the reproduction.
 
-use crate::net::Outbox;
+use crate::net::{Outbox, PeerId};
 use crate::peersdb::{Node, NodeConfig, NodeEvent};
 use crate::sim::des::Cluster;
 use crate::sim::model::NetModel;
@@ -9,6 +9,45 @@ use crate::sim::regions::{Region, ALL};
 use crate::util::time::{Duration, Nanos};
 use crate::util::Rng;
 use crate::validation::Validator;
+
+/// A read-only view of a PeersDB cluster, whatever executed it.
+///
+/// The DES [`Cluster`] implements it, and so does the parity harness's
+/// quiesced real-TCP cluster ([`crate::sim::parity::Quiesced`]) — which
+/// is what lets `sim::scenario::check_invariants` (log convergence,
+/// availability, routing health, quorum safety) run unchanged against
+/// either world.
+pub trait ClusterView {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Whether the node at `idx` is currently online (crashed/outaged
+    /// DES nodes report `false`; a quiesced real cluster is all-online
+    /// by construction — teardown restarts every crashed peer).
+    fn is_online(&self, idx: usize) -> bool;
+    fn node(&self, idx: usize) -> &Node;
+    fn peer_id(&self, idx: usize) -> PeerId;
+    fn index_of(&self, id: PeerId) -> Option<usize>;
+}
+
+impl ClusterView for Cluster<Node> {
+    fn len(&self) -> usize {
+        Cluster::len(self)
+    }
+    fn is_online(&self, idx: usize) -> bool {
+        Cluster::is_online(self, idx)
+    }
+    fn node(&self, idx: usize) -> &Node {
+        Cluster::node(self, idx)
+    }
+    fn peer_id(&self, idx: usize) -> PeerId {
+        Cluster::peer_id(self, idx)
+    }
+    fn index_of(&self, id: PeerId) -> Option<usize> {
+        Cluster::index_of(self, id)
+    }
+}
 
 /// Description of one peer to launch.
 pub struct PeerSpec {
@@ -204,7 +243,7 @@ pub fn quorum_totals(cluster: &Cluster<Node>) -> (u64, u64, u64) {
 /// [`crate::peersdb::ValidationSource::Network`] adoptions. Byzantine
 /// nodes are excluded: their stores lie by construction.
 pub fn false_verdicts(
-    cluster: &Cluster<Node>,
+    cluster: &impl ClusterView,
     ground_truth: &[(crate::cid::Cid, bool)],
     byzantine: &[usize],
 ) -> u64 {

@@ -35,16 +35,28 @@
 //! `tests/scenarios.rs` and the self-timing `benches/sim_scale.rs`,
 //! which emits `BENCH_sim.json`); `benches/sim_fuzz.rs` reuses the
 //! invariants under randomized link flapping.
+//!
+//! The **parity subsystem** ([`parity`]) closes the sim-to-real loop:
+//! bank scenarios tagged [`Scenario::parity`] are lowered onto the
+//! threaded TCP driver ([`crate::net::tcp`]) — partitions and slow
+//! links become [`crate::net::LinkPolicy`] frame rules, crashes become
+//! real thread stop/spawn — and the DES and real runs must produce
+//! equal timing-free [`parity::ConvergenceReport`]s. Sim-only faults
+//! (forged DHT replies, probabilistic loss, CPU strain) fail lowering
+//! with an explicit [`parity::Unsupported`] error rather than being
+//! silently skipped.
 
 pub mod bank;
 pub mod des;
 pub mod harness;
 pub mod model;
+pub mod parity;
 pub mod regions;
 pub mod scenario;
 
 pub use des::{Cluster, LinkState, SimStats};
 pub use model::{LatencySpec, NetModel};
+pub use parity::{ConvergenceReport, RealAction, Unsupported};
 pub use regions::Region;
 pub use scenario::{
     EclipseInvariant, Fault, InvariantConfig, Scenario, ScenarioReport, TimedFault,

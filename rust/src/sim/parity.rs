@@ -1,0 +1,1251 @@
+//! Sim-to-real parity: run the bank's declarative fault schedules over
+//! real TCP sockets and differentially compare convergence outcomes
+//! against the DES.
+//!
+//! The DES proves invariants in virtual time; nothing there stops the
+//! simulator's network model from quietly diverging from what the
+//! sans-io cores do over real sockets. This module is the differential
+//! check: [`run_sim`] executes a parity-tagged [`Scenario`] in the DES,
+//! [`run_real`] executes the *same* schedule against a multi-threaded
+//! loopback cluster of [`TcpNode<Node>`] peers, and [`differential`]
+//! asserts the two timing-free [`ConvergenceReport`]s agree.
+//!
+//! The lowering ([`lower`]) maps each [`Fault`] onto a [`RealAction`]
+//! the TCP driver can actually perform: partitions become per-direction
+//! frame-drop rules on a shared [`LinkPolicy`], `SlowLink`s become
+//! per-frame pacing delays, crashes/restarts become real thread
+//! stop/spawn (the runner survives, mirroring the DES's
+//! `set_offline`/`set_online`), flash crowds become fresh `TcpNode`
+//! spawns bootstrapping through the root. Sim-only faults — forged DHT
+//! replies, probabilistic loss, CPU strain — fail the lowering with an
+//! explicit [`Unsupported`] error; a schedule either runs whole over
+//! real sockets or not at all, never with faults silently skipped.
+//!
+//! **Outcomes, not timings.** Wall-clock runs are nondeterministic in
+//! every timing-dependent respect, so the report only contains facts
+//! both worlds must agree on once converged: which peers are
+//! bootstrapped, per-peer log length, which peers fully hold which data
+//! files, per-peer verdicts against the schedule's ground truth,
+//! whether all logs share one digest/head-set *within the run* (log
+//! digests embed `created_at` timestamps and are therefore never
+//! compared *across* runs), and live-holder counts per contribution.
+//! The data CIDs themselves *are* compared across runs: both drivers
+//! mirror `scenario::run_cluster`'s RNG discipline (identity stream
+//! from `Rng::new(seed)`, schedule stream from
+//! `Rng::new(seed ^ 0x5CE2A210_FA17_1A7E)` consumed in stable schedule
+//! order), so contribution bytes — and hence their content addresses —
+//! must be byte-identical. Both runs converge toward the same
+//! schedule-derived expected report, and at the end the real cluster's
+//! reclaimed runners are wrapped in a [`Quiesced`] view and pushed
+//! through the *same* [`scenario::check_invariants`] the DES asserts.
+
+use crate::cid::Cid;
+use crate::modeling::datagen::{self, WORKLOADS};
+use crate::net::tcp::to_wall;
+use crate::net::{Directory, LinkPolicy, PeerId, TcpNode};
+use crate::peersdb::Node;
+use crate::sim::harness::ClusterView;
+use crate::sim::regions::{Region, ALL};
+use crate::sim::scenario::{self, Fault, Phase, Scenario};
+use crate::stores::documents::Verdict;
+use crate::util::Rng;
+use crate::validation::{ByzantineValidator, StatsValidator, Validator};
+use std::collections::{BTreeSet, HashMap};
+use std::time::{Duration, Instant};
+
+/// Wall-clock pacing per unit of `SlowLink` latency factor above 1.0.
+const PACE_MS_PER_FACTOR: u64 = 25;
+/// Per-frame pacing ceiling: keeps a reader thread's sleep bounded so
+/// shutdown joins promptly and one paced link cannot stall a run.
+const MAX_PACE_MS: u64 = 250;
+/// Hard wall-clock budget for the real run's quiesce poll.
+const REAL_QUIESCE_CAP: Duration = Duration::from_secs(45);
+/// Poll interval while the real cluster converges toward the expected
+/// report.
+const REAL_POLL: Duration = Duration::from_millis(250);
+/// Extra virtual seconds granted to the DES run past its
+/// invariant-passing quiesce to reach the outcome fixed point (verdict
+/// tails, last repair fetches): `quiesce_poll` stops at the first
+/// invariant pass, which can be earlier than full convergence.
+const SIM_EXTEND_SECS: u64 = 120;
+
+// ---------------------------------------------------------------------------
+// Fault lowering
+// ---------------------------------------------------------------------------
+
+/// A [`Fault`] lowered to something the TCP driver can actually do.
+/// Node indices refer to spec order, exactly as in the DES.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RealAction {
+    /// Block the listed directed index pairs at the frame level.
+    Block(Vec<(usize, usize)>),
+    /// Unblock the listed directed index pairs (pacing persists).
+    Unblock(Vec<(usize, usize)>),
+    /// Heal every blocked link, keeping pacing (mirrors `Fault::Heal`,
+    /// which unblocks links but leaves latency multipliers in place).
+    HealAll,
+    /// Pace both directions of the `a ↔ b` link by a per-frame delay.
+    Pace { a: usize, b: usize, delay: Duration },
+    /// Stop a node's threads and park its runner; state survives.
+    Crash(usize),
+    /// Restart a parked runner on fresh threads (`on_start` re-runs,
+    /// like the DES's epoch-bumping `set_online`).
+    Restart(usize),
+    /// Crash every node in the region.
+    Outage(Region),
+    /// Restart every parked node in the region.
+    Recover(Region),
+    /// Spawn `n` fresh peers bootstrapping through the root.
+    Join { n: usize, region: Region },
+    /// Swap the node's validator for a lying one.
+    TurnByzantine(usize),
+    /// Inject a contribution (corrupted when `frac` is set).
+    Contribute { node: usize, workload: u32, rows: usize, frac: Option<f64> },
+    /// Deliberate unpin + garbage collection on one node.
+    UnpinAndGc(usize),
+    /// Toggle the availability-repair loop on every current member.
+    SetRepair(bool),
+    /// Mid-run safety checkpoint (routing health + quorum safety).
+    Checkpoint,
+}
+
+/// A sim-only fault that cannot be lowered to real TCP. Lowering
+/// *fails* on these — it never skips them — so a schedule either runs
+/// whole over real sockets or not at all.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Unsupported {
+    /// Debug rendering of the offending fault.
+    pub fault: String,
+    /// Why the fault has no real-socket counterpart.
+    pub why: &'static str,
+}
+
+impl std::fmt::Display for Unsupported {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fault {} has no real-TCP lowering: {}", self.fault, self.why)
+    }
+}
+
+impl std::error::Error for Unsupported {}
+
+/// Pacing delay for a `SlowLink` latency multiplier: proportional to
+/// the excess over nominal, capped at [`MAX_PACE_MS`].
+pub fn pace_delay(factor: f64) -> Duration {
+    let excess = (factor - 1.0).max(0.0);
+    Duration::from_millis(((excess * PACE_MS_PER_FACTOR as f64) as u64).min(MAX_PACE_MS))
+}
+
+/// Lower one fault to a [`RealAction`], or explain why it cannot run
+/// over real sockets.
+pub fn lower(fault: &Fault) -> Result<RealAction, Unsupported> {
+    let unsupported = |why: &'static str| Unsupported { fault: format!("{fault:?}"), why };
+    Ok(match fault {
+        Fault::Partition { a, b } => {
+            let mut links = Vec::new();
+            for &x in a {
+                for &y in b {
+                    if x != y {
+                        links.push((x, y));
+                        links.push((y, x));
+                    }
+                }
+            }
+            RealAction::Block(links)
+        }
+        Fault::Heal => RealAction::HealAll,
+        Fault::BlockPair { a, b } => RealAction::Block(vec![(*a, *b), (*b, *a)]),
+        Fault::UnblockPair { a, b } => RealAction::Unblock(vec![(*a, *b), (*b, *a)]),
+        Fault::BlockDirected { from, to } => RealAction::Block(vec![(*from, *to)]),
+        Fault::UnblockDirected { from, to } => RealAction::Unblock(vec![(*from, *to)]),
+        Fault::AsymmetricPartition { a, b } => {
+            // A sees B: only the b→a directions are blocked.
+            let mut links = Vec::new();
+            for &x in a {
+                for &y in b {
+                    if x != y {
+                        links.push((y, x));
+                    }
+                }
+            }
+            RealAction::Block(links)
+        }
+        Fault::SlowLink { a, b, factor } => {
+            RealAction::Pace { a: *a, b: *b, delay: pace_delay(*factor) }
+        }
+        Fault::Outage { region } => RealAction::Outage(*region),
+        Fault::Recover { region } => RealAction::Recover(*region),
+        Fault::Crash { node } => RealAction::Crash(*node),
+        Fault::Restart { node } => RealAction::Restart(*node),
+        Fault::FlashCrowd { n, region } => RealAction::Join { n: *n, region: *region },
+        Fault::TurnByzantine { node } => RealAction::TurnByzantine(*node),
+        Fault::Contribute { node, workload, rows } => RealAction::Contribute {
+            node: *node,
+            workload: *workload,
+            rows: *rows,
+            frac: None,
+        },
+        Fault::ContributeCorrupt { node, workload, rows, frac } => RealAction::Contribute {
+            node: *node,
+            workload: *workload,
+            rows: *rows,
+            frac: Some(*frac),
+        },
+        Fault::UnpinAndGc { node } => RealAction::UnpinAndGc(*node),
+        Fault::SetRepair { on } => RealAction::SetRepair(*on),
+        Fault::Checkpoint => RealAction::Checkpoint,
+        Fault::SetLoss { .. } | Fault::SetLinkLoss { .. } => {
+            return Err(unsupported(
+                "probabilistic loss is sampled from the DES's seeded RNG; real sockets \
+                 deliver reliably and any injected sampling would make the outcome a \
+                 different random variable than the simulated one",
+            ))
+        }
+        Fault::CpuStrain { .. } | Fault::CpuRelief { .. } => {
+            return Err(unsupported(
+                "CPU strain is a property of the DES machine model; the loopback \
+                 cluster's threads share one real CPU with no per-machine throttle",
+            ))
+        }
+        Fault::ForgeDhtReplies { .. } | Fault::StopForging { .. } => {
+            return Err(unsupported(
+                "eclipse outcomes hinge on DES-deterministic eviction and lookup \
+                 interleavings; over real sockets the attack window depends on the \
+                 thread scheduler, so the differential report would compare noise",
+            ))
+        }
+    })
+}
+
+/// Lower a scenario's full schedule in stable `(at, declaration)` order
+/// — the order the DES executes it in.
+pub fn lower_schedule(
+    sc: &Scenario,
+) -> Result<Vec<(crate::util::time::Duration, RealAction)>, Unsupported> {
+    let mut order: Vec<usize> = (0..sc.events.len()).collect();
+    order.sort_by_key(|&i| (sc.events[i].at, i));
+    order
+        .into_iter()
+        .map(|i| Ok((sc.events[i].at, lower(&sc.events[i].fault)?)))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Schedule analysis: the outcome fixed point a parity scenario must
+// converge to, derived from the schedule alone.
+// ---------------------------------------------------------------------------
+
+/// Outcome-relevant facts read off a schedule.
+struct ScheduleInfo {
+    /// Peers whose validation stores lie by construction (initial
+    /// byzantine set, invariant-config set, plus `TurnByzantine`
+    /// targets) — their verdicts are masked out of reports.
+    byzantine: BTreeSet<usize>,
+    /// Peers that deliberately unpinned + GC'd; they hold nothing at
+    /// quiesce (repair refuses to resurrect deliberate drops).
+    droppers: BTreeSet<usize>,
+    /// Author index per contribution, in schedule order. Authors never
+    /// validate their own files (contributing pins locally; no data
+    /// fetch ever completes), so their expected verdict is `None`.
+    authors: Vec<usize>,
+    /// Final peer count (initial + flash-crowd joiners).
+    final_peers: usize,
+}
+
+impl ScheduleInfo {
+    fn of(sc: &Scenario) -> ScheduleInfo {
+        let mut byzantine: BTreeSet<usize> = sc.byzantine.iter().copied().collect();
+        byzantine.extend(sc.invariants.byzantine.iter().copied());
+        let mut droppers = BTreeSet::new();
+        let mut authors = Vec::new();
+        let mut final_peers = sc.peers;
+        let mut order: Vec<usize> = (0..sc.events.len()).collect();
+        order.sort_by_key(|&i| (sc.events[i].at, i));
+        for i in order {
+            match &sc.events[i].fault {
+                Fault::TurnByzantine { node } => {
+                    byzantine.insert(*node);
+                }
+                Fault::UnpinAndGc { node } => {
+                    droppers.insert(*node);
+                }
+                Fault::Contribute { node, .. } | Fault::ContributeCorrupt { node, .. } => {
+                    authors.push(*node);
+                }
+                Fault::FlashCrowd { n, .. } => final_peers += n,
+                _ => {}
+            }
+        }
+        ScheduleInfo { byzantine, droppers, authors, final_peers }
+    }
+}
+
+/// Whether (and why not) a scenario is parity-eligible: its schedule
+/// must lower cleanly, stay small enough for a real-clock run, and —
+/// the subtle part — have a *timing-free* convergence fixed point, so
+/// the sim and real runs can be expected to agree outcome-for-outcome.
+/// The bank's shape-guard tests call this for every tagged scenario.
+pub fn parity_eligible(sc: &Scenario) -> Result<(), String> {
+    lower_schedule(sc).map_err(|e| e.to_string())?;
+    let info = ScheduleInfo::of(sc);
+    if info.final_peers > 10 {
+        return Err(format!(
+            "{} final peers; the real-clock runner is sized for ≤ 10",
+            info.final_peers
+        ));
+    }
+    if !sc.cfg.auto_pin && sc.cfg.replication_target < info.final_peers {
+        return Err(
+            "without auto_pin, NodeConfig::replication_target must reach the whole \
+             cluster: a partial target makes *which* peers end up holding a repaired \
+             file a timing race, so per-peer holds would not be comparable"
+                .into(),
+        );
+    }
+    if sc.cfg.auto_validate && !sc.stats_validators {
+        return Err(
+            "auto_validate without stats validators leaves verdicts to the default \
+             identity validator, which cannot distinguish corrupt data — the expected \
+             verdict column would be meaningless"
+                .into(),
+        );
+    }
+    // Drop determinism: repair's no-resurrect rule keys off which files
+    // the dropper held at drop time, and whether a *non-author* held a
+    // file right then is a race. Requiring droppers to author every
+    // earlier contribution — and forbidding contributions after a drop
+    // — pins the fixed point to "droppers hold nothing".
+    let mut order: Vec<usize> = (0..sc.events.len()).collect();
+    order.sort_by_key(|&i| (sc.events[i].at, i));
+    let mut dropped = false;
+    let mut authors_so_far: Vec<usize> = Vec::new();
+    for i in order {
+        match &sc.events[i].fault {
+            Fault::Contribute { node, .. } | Fault::ContributeCorrupt { node, .. } => {
+                if dropped {
+                    return Err(
+                        "a contribution after an UnpinAndGc would be repair-fetched by \
+                         the dropper too (it is not in its dropped set), contradicting \
+                         the droppers-hold-nothing fixed point"
+                            .into(),
+                    );
+                }
+                authors_so_far.push(*node);
+            }
+            Fault::UnpinAndGc { node } => {
+                if authors_so_far.iter().any(|a| a != node) {
+                    return Err(
+                        "an UnpinAndGc node must have authored every earlier \
+                         contribution: whether it held someone else's file at drop \
+                         time is a timing race"
+                            .into(),
+                    );
+                }
+                dropped = true;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The timing-free convergence report
+// ---------------------------------------------------------------------------
+
+/// One peer's timing-free outcome at quiesce.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PeerOutcome {
+    pub bootstrapped: bool,
+    /// Contribution-log length.
+    pub log_len: usize,
+    /// Per ground-truth contribution (schedule order): does this peer
+    /// fully hold the data file?
+    pub holds: Vec<bool>,
+    /// Per ground-truth contribution: this peer's verdict. Byzantine
+    /// peers are masked to `None` — their stores lie by construction,
+    /// in ways the wall clock is allowed to influence.
+    pub verdicts: Vec<Option<Verdict>>,
+}
+
+/// The timing-free convergence outcome of one scenario run, sim or
+/// real. Two converged runs of the same schedule must compare equal —
+/// that equality *is* the parity claim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvergenceReport {
+    pub scenario: String,
+    /// Data CIDs in schedule order. Content-addressed from RNG-mirrored
+    /// bytes, so equal across sim and real — unlike log-entry CIDs and
+    /// digests, which embed `created_at` timestamps and are only
+    /// compared *within* a run (`logs_converged`).
+    pub data_cids: Vec<Cid>,
+    /// Ground truth per contribution: was it deliberately corrupted?
+    pub corrupt: Vec<bool>,
+    /// Every online peer shares one log digest and head set.
+    pub logs_converged: bool,
+    /// Live full holders per contribution — availability in outcome
+    /// terms (DHT provider *records* are timing-dependent; who actually
+    /// holds the bytes is not).
+    pub provider_counts: Vec<usize>,
+    pub peers: Vec<PeerOutcome>,
+}
+
+impl ConvergenceReport {
+    /// Hand-rolled JSON rendering for the CI failure artifact.
+    pub fn to_json(&self) -> String {
+        let join = |parts: Vec<String>| parts.join(",");
+        let peers = self
+            .peers
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"bootstrapped\":{},\"log_len\":{},\"holds\":[{}],\"verdicts\":[{}]}}",
+                    p.bootstrapped,
+                    p.log_len,
+                    join(p.holds.iter().map(|b| b.to_string()).collect()),
+                    join(
+                        p.verdicts
+                            .iter()
+                            .map(|v| match v {
+                                None => "null".to_string(),
+                                Some(v) => format!("\"{v:?}\""),
+                            })
+                            .collect()
+                    ),
+                )
+            })
+            .collect();
+        format!(
+            "{{\"scenario\":\"{}\",\"data_cids\":[{}],\"corrupt\":[{}],\
+             \"logs_converged\":{},\"provider_counts\":[{}],\"peers\":[{}]}}",
+            self.scenario,
+            join(self.data_cids.iter().map(|c| format!("\"{c}\"")).collect()),
+            join(self.corrupt.iter().map(|b| b.to_string()).collect()),
+            self.logs_converged,
+            join(self.provider_counts.iter().map(|n| n.to_string()).collect()),
+            join(peers),
+        )
+    }
+}
+
+/// One peer's probe: outcome plus the within-run convergence
+/// fingerprints (never compared across runs).
+struct PeerProbe {
+    outcome: PeerOutcome,
+    digest: [u8; 32],
+    heads: Vec<Cid>,
+    online: bool,
+}
+
+fn probe_node(n: &Node, ground_truth: &[(Cid, bool)], masked: bool) -> PeerOutcome {
+    PeerOutcome {
+        bootstrapped: n.is_bootstrapped(),
+        log_len: n.contributions.len(),
+        holds: ground_truth.iter().map(|(c, _)| n.holds_data(c)).collect(),
+        verdicts: ground_truth
+            .iter()
+            .map(|(c, _)| if masked { None } else { n.validations.verdict(c) })
+            .collect(),
+    }
+}
+
+fn assemble(name: &str, probes: Vec<PeerProbe>, ground_truth: &[(Cid, bool)]) -> ConvergenceReport {
+    let online: Vec<usize> =
+        probes.iter().enumerate().filter(|(_, p)| p.online).map(|(i, _)| i).collect();
+    let logs_converged = online.windows(2).all(|w| {
+        probes[w[0]].digest == probes[w[1]].digest && probes[w[0]].heads == probes[w[1]].heads
+    });
+    let provider_counts = (0..ground_truth.len())
+        .map(|k| online.iter().filter(|&&i| probes[i].outcome.holds[k]).count())
+        .collect();
+    ConvergenceReport {
+        scenario: name.to_string(),
+        data_cids: ground_truth.iter().map(|(c, _)| *c).collect(),
+        corrupt: ground_truth.iter().map(|(_, x)| *x).collect(),
+        logs_converged,
+        provider_counts,
+        peers: probes.into_iter().map(|p| p.outcome).collect(),
+    }
+}
+
+/// Extract a report from any [`ClusterView`] (the quiesced DES cluster,
+/// or the real cluster's reclaimed runners).
+pub fn report_from_view(
+    name: &str,
+    view: &impl ClusterView,
+    ground_truth: &[(Cid, bool)],
+    byzantine: &BTreeSet<usize>,
+) -> ConvergenceReport {
+    let probes = (0..view.len())
+        .map(|i| {
+            let n = view.node(i);
+            PeerProbe {
+                outcome: probe_node(n, ground_truth, byzantine.contains(&i)),
+                digest: n.log_digest(),
+                heads: n.log_heads(),
+                online: view.is_online(i),
+            }
+        })
+        .collect();
+    assemble(name, probes, ground_truth)
+}
+
+/// The schedule-derived fixed point both runs poll toward: everyone
+/// bootstrapped and log-converged; everyone except deliberate droppers
+/// holds every file; verdicts are ground truth for honest validating
+/// non-authors and `None` for authors, byzantine peers, and
+/// non-validating configurations.
+fn expected_report(
+    sc: &Scenario,
+    info: &ScheduleInfo,
+    ground_truth: &[(Cid, bool)],
+) -> ConvergenceReport {
+    let validating = sc.stats_validators && sc.cfg.auto_validate;
+    let peers = (0..info.final_peers)
+        .map(|i| PeerOutcome {
+            bootstrapped: true,
+            log_len: ground_truth.len(),
+            holds: ground_truth.iter().map(|_| !info.droppers.contains(&i)).collect(),
+            verdicts: ground_truth
+                .iter()
+                .enumerate()
+                .map(|(k, (_, corrupt))| {
+                    if !validating || info.byzantine.contains(&i) || info.authors[k] == i {
+                        None
+                    } else if *corrupt {
+                        Some(Verdict::Invalid)
+                    } else {
+                        Some(Verdict::Valid)
+                    }
+                })
+                .collect(),
+        })
+        .collect();
+    let holders = info.final_peers - info.droppers.len();
+    ConvergenceReport {
+        scenario: sc.name.to_string(),
+        data_cids: ground_truth.iter().map(|(c, _)| *c).collect(),
+        corrupt: ground_truth.iter().map(|(_, x)| *x).collect(),
+        logs_converged: true,
+        provider_counts: vec![holders; ground_truth.len()],
+        peers,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The DES side
+// ---------------------------------------------------------------------------
+
+/// Run the scenario in the DES and extract its convergence report,
+/// extending virtual time (up to [`SIM_EXTEND_SECS`]) until the report
+/// reaches the schedule-derived fixed point — `quiesce_poll` stops at
+/// the first invariant pass, which can precede the last verdict.
+pub fn run_sim(sc: &Scenario) -> Result<ConvergenceReport, String> {
+    let info = ScheduleInfo::of(sc);
+    let (report, mut cluster) = scenario::run_cluster(sc)?;
+    let expected = expected_report(sc, &info, &report.cids);
+    let deadline = cluster.now() + crate::util::time::Duration::from_secs(SIM_EXTEND_SECS);
+    let mut got = report_from_view(sc.name, &cluster, &report.cids, &info.byzantine);
+    while got != expected && cluster.now() < deadline {
+        cluster.run_for(crate::util::time::Duration::from_secs(2));
+        got = report_from_view(sc.name, &cluster, &report.cids, &info.byzantine);
+    }
+    Ok(got)
+}
+
+// ---------------------------------------------------------------------------
+// The real-TCP side
+// ---------------------------------------------------------------------------
+
+/// One loopback peer: a live [`TcpNode`] or a parked (crashed) runner.
+struct RealPeer {
+    id: PeerId,
+    region: Region,
+    node: Option<TcpNode<Node>>,
+    parked: Option<Node>,
+}
+
+impl RealPeer {
+    fn live(&self, i: usize) -> Result<&TcpNode<Node>, String> {
+        self.node
+            .as_ref()
+            .ok_or_else(|| format!("peer {i} is crashed but the schedule targets it"))
+    }
+}
+
+/// The real cluster after every node has been stopped and its runner
+/// reclaimed. Implements [`ClusterView`], so the *same*
+/// [`scenario::check_invariants`] the DES asserts runs against the real
+/// outcome too.
+pub struct Quiesced {
+    nodes: Vec<Node>,
+    ids: Vec<PeerId>,
+    index: HashMap<PeerId, usize>,
+}
+
+impl ClusterView for Quiesced {
+    fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    fn is_online(&self, _idx: usize) -> bool {
+        true // teardown restarted every crashed peer before the freeze
+    }
+    fn node(&self, idx: usize) -> &Node {
+        &self.nodes[idx]
+    }
+    fn peer_id(&self, idx: usize) -> PeerId {
+        self.ids[idx]
+    }
+    fn index_of(&self, id: PeerId) -> Option<usize> {
+        self.index.get(&id).copied()
+    }
+}
+
+fn crash(peers: &mut [RealPeer], i: usize) -> Result<(), String> {
+    if let Some(tcp) = peers[i].node.take() {
+        match tcp.shutdown() {
+            Some(runner) => peers[i].parked = Some(runner),
+            None => return Err(format!("peer {i}: event loop lost its runner")),
+        }
+    }
+    Ok(()) // crashing an already-crashed node is a no-op, as in the DES
+}
+
+fn restart(
+    peers: &mut [RealPeer],
+    i: usize,
+    dir: &Directory,
+    policy: &LinkPolicy,
+) -> Result<(), String> {
+    if let Some(runner) = peers[i].parked.take() {
+        let tcp = TcpNode::start_with_policy(runner, dir.clone(), policy.clone())
+            .map_err(|e| format!("restarting peer {i}: {e}"))?;
+        peers[i].node = Some(tcp);
+    }
+    Ok(()) // restarting an online node is a no-op, as in the DES
+}
+
+fn probe_live(
+    name: &str,
+    peers: &[RealPeer],
+    ground_truth: &[(Cid, bool)],
+    byzantine: &BTreeSet<usize>,
+) -> Result<ConvergenceReport, String> {
+    let mut probes = Vec::with_capacity(peers.len());
+    for (i, p) in peers.iter().enumerate() {
+        let tcp = p.live(i)?;
+        let gt = ground_truth.to_vec();
+        let masked = byzantine.contains(&i);
+        let (outcome, digest, heads) = tcp
+            .try_call_sync(move |n, _, _| {
+                (probe_node(n, &gt, masked), n.log_digest(), n.log_heads())
+            })
+            .map_err(|_| format!("peer {i} died mid-quiesce"))?;
+        probes.push(PeerProbe { outcome, digest, heads, online: true });
+    }
+    Ok(assemble(name, probes, ground_truth))
+}
+
+/// Mid-run safety checkpoint over the live cluster: per-node routing
+/// health, routing tables referencing only real members, and no
+/// conflicting honest verdicts — the same safety half
+/// `check_invariants` asserts at a DES checkpoint.
+fn check_real_checkpoint(
+    peers: &[RealPeer],
+    byzantine: &BTreeSet<usize>,
+    ground_truth: &[(Cid, bool)],
+) -> Result<(), String> {
+    let members: BTreeSet<PeerId> = peers.iter().map(|p| p.id).collect();
+    let mut verdicts: Vec<Vec<Option<Verdict>>> = Vec::new();
+    for (i, p) in peers.iter().enumerate() {
+        let Some(tcp) = &p.node else {
+            verdicts.push(vec![None; ground_truth.len()]);
+            continue; // crashed peers are skipped, as in the DES
+        };
+        let gt = ground_truth.to_vec();
+        let (routing, table_peers, verd) = tcp
+            .try_call_sync(move |n, _, _| {
+                (
+                    n.dht.table.check_invariants(),
+                    n.dht.table.peers(),
+                    gt.iter().map(|(c, _)| n.validations.verdict(c)).collect::<Vec<_>>(),
+                )
+            })
+            .map_err(|_| format!("peer {i} died at checkpoint"))?;
+        routing.map_err(|e| format!("node {i}: routing table: {e}"))?;
+        for peer in table_peers {
+            if !members.contains(&peer) {
+                return Err(format!("node {i}: routing table references unknown peer {peer:?}"));
+            }
+        }
+        verdicts.push(if byzantine.contains(&i) { vec![None; ground_truth.len()] } else { verd });
+    }
+    for (k, (cid, _)) in ground_truth.iter().enumerate() {
+        let holds = |v: Verdict| verdicts.iter().position(|vs| vs[k] == Some(v));
+        if let (Some(a), Some(b)) = (holds(Verdict::Valid), holds(Verdict::Invalid)) {
+            return Err(format!(
+                "quorum safety violated for {cid:?}: node {a} accepted Valid, \
+                 node {b} accepted Invalid"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn sleep_until(t: Instant) {
+    let now = Instant::now();
+    if t > now {
+        std::thread::sleep(t - now);
+    }
+}
+
+/// Run the scenario's lowered schedule against a real loopback cluster
+/// and extract its convergence report.
+///
+/// The run mirrors `scenario::run_cluster` step for step: identities
+/// and node seeds from `Rng::new(seed)` in spec order, schedule
+/// randomness (joiner identities, contribution bytes) from
+/// `Rng::new(seed ^ 0x5CE2A210_FA17_1A7E)` in stable schedule order,
+/// regions rotated the same way, faults applied at the same offsets
+/// (wall seconds standing in for virtual seconds), the same teardown
+/// (heal + restart everything), a quiesce poll toward the expected
+/// report, and finally the *same* `check_invariants` over the
+/// [`Quiesced`] runners.
+pub fn run_real(sc: &Scenario) -> Result<ConvergenceReport, String> {
+    assert!(sc.peers >= 2, "scenario needs a root and at least one peer");
+    let schedule = lower_schedule(sc).map_err(|e| e.to_string())?;
+    let info = ScheduleInfo::of(sc);
+    let dir = Directory::new();
+    let policy = LinkPolicy::new();
+    let mut id_rng = Rng::new(sc.seed);
+    let mut schedule_rng = Rng::new(sc.seed ^ 0x5CE2A210_FA17_1A7E);
+
+    // ---- Launch, with the DES's stagger --------------------------------
+    let t0 = Instant::now();
+    let mut peers: Vec<RealPeer> = Vec::new();
+    let mut root_id: Option<PeerId> = None;
+    for i in 0..sc.peers {
+        let id = PeerId::from_rng(&mut id_rng);
+        let node_seed = id_rng.next_u64();
+        let mut cfg = sc.cfg.clone();
+        cfg.bootstrap = if i == 0 {
+            root_id = Some(id);
+            None
+        } else {
+            root_id
+        };
+        let node = match scenario::validator_for(sc, i) {
+            Some(v) => Node::with_validator(id, cfg, node_seed, v),
+            None => Node::new(id, cfg, node_seed),
+        };
+        let region = if i == 0 { Region::AsiaEast2 } else { ALL[i % ALL.len()] };
+        sleep_until(t0 + Duration::from_nanos(sc.stagger.0) * i as u32);
+        let tcp = TcpNode::start_with_policy(node, dir.clone(), policy.clone())
+            .map_err(|e| format!("spawning peer {i}: {e}"))?;
+        peers.push(RealPeer { id, region, node: Some(tcp), parked: None });
+    }
+    let root_id = root_id.expect("peers >= 2");
+
+    // ---- Schedule execution --------------------------------------------
+    let events_t0 = t0 + to_wall(sc.warmup);
+    let mut cids: Vec<(Cid, bool)> = Vec::new();
+    for (at, action) in &schedule {
+        sleep_until(events_t0 + to_wall(*at));
+        match action {
+            RealAction::Block(links) => {
+                for &(x, y) in links {
+                    policy.block(peers[x].id, peers[y].id);
+                }
+            }
+            RealAction::Unblock(links) => {
+                for &(x, y) in links {
+                    policy.unblock(peers[x].id, peers[y].id);
+                }
+            }
+            RealAction::HealAll => policy.unblock_all(),
+            RealAction::Pace { a, b, delay } => {
+                policy.set_delay(peers[*a].id, peers[*b].id, *delay);
+                policy.set_delay(peers[*b].id, peers[*a].id, *delay);
+            }
+            RealAction::Crash(i) => crash(&mut peers, *i)?,
+            RealAction::Restart(i) => restart(&mut peers, *i, &dir, &policy)?,
+            RealAction::Outage(region) => {
+                let members: Vec<usize> = (0..peers.len())
+                    .filter(|&i| peers[i].region == *region)
+                    .collect();
+                for i in members {
+                    crash(&mut peers, i)?;
+                }
+            }
+            RealAction::Recover(region) => {
+                let members: Vec<usize> = (0..peers.len())
+                    .filter(|&i| peers[i].region == *region)
+                    .collect();
+                for i in members {
+                    restart(&mut peers, i, &dir, &policy)?;
+                }
+            }
+            RealAction::Join { n, region } => {
+                for _ in 0..*n {
+                    let id = PeerId::from_rng(&mut schedule_rng);
+                    let node_seed = schedule_rng.next_u64();
+                    let mut cfg = sc.cfg.clone();
+                    cfg.bootstrap = Some(root_id);
+                    let node = if sc.stats_validators {
+                        let v: Box<dyn Validator> = Box::new(StatsValidator::default());
+                        Node::with_validator(id, cfg, node_seed, v)
+                    } else {
+                        Node::new(id, cfg, node_seed)
+                    };
+                    let tcp = TcpNode::start_with_policy(node, dir.clone(), policy.clone())
+                        .map_err(|e| format!("spawning joiner: {e}"))?;
+                    peers.push(RealPeer { id, region: *region, node: Some(tcp), parked: None });
+                }
+            }
+            RealAction::TurnByzantine(i) => {
+                peers[*i]
+                    .live(*i)?
+                    .try_call_sync(|n, _, _| {
+                        n.set_validator(Box::new(ByzantineValidator::default()))
+                    })
+                    .map_err(|e| format!("peer {i}: {e}"))?;
+            }
+            RealAction::Contribute { node, workload, rows, frac } => {
+                let wl = (*workload as usize) % WORKLOADS.len();
+                let (file, _) = match frac {
+                    None => datagen::generate_contribution(&mut schedule_rng, wl as u32, *rows),
+                    Some(f) => datagen::generate_corrupt_contribution(
+                        &mut schedule_rng,
+                        wl as u32,
+                        *rows,
+                        *f,
+                    ),
+                };
+                let name = WORKLOADS[wl];
+                let cid = peers[*node]
+                    .live(*node)?
+                    .try_call_sync(move |n, now, out| {
+                        n.contribute(now, &file, name, "gcp-e2-standard-2", out)
+                    })
+                    .map_err(|e| format!("peer {node}: {e}"))?;
+                cids.push((cid, frac.is_some()));
+            }
+            RealAction::UnpinAndGc(i) => {
+                peers[*i]
+                    .live(*i)?
+                    .try_call_sync(|n, now, out| {
+                        n.unpin_contribution_data(now, out);
+                        n.collect_garbage();
+                    })
+                    .map_err(|e| format!("peer {i}: {e}"))?;
+            }
+            RealAction::SetRepair(on) => {
+                let on = *on;
+                for (i, p) in peers.iter().enumerate() {
+                    if let Some(tcp) = &p.node {
+                        tcp.try_call_sync(move |n, _, _| n.set_repair(on))
+                            .map_err(|e| format!("peer {i}: {e}"))?;
+                    }
+                }
+            }
+            RealAction::Checkpoint => {
+                check_real_checkpoint(&peers, &info.byzantine, &cids)
+                    .map_err(|e| format!("real '{}' checkpoint: {e}", sc.name))?;
+            }
+        }
+    }
+
+    // ---- Teardown: the DES's global heal -------------------------------
+    policy.clear();
+    for i in 0..peers.len() {
+        restart(&mut peers, i, &dir, &policy)?;
+    }
+
+    // ---- Quiesce: poll toward the expected fixed point -----------------
+    let expected = expected_report(sc, &info, &cids);
+    let deadline = Instant::now() + REAL_QUIESCE_CAP.min(to_wall(sc.quiesce));
+    loop {
+        let got = probe_live(sc.name, &peers, &cids, &info.byzantine)?;
+        if got == expected || Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(REAL_POLL);
+    }
+
+    // ---- Freeze and run the DES's own invariant checker ----------------
+    let mut nodes = Vec::with_capacity(peers.len());
+    let mut ids = Vec::with_capacity(peers.len());
+    for (i, p) in peers.into_iter().enumerate() {
+        let runner = match (p.node, p.parked) {
+            (Some(tcp), _) => tcp
+                .shutdown()
+                .ok_or_else(|| format!("peer {i}: event loop lost its runner"))?,
+            (None, Some(parked)) => parked,
+            (None, None) => return Err(format!("peer {i} has no runner to reclaim")),
+        };
+        ids.push(p.id);
+        nodes.push(runner);
+    }
+    let index = ids.iter().enumerate().map(|(i, id)| (*id, i)).collect();
+    let quiesced = Quiesced { nodes, ids, index };
+
+    let mut inv = sc.invariants.clone();
+    for b in &info.byzantine {
+        if !inv.byzantine.contains(b) {
+            inv.byzantine.push(*b);
+        }
+    }
+    scenario::check_invariants(&quiesced, &inv, cids.len(), &cids, Phase::Quiesce)
+        .map_err(|e| format!("real run of '{}' at quiesce: {e}", sc.name))?;
+
+    Ok(report_from_view(sc.name, &quiesced, &cids, &info.byzantine))
+}
+
+// ---------------------------------------------------------------------------
+// The differential check
+// ---------------------------------------------------------------------------
+
+fn first_divergence(sim: &ConvergenceReport, real: &ConvergenceReport) -> String {
+    if sim.data_cids != real.data_cids {
+        return "data CIDs differ — contribution bytes were not RNG-mirrored".into();
+    }
+    if sim.peers.len() != real.peers.len() {
+        return format!("peer count: sim={} real={}", sim.peers.len(), real.peers.len());
+    }
+    if sim.logs_converged != real.logs_converged {
+        return format!(
+            "logs_converged: sim={} real={}",
+            sim.logs_converged, real.logs_converged
+        );
+    }
+    for (i, (s, r)) in sim.peers.iter().zip(&real.peers).enumerate() {
+        if s != r {
+            return format!("peer {i}: sim={s:?} real={r:?}");
+        }
+    }
+    if sim.provider_counts != real.provider_counts {
+        return format!(
+            "provider counts: sim={:?} real={:?}",
+            sim.provider_counts, real.provider_counts
+        );
+    }
+    "reports differ".into()
+}
+
+/// Run `sc` in the DES and over real TCP; the two convergence reports
+/// must agree. On mismatch both reports are written to
+/// `PARITY_<scenario>_{sim,real}.json` (the CI failure artifact) and an
+/// error naming the first divergence is returned.
+pub fn differential(sc: &Scenario) -> Result<ConvergenceReport, String> {
+    assert!(sc.parity, "scenario '{}' is not tagged parity-eligible", sc.name);
+    let sim = run_sim(sc)?;
+    let real = run_real(sc)?;
+    if sim != real {
+        let slug: String = sc
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        let _ = std::fs::write(format!("PARITY_{slug}_sim.json"), sim.to_json());
+        let _ = std::fs::write(format!("PARITY_{slug}_real.json"), real.to_json());
+        return Err(format!(
+            "sim-vs-real divergence in '{}': {}",
+            sc.name,
+            first_divergence(&sim, &real)
+        ));
+    }
+    Ok(sim)
+}
+
+// ---------------------------------------------------------------------------
+// The loopback demo (shared by examples/tcp_cluster.rs and tests/tcp.rs)
+// ---------------------------------------------------------------------------
+
+/// The `tcp_cluster` end-to-end path: a root plus three joiners over
+/// loopback TCP, a contribution POSTed through the HTTP API, replicated
+/// to every peer through real sockets, status checked, all nodes torn
+/// down. Errors instead of hanging: every wait has a deadline.
+pub fn tcp_cluster_demo(verbose: bool) -> anyhow::Result<()> {
+    use crate::api::http::{http_get, http_post, HttpServer};
+    use crate::codec::json::Json;
+    use crate::peersdb::NodeConfig;
+    use std::sync::Arc;
+
+    let say = |msg: String| {
+        if verbose {
+            println!("{msg}");
+        }
+    };
+    let mut rng = Rng::new(3);
+    let dir = Directory::new();
+
+    let root_id = PeerId::from_rng(&mut rng);
+    let root = Arc::new(TcpNode::start(
+        Node::new(root_id, NodeConfig::default(), rng.next_u64()),
+        dir.clone(),
+    )?);
+    say(format!("root {} on {}", root_id.short(), root.addr));
+
+    let mut peers = Vec::new();
+    for i in 0..3 {
+        let id = PeerId::from_rng(&mut rng);
+        let cfg = NodeConfig { bootstrap: Some(root_id), ..NodeConfig::default() };
+        let node = Node::new(id, cfg, rng.next_u64());
+        let tcp = Arc::new(TcpNode::start(node, dir.clone())?);
+        say(format!("peer {i} {} on {}", id.short(), tcp.addr));
+        peers.push(tcp);
+    }
+
+    // Wait for bootstrap over real sockets.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let ready = peers.iter().filter(|p| p.call_sync(|n, _, _| n.is_bootstrapped())).count();
+        if ready == peers.len() {
+            break;
+        }
+        if Instant::now() > deadline {
+            anyhow::bail!("bootstrap timed out ({ready}/3 ready)");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    say("all peers bootstrapped over TCP".to_string());
+
+    // HTTP API on peer 0 (the prototype's access path).
+    let http = HttpServer::start(peers[0].clone())?;
+    say(format!("http api on http://{}", http.addr));
+    let (file, _) = datagen::generate_contribution(&mut rng, 2, 100);
+    let (code, body) = http_post(
+        http.addr,
+        "/contributions?workload=spark-pagerank&platform=loopback",
+        &file,
+    )?;
+    anyhow::ensure!(code == 200, "contribute failed: {code}");
+    let cid = Json::parse(std::str::from_utf8(&body)?)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .path("cid")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("no cid in response"))?
+        .to_string();
+    say(format!("contributed via HTTP: cid {}", &cid[..16]));
+
+    // The contribution replicates to every other peer through real
+    // sockets (pubsub → log entry fetch → data fetch).
+    let cid_parsed =
+        crate::cid::Cid::parse(&cid).ok_or_else(|| anyhow::anyhow!("unparseable cid"))?;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let have = peers
+            .iter()
+            .filter(|p| p.call_sync(move |n, _, _| n.get_file(&cid_parsed).is_some()))
+            .count();
+        let root_has = root.call_sync(move |n, _, _| n.get_file(&cid_parsed).is_some());
+        if have == peers.len() && root_has {
+            break;
+        }
+        if Instant::now() > deadline {
+            anyhow::bail!("replication timed out ({have}/3 peers + root {root_has})");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    say("replicated to root + all 3 peers over TCP".to_string());
+
+    let (code, body) = http_get(http.addr, "/status")?;
+    anyhow::ensure!(code == 200);
+    say(format!("status: {}", String::from_utf8_lossy(&body)));
+
+    http.stop();
+    for p in &peers {
+        p.shutdown();
+    }
+    root.shutdown();
+    say("tcp_cluster OK".to_string());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::bank;
+
+    #[test]
+    fn sim_only_faults_are_rejected_not_skipped() {
+        let rejected = [
+            Fault::SetLoss { loss: 0.1 },
+            Fault::SetLinkLoss { from: 0, to: 1, loss: 0.5 },
+            Fault::CpuStrain { node: 0, factor: 4 },
+            Fault::CpuRelief { node: 0 },
+            Fault::ForgeDhtReplies { node: 1, colluders: vec![2] },
+            Fault::StopForging { node: 1 },
+        ];
+        for fault in rejected {
+            let err = lower(&fault).expect_err("sim-only fault must not lower");
+            assert!(err.fault.contains(&format!("{fault:?}")[..8]), "{err}");
+            assert!(!err.why.is_empty());
+        }
+        // And a schedule containing one fails as a whole — no silent
+        // skipping of individual entries.
+        let sc = Scenario::named("has-sim-only", 1, 3)
+            .at(0, Fault::Contribute { node: 1, workload: 0, rows: 10 })
+            .at(1, Fault::SetLoss { loss: 0.2 });
+        assert!(lower_schedule(&sc).is_err());
+    }
+
+    #[test]
+    fn supported_faults_lower_faithfully() {
+        assert_eq!(
+            lower(&Fault::Partition { a: vec![0, 1], b: vec![2] }).unwrap(),
+            RealAction::Block(vec![(0, 2), (2, 0), (1, 2), (2, 1)]),
+        );
+        assert_eq!(
+            lower(&Fault::AsymmetricPartition { a: vec![0], b: vec![1] }).unwrap(),
+            RealAction::Block(vec![(1, 0)]), // A sees B: only b→a blocked
+        );
+        assert_eq!(lower(&Fault::Heal).unwrap(), RealAction::HealAll);
+        assert_eq!(lower(&Fault::Crash { node: 3 }).unwrap(), RealAction::Crash(3));
+        match lower(&Fault::SlowLink { a: 0, b: 5, factor: 4.0 }).unwrap() {
+            RealAction::Pace { a: 0, b: 5, delay } => {
+                assert_eq!(delay, Duration::from_millis(3 * PACE_MS_PER_FACTOR));
+            }
+            other => panic!("unexpected lowering: {other:?}"),
+        }
+        // Pacing is proportional but capped.
+        assert_eq!(pace_delay(1.0), Duration::ZERO);
+        assert_eq!(pace_delay(1000.0), Duration::from_millis(MAX_PACE_MS));
+        assert_eq!(
+            lower(&Fault::ContributeCorrupt { node: 2, workload: 1, rows: 60, frac: 0.9 })
+                .unwrap(),
+            RealAction::Contribute { node: 2, workload: 1, rows: 60, frac: Some(0.9) },
+        );
+    }
+
+    #[test]
+    fn lowered_schedules_keep_des_order() {
+        let sc = Scenario::named("ordering", 1, 4)
+            .at(5, Fault::Heal)
+            .at(0, Fault::Crash { node: 1 })
+            .at(0, Fault::Restart { node: 1 })
+            .at(2, Fault::Checkpoint);
+        let lowered = lower_schedule(&sc).unwrap();
+        let actions: Vec<&RealAction> = lowered.iter().map(|(_, a)| a).collect();
+        // Stable (at, declaration-order) sort, exactly like run_cluster.
+        assert_eq!(
+            actions,
+            vec![
+                &RealAction::Crash(1),
+                &RealAction::Restart(1),
+                &RealAction::Checkpoint,
+                &RealAction::HealAll,
+            ]
+        );
+    }
+
+    #[test]
+    fn eligibility_rejects_timing_dependent_fixed_points() {
+        // Sim-only fault in the schedule.
+        let sc = Scenario::named("x", 1, 3).at(0, Fault::SetLoss { loss: 0.1 });
+        assert!(parity_eligible(&sc).unwrap_err().contains("no real-TCP lowering"));
+
+        // Too large for a real-clock run.
+        let sc = Scenario::named("x", 1, 11);
+        assert!(parity_eligible(&sc).unwrap_err().contains("≤ 10"));
+
+        // Partial replication target without auto_pin: holder set races.
+        let mut sc = Scenario::named("x", 1, 5);
+        sc.cfg.auto_pin = false;
+        sc.cfg.replication_target = 3;
+        assert!(parity_eligible(&sc).unwrap_err().contains("replication_target"));
+
+        // auto_validate without stats validators.
+        let mut sc = Scenario::named("x", 1, 4);
+        sc.cfg.auto_validate = true;
+        assert!(parity_eligible(&sc).unwrap_err().contains("stats validators"));
+
+        // A dropper that did not author an earlier contribution.
+        let sc = Scenario::named("x", 1, 5)
+            .at(0, Fault::Contribute { node: 2, workload: 0, rows: 10 })
+            .at(5, Fault::UnpinAndGc { node: 1 });
+        assert!(parity_eligible(&sc).unwrap_err().contains("authored"));
+
+        // A contribution after a drop resurrects data on the dropper.
+        let sc = Scenario::named("x", 1, 5)
+            .at(0, Fault::Contribute { node: 1, workload: 0, rows: 10 })
+            .at(5, Fault::UnpinAndGc { node: 1 })
+            .at(6, Fault::Contribute { node: 2, workload: 1, rows: 10 });
+        assert!(parity_eligible(&sc).unwrap_err().contains("after an UnpinAndGc"));
+    }
+
+    #[test]
+    fn expected_report_masks_authors_and_byzantine() {
+        let mut sc = Scenario::named("mask", 7, 4);
+        sc.stats_validators = true;
+        sc.cfg.auto_validate = true;
+        sc.byzantine = vec![3];
+        let sc = sc
+            .at(0, Fault::Contribute { node: 1, workload: 0, rows: 10 })
+            .at(1, Fault::ContributeCorrupt { node: 2, workload: 1, rows: 10, frac: 0.9 });
+        let info = ScheduleInfo::of(&sc);
+        let gt = vec![(Cid::of_raw(b"a"), false), (Cid::of_raw(b"b"), true)];
+        let exp = expected_report(&sc, &info, &gt);
+        assert_eq!(exp.peers.len(), 4);
+        // Node 0: honest non-author — ground truth on both files.
+        assert_eq!(exp.peers[0].verdicts, vec![Some(Verdict::Valid), Some(Verdict::Invalid)]);
+        // Node 1 authored file 0 (no self-validation), judges file 1.
+        assert_eq!(exp.peers[1].verdicts, vec![None, Some(Verdict::Invalid)]);
+        // Node 2 judges file 0, authored file 1.
+        assert_eq!(exp.peers[2].verdicts, vec![Some(Verdict::Valid), None]);
+        // Node 3 is byzantine: fully masked.
+        assert_eq!(exp.peers[3].verdicts, vec![None, None]);
+        // Everyone holds everything (auto_pin default), logs converge.
+        assert!(exp.peers.iter().all(|p| p.holds == vec![true, true] && p.log_len == 2));
+        assert_eq!(exp.provider_counts, vec![4, 4]);
+    }
+
+    #[test]
+    fn every_tagged_bank_scenario_is_parity_eligible() {
+        let mut tagged = 0;
+        for sc in bank::all() {
+            if sc.parity {
+                parity_eligible(&sc).unwrap_or_else(|e| {
+                    panic!("bank scenario '{}' is tagged parity but ineligible: {e}", sc.name)
+                });
+                tagged += 1;
+            }
+        }
+        assert!(tagged >= 3, "the bank must carry ≥ 3 parity scenarios, found {tagged}");
+    }
+
+    #[test]
+    fn attack_bank_rows_are_rejected_by_lowering() {
+        // The eclipse-attack scenarios depend on forged DHT replies — a
+        // sim-only fault. Their ineligibility must come from an explicit
+        // lowering error, not from a missing tag.
+        let mut saw_unsupported = false;
+        for sc in bank::all() {
+            if !sc.parity && lower_schedule(&sc).is_err() {
+                saw_unsupported = true;
+            }
+        }
+        assert!(saw_unsupported, "expected at least one bank row with sim-only faults");
+    }
+
+    #[test]
+    fn convergence_report_json_is_wellformed_enough_for_artifacts() {
+        let report = ConvergenceReport {
+            scenario: "x".into(),
+            data_cids: vec![Cid::of_raw(b"a")],
+            corrupt: vec![true],
+            logs_converged: true,
+            provider_counts: vec![3],
+            peers: vec![PeerOutcome {
+                bootstrapped: true,
+                log_len: 1,
+                holds: vec![true],
+                verdicts: vec![Some(Verdict::Invalid)],
+            }],
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"scenario\":\"x\""));
+        assert!(json.contains("\"verdicts\":[\"Invalid\"]"));
+        assert!(json.contains("\"provider_counts\":[3]"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+}

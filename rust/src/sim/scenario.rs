@@ -58,7 +58,7 @@ use crate::modeling::datagen::{self, WORKLOADS};
 use crate::net::PeerId;
 use crate::peersdb::{Node, NodeConfig};
 use crate::sim::des::{Cluster, SimStats};
-use crate::sim::harness::{self, PeerSpec};
+use crate::sim::harness::{self, ClusterView, PeerSpec};
 use crate::sim::model::NetModel;
 use crate::sim::regions::{Region, ALL};
 use crate::stores::documents::Verdict;
@@ -283,6 +283,13 @@ pub struct Scenario {
     /// Node configuration template applied to every peer.
     pub cfg: NodeConfig,
     pub invariants: InvariantConfig,
+    /// Parity-eligible: the schedule lowers to real-TCP actions
+    /// (`sim::parity::lower_schedule` succeeds) *and* the outcome
+    /// converges to a timing-free fixed point, so the parity harness
+    /// replays this scenario over real sockets and differentially
+    /// compares `ConvergenceReport`s. Tagged scenarios are shape-guarded
+    /// by `sim::bank`'s tests; see `sim::parity::parity_eligible`.
+    pub parity: bool,
 }
 
 impl Scenario {
@@ -303,6 +310,7 @@ impl Scenario {
             stats_validators: false,
             cfg: NodeConfig::default(),
             invariants: InvariantConfig::default(),
+            parity: false,
         }
     }
 
@@ -587,7 +595,7 @@ pub fn run_replayed(sc: &Scenario) -> Result<ScenarioReport, String> {
     Ok(a)
 }
 
-fn validator_for(sc: &Scenario, i: usize) -> Option<Box<dyn Validator>> {
+pub(crate) fn validator_for(sc: &Scenario, i: usize) -> Option<Box<dyn Validator>> {
     if sc.byzantine.contains(&i) {
         Some(Box::new(ByzantineValidator::default()))
     } else if sc.stats_validators {
@@ -601,7 +609,7 @@ fn validator_for(sc: &Scenario, i: usize) -> Option<Box<dyn Validator>> {
 /// only (routing health, quorum safety); quiesce additionally asserts
 /// convergence, bootstrap completion, and block availability.
 pub fn check_invariants(
-    cluster: &Cluster<Node>,
+    cluster: &impl ClusterView,
     cfg: &InvariantConfig,
     expected_contributions: usize,
     ground_truth: &[(crate::cid::Cid, bool)],
@@ -749,7 +757,7 @@ pub fn check_invariants(
 /// set (online non-attacker peers ranked by XOR distance to the victim).
 /// An empty intersection means every lookup the victim can start is
 /// seeded exclusively with colluders — the attack succeeded.
-pub fn check_eclipse(cluster: &Cluster<Node>, ec: &EclipseInvariant) -> Result<(), String> {
+pub fn check_eclipse(cluster: &impl ClusterView, ec: &EclipseInvariant) -> Result<(), String> {
     let victim = ec.victim;
     let vkey = Key::from_peer(cluster.peer_id(victim));
     let k = cluster.node(victim).cfg.dht.k;
@@ -781,7 +789,7 @@ pub fn check_eclipse(cluster: &Cluster<Node>, ec: &EclipseInvariant) -> Result<(
 /// network destroyed data it was supposed to keep — re-replication either
 /// never ran or could not outpace the holder loss.
 pub fn check_availability(
-    cluster: &Cluster<Node>,
+    cluster: &impl ClusterView,
     av: &AvailabilityInvariant,
     byzantine: &[usize],
 ) -> Result<(), String> {
@@ -818,7 +826,7 @@ pub fn check_availability(
 /// negative control can assert on the count straight from the failure
 /// message.
 pub fn check_verdict_integrity(
-    cluster: &Cluster<Node>,
+    cluster: &impl ClusterView,
     ground_truth: &[(crate::cid::Cid, bool)],
     byzantine: &[usize],
 ) -> Result<(), String> {

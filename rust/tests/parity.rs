@@ -1,0 +1,146 @@
+//! Sim-to-real parity: the bank's parity-tagged fault schedules run
+//! twice — once in the DES, once against a real multi-threaded loopback
+//! TCP cluster — and the two timing-free `ConvergenceReport`s must be
+//! equal (`peersdb::sim::parity::differential`). Partitions lower to
+//! per-direction frame-drop rules, slow links to per-frame pacing,
+//! crashes to real thread stop/spawn, flash crowds to fresh node
+//! spawns; sim-only faults fail the lowering with an explicit
+//! `Unsupported` error (unit-tested in `sim::parity`), never a silent
+//! skip.
+//!
+//! On a divergence, `differential` writes the two reports to
+//! `PARITY_<scenario>_{sim,real}.json` in the test's working directory;
+//! the CI parity job uploads them as the failure artifact.
+//!
+//! The real halves spawn ~4 OS threads per peer and sleep through the
+//! schedule in wall-clock time, so each test runs tens of seconds and
+//! is release-gated like the big DES runs.
+
+use peersdb::sim::parity::{self, ConvergenceReport};
+use peersdb::sim::{bank, Scenario};
+use peersdb::stores::documents::Verdict;
+
+/// The quick schedule-shape assertions every differential test makes
+/// before trusting report equality: the run actually converged and every
+/// contribution reached every expected holder.
+fn assert_converged(sc: &Scenario, report: &ConvergenceReport, holders: usize) {
+    assert_eq!(report.scenario, sc.name);
+    assert!(report.logs_converged, "{}: logs did not converge", sc.name);
+    assert!(
+        report.peers.iter().all(|p| p.bootstrapped),
+        "{}: a peer never bootstrapped",
+        sc.name
+    );
+    for (k, &count) in report.provider_counts.iter().enumerate() {
+        assert_eq!(
+            count, holders,
+            "{}: contribution {k} ended on {count} holders, expected {holders}",
+            sc.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Differential runs (DES vs real TCP), one per parity-tagged bank row
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "real-clock TCP cluster run needs the release profile; CI runs `cargo test --release`"
+)]
+fn parity_partition_heal_sim_matches_real() {
+    let sc = bank::parity_partition();
+    let report = parity::differential(&sc).expect("sim and real runs must agree");
+    // 6 initial peers + 1 flash-crowd joiner, 4 contributions, all held
+    // everywhere (auto-pin) once the partition heals.
+    assert_eq!(report.peers.len(), 7);
+    assert_eq!(report.data_cids.len(), 4);
+    assert!(report.corrupt.iter().all(|c| !c));
+    assert_converged(&sc, &report, 7);
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "real-clock TCP cluster run needs the release profile; CI runs `cargo test --release`"
+)]
+fn parity_gc_repair_sim_matches_real() {
+    let sc = bank::parity_gc_repair();
+    let report = parity::differential(&sc).expect("sim and real runs must agree");
+    // 7 peers, 2 contributions, both authored (then dropped) by node 1:
+    // repair must leave every survivor holding both files and the
+    // dropper holding neither, in both worlds.
+    assert_eq!(report.peers.len(), 7);
+    assert_eq!(report.data_cids.len(), 2);
+    assert_converged(&sc, &report, 6);
+    assert!(
+        report.peers[1].holds.iter().all(|h| !h),
+        "the dropper resurrected its own data"
+    );
+    for (i, p) in report.peers.iter().enumerate() {
+        if i != 1 {
+            assert!(p.holds.iter().all(|h| *h), "peer {i} missing a repaired file");
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "real-clock TCP cluster run needs the release profile; CI runs `cargo test --release`"
+)]
+fn parity_quorum_sim_matches_real() {
+    let sc = bank::parity_quorum();
+    let report = parity::differential(&sc).expect("sim and real runs must agree");
+    assert_eq!(report.peers.len(), 7);
+    assert_eq!(report.data_cids.len(), 3);
+    assert_eq!(report.corrupt, vec![false, true, false]);
+    assert_converged(&sc, &report, 7);
+    // Every honest non-author holds the ground-truth verdict; authors
+    // never self-validate; the byzantine store is masked.
+    let authors = [1usize, 2, 5];
+    for (i, p) in report.peers.iter().enumerate() {
+        for (k, v) in p.verdicts.iter().enumerate() {
+            let expected = if i == 3 || authors[k] == i {
+                None
+            } else if report.corrupt[k] {
+                Some(Verdict::Invalid)
+            } else {
+                Some(Verdict::Valid)
+            };
+            assert_eq!(*v, expected, "peer {i} verdict for contribution {k}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The cheap half: lowering and eligibility guards that need no cluster
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_parity_row_lowers_and_sim_only_rows_do_not() {
+    let mut tagged = 0;
+    let mut rejected = 0;
+    for sc in bank::all() {
+        match parity::lower_schedule(&sc) {
+            Ok(actions) => {
+                assert_eq!(actions.len(), sc.events.len(), "{}: lowering dropped a fault", sc.name);
+                if sc.parity {
+                    tagged += 1;
+                    parity::parity_eligible(&sc)
+                        .unwrap_or_else(|e| panic!("{} tagged but ineligible: {e}", sc.name));
+                }
+            }
+            Err(e) => {
+                assert!(!sc.parity, "{}: tagged parity but not lowerable: {e}", sc.name);
+                rejected += 1;
+                // The rejection is explicit and self-explaining, not a
+                // silent skip.
+                assert!(!e.why.is_empty() && !e.fault.is_empty());
+            }
+        }
+    }
+    assert!(tagged >= 3, "expected ≥ 3 parity-tagged bank rows, found {tagged}");
+    assert!(rejected >= 1, "expected at least one sim-only bank row to be rejected");
+}

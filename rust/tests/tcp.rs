@@ -1,0 +1,14 @@
+//! The real-deployment end-to-end path as a test: the same loopback
+//! TCP cluster + HTTP API flow that `examples/tcp_cluster.rs`
+//! demonstrates, run quietly and asserted. Both entry points call
+//! `peersdb::sim::parity::tcp_cluster_demo`, so the example can never
+//! drift from what CI verifies.
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "real-clock TCP + HTTP round trip needs the release profile; CI runs `cargo test --release`"
+)]
+fn tcp_cluster_end_to_end() {
+    peersdb::sim::parity::tcp_cluster_demo(false).expect("tcp_cluster flow");
+}
