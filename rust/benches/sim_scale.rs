@@ -7,9 +7,9 @@
 //! distance-verified lookups under the same attack — the three
 //! striped-transfer scenarios: the slow-peer drag pair and the
 //! provider-death reassignment run — the delayed-honest-majority
-//! quorum-grace scenario, and the three parity-tagged rows that
-//! `tests/parity.rs` also replays over real TCP) in this process,
-//! measuring wall
+//! quorum-grace scenario, the three parity-tagged rows that
+//! `tests/parity.rs` also replays over real TCP, and the 1,006-peer
+//! city-scale churn scenario) in this process, measuring wall
 //! time and events/second, and emits the results as `BENCH_sim.json` —
 //! the machine-readable perf-trajectory artifact CI uploads on every
 //! run. Each record also carries the run's `SimStats` checksum: because
@@ -22,19 +22,60 @@
 //! heterogeneous-bandwidth scenarios double as a data-distribution
 //! measurement: the quality-vs-round-robin gap is read straight off the
 //! drag pair's records.
+//!
+//! Every record also carries the timer-wheel queue telemetry
+//! (`dead_events`, `peak_queue_len`) and the cluster-wide pubsub
+//! counters (`pubsub_published` / `_forwarded` / `_duplicates`), so the
+//! city-scale row doubles as the 1k-peer gossip-redundancy measurement
+//! the ROADMAP's mesh-overlay item starts from. The city-scale row
+//! additionally records the process peak-RSS high-water mark and
+//! **fails the bench** (and therefore CI) if its DES throughput drops
+//! below [`CITY_SCALE_EPS_FLOOR`].
 
 use peersdb::codec::Json;
 use peersdb::sim::bank;
 use peersdb::sim::scenario;
 use peersdb::util::bench::{print_environment, Table};
 
+/// CI-failing throughput floor for the city-scale row, in DES events
+/// per wall-clock second. Release builds on developer hardware run this
+/// scenario at well over a million events/s; the floor is set an order
+/// of magnitude below that so it only trips on a genuine event-queue
+/// regression (e.g. the wheel degenerating to per-push sorting), not on
+/// a slow CI runner.
+const CITY_SCALE_EPS_FLOOR: f64 = 100_000.0;
+
+/// Process peak-RSS high-water mark in KiB (`VmHWM` from
+/// `/proc/self/status`). This is a whole-process watermark, so it is
+/// only recorded on the largest scenario's row, where it approximates
+/// that scenario's footprint.
+#[cfg(target_os = "linux")]
+fn peak_rss_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            if let Some(kb) = rest.split_whitespace().next().and_then(|v| v.parse().ok()) {
+                return kb;
+            }
+        }
+    }
+    0
+}
+
+#[cfg(not(target_os = "linux"))]
+fn peak_rss_kb() -> u64 {
+    0
+}
+
 fn main() {
     print_environment("SIM SCALE: DES THROUGHPUT BASELINE (perf trajectory)");
     println!(
         "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves), \
          asymmetric half-open region, adversarial + defended eclipse, GC-pressure repair, \
-         the striped-transfer trio (slow-peer drag pair + provider death), and the \
-         delayed-honest-majority quorum-grace run\n",
+         the striped-transfer trio (slow-peer drag pair + provider death), the \
+         delayed-honest-majority quorum-grace run, and the 1,006-peer city-scale churn\n",
         bank::all().len()
     );
 
@@ -75,6 +116,21 @@ fn main() {
         }
         let repl_mean = if repl_n > 0 { repl_sum / repl_n as f64 } else { 0.0 };
 
+        // Cluster-wide pubsub counters: the duplicate fraction is the
+        // flood-gossip redundancy measurement the mesh-overlay ROADMAP
+        // item starts from (most telling on the 1,006-peer row).
+        let mut pubsub_published = 0u64;
+        let mut pubsub_forwarded = 0u64;
+        let mut pubsub_duplicates = 0u64;
+        for i in 0..cluster.len() {
+            let (p, f, d) = cluster.node(i).pubsub_stats();
+            pubsub_published += p;
+            pubsub_forwarded += f;
+            pubsub_duplicates += d;
+        }
+        let pubsub_redundancy = pubsub_duplicates as f64
+            / (pubsub_forwarded + pubsub_duplicates).max(1) as f64;
+
         table.row(&[
             name.to_string(),
             report.peers.to_string(),
@@ -85,23 +141,36 @@ fn main() {
             format!("{:.0}", report.end.as_secs_f64()),
             checksum.clone(),
         ]);
-        records.push(
-            Json::obj()
-                .set("name", name)
-                .set("peers", report.peers)
-                .set("contributions", report.contributions)
-                .set("events_processed", events)
-                .set("msgs_sent", report.stats.msgs_sent)
-                .set("bytes_sent", report.stats.bytes_sent)
-                .set("wall_ms", wall * 1e3)
-                .set("events_per_sec", eps)
-                .set("replication_ms_mean", repl_mean)
-                .set("replication_ms_max", repl_max)
-                .set("chunks_striped", report.stats.chunks_striped)
-                .set("transfer_reassignments", report.stats.transfer_reassignments)
-                .set("virtual_secs", report.end.as_secs_f64())
-                .set("stats_checksum", checksum),
-        );
+        let mut record = Json::obj()
+            .set("name", name)
+            .set("peers", report.peers)
+            .set("contributions", report.contributions)
+            .set("events_processed", events)
+            .set("msgs_sent", report.stats.msgs_sent)
+            .set("bytes_sent", report.stats.bytes_sent)
+            .set("wall_ms", wall * 1e3)
+            .set("events_per_sec", eps)
+            .set("replication_ms_mean", repl_mean)
+            .set("replication_ms_max", repl_max)
+            .set("chunks_striped", report.stats.chunks_striped)
+            .set("transfer_reassignments", report.stats.transfer_reassignments)
+            .set("dead_events", report.stats.dead_events)
+            .set("peak_queue_len", report.stats.peak_queue_len)
+            .set("pubsub_published", pubsub_published)
+            .set("pubsub_forwarded", pubsub_forwarded)
+            .set("pubsub_duplicates", pubsub_duplicates)
+            .set("pubsub_redundancy", pubsub_redundancy)
+            .set("virtual_secs", report.end.as_secs_f64())
+            .set("stats_checksum", checksum);
+        if name == "city-scale" {
+            record = record.set("peak_rss_kb", peak_rss_kb());
+            assert!(
+                eps >= CITY_SCALE_EPS_FLOOR,
+                "city-scale DES throughput regressed: {eps:.0} events/s \
+                 < floor {CITY_SCALE_EPS_FLOOR:.0}"
+            );
+        }
+        records.push(record);
     }
     table.print();
     println!(

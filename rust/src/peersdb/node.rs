@@ -80,6 +80,19 @@ pub struct NodeConfig {
     /// probes, no extra RNG draws — so schedules that predate the loop
     /// replay bit-identically.
     pub repair_interval: Duration,
+    /// Per-node phase jitter applied to the repair cadence, as a
+    /// fraction of `repair_interval` in `[0, 1]`. With a shared
+    /// interval and no jitter every node fires its provider-count
+    /// probes on the same phase — a thundering herd of
+    /// `find_providers_full` lookups that at city scale lands a
+    /// cluster-wide synchronized burst each cycle. A nonzero jitter
+    /// offsets each node's *first* fire by a deterministic hash of its
+    /// peer id (no RNG draw — consuming randomness here would shift
+    /// every later draw and break replay comparisons), spreading the
+    /// herd across `jitter · repair_interval` while preserving the
+    /// per-node cadence. Default `0.0`: pre-jitter schedules replay
+    /// bit-identically.
+    pub repair_jitter: f64,
     /// Provider-record floor the repair loop drives each contribution
     /// toward. Distinct from the *invariant checker's* target
     /// (`sim::scenario::InvariantConfig::replication_target`): this is
@@ -116,6 +129,7 @@ impl Default for NodeConfig {
             proc_cost_per_kb: Duration::from_micros(8),
             anti_entropy_every_ticks: 20,
             repair_interval: Duration::ZERO,
+            repair_jitter: 0.0,
             replication_target: 3,
             blocking_validation: false,
         }
@@ -336,6 +350,24 @@ impl Node {
         let gate = Gate::new(&cfg.passphrase);
         let topic = StoreAddress(cfg.store_name.clone()).topic();
         let batch = BatchQueue::new(cfg.batch_size);
+        // Repair-phase jitter: a pure FxHash of the peer id modulo the
+        // jitter span — deterministic per node, zero RNG draws (drawing
+        // from `rng` here would shift every subsequent draw and break
+        // replay comparisons against unjittered recordings). Seeding
+        // `last_repair` with the phase delays only the *first* cycle;
+        // the cadence afterwards is exactly `repair_interval`.
+        let repair_phase = {
+            let span =
+                (cfg.repair_interval.0 as f64 * cfg.repair_jitter.clamp(0.0, 1.0)) as u64;
+            if span == 0 {
+                0
+            } else {
+                use std::hash::Hasher;
+                let mut h = crate::util::fxhash::FxHasher::default();
+                h.write(&id.0);
+                h.finish() % span
+            }
+        };
         Node {
             id,
             gate,
@@ -368,7 +400,7 @@ impl Node {
             contribution_meta: HashMap::new(),
             retry_purposes: HashMap::new(),
             repair_enabled: true,
-            last_repair: Nanos::ZERO,
+            last_repair: Nanos(repair_phase),
             repair_probes: HashMap::new(),
             probing: BTreeSet::new(),
             repair_fetches: BTreeSet::new(),
@@ -393,6 +425,33 @@ impl Node {
 
     pub fn is_bootstrapped(&self) -> bool {
         matches!(self.bootstrap, Bootstrap::Root | Bootstrap::Done)
+    }
+
+    /// Drop quality-table entries for peers this node no longer tracks
+    /// anywhere — neither in its routing table nor as a provider (or
+    /// assigned peer, or legacy source) of any active data fetch. Runs
+    /// on the anti-entropy cadence so churn can't leak one entry per
+    /// departed peer; pure bookkeeping (no sends, no RNG draws), hence
+    /// replay-inert for every recorded schedule.
+    fn prune_quality(&mut self) {
+        if self.quality.is_empty() {
+            return;
+        }
+        let mut known: BTreeSet<PeerId> = self.dht.table.peers().into_iter().collect();
+        for f in self.data_fetches.values() {
+            known.extend(f.providers.iter().copied());
+            known.extend(f.in_flight.values().copied());
+            known.insert(f.source);
+        }
+        self.quality.retain_known(&known);
+    }
+
+    /// Flood-pubsub counters `(published, forwarded, duplicates)`.
+    /// `benches/sim_scale.rs` folds these into the city-scale record:
+    /// `duplicates / msgs_delivered` is the redundancy factor the
+    /// ROADMAP's gossip-mesh item is chartered to beat.
+    pub fn pubsub_stats(&self) -> (u64, u64, u64) {
+        (self.pubsub.published, self.pubsub.forwarded, self.pubsub.duplicates)
     }
 
     // ======================================================================
@@ -1869,6 +1928,10 @@ impl Runner for Node {
                         self.metrics.inc("anti_entropy_syncs");
                     }
                     self.retry_missing_data(now, out);
+                    // Quality-table sweep rides the same cadence: pure
+                    // bookkeeping (no sends, no RNG), so it is
+                    // replay-inert for every recorded schedule.
+                    self.prune_quality();
                 }
                 // Availability repair: probe provider counts and mend
                 // under-replication (no-op until bootstrapped — a
@@ -1900,5 +1963,65 @@ impl Runner for Node {
     fn processing_cost(&self, msg: &Message) -> Duration {
         let kb = crate::net::WireSize::wire_size(msg) as u64 / 1024;
         self.cfg.proc_cost_per_msg + Duration(self.cfg.proc_cost_per_kb.0 * kb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pid(n: u64) -> PeerId {
+        let mut rng = Rng::new(n);
+        PeerId::from_rng(&mut rng)
+    }
+
+    #[test]
+    fn repair_phase_defaults_to_zero() {
+        // Jitter off (the default) must leave `last_repair` at the
+        // epoch — bit-identical to every pre-jitter recording.
+        let node = Node::new(pid(1), NodeConfig::default(), 7);
+        assert_eq!(node.last_repair, Nanos::ZERO);
+        // Jitter with no repair interval is also a no-op (span 0).
+        let cfg = NodeConfig { repair_jitter: 0.5, ..NodeConfig::default() };
+        let node = Node::new(pid(1), cfg, 7);
+        assert_eq!(node.last_repair, Nanos::ZERO);
+    }
+
+    #[test]
+    fn repair_phase_is_deterministic_and_spread() {
+        let cfg = NodeConfig {
+            repair_interval: Duration::from_secs(60),
+            repair_jitter: 0.5,
+            ..NodeConfig::default()
+        };
+        let span = (cfg.repair_interval.0 as f64 * cfg.repair_jitter) as u64;
+        let a = Node::new(pid(1), cfg.clone(), 7);
+        let a2 = Node::new(pid(1), cfg.clone(), 999);
+        let b = Node::new(pid(2), cfg.clone(), 7);
+        // Pure function of the peer id: seed-independent, id-sensitive.
+        assert_eq!(a.last_repair, a2.last_repair, "phase must not consume the RNG");
+        assert_ne!(a.last_repair, b.last_repair, "distinct ids spread phases");
+        for n in [&a, &b] {
+            assert!(n.last_repair.0 < span, "phase {} outside span {span}", n.last_repair.0);
+        }
+    }
+
+    #[test]
+    fn prune_quality_keeps_routing_table_and_fetch_peers() {
+        let mut node = Node::new(pid(1), NodeConfig::default(), 7);
+        let (routed, provider, departed) = (pid(2), pid(3), pid(4));
+        node.dht.table.touch(routed, Nanos::ZERO);
+        let mut fetch = DataFetch::new(provider);
+        fetch.providers.push(provider);
+        let root = crate::cid::Cid::of_raw(b"root");
+        node.data_fetches.insert(root, fetch);
+        node.quality.observe_block(routed, 10.0);
+        node.quality.observe_block(provider, 20.0);
+        node.quality.observe_block(departed, 30.0);
+        assert_eq!(node.quality.len(), 3);
+        node.prune_quality();
+        assert_eq!(node.quality.len(), 2, "only the departed peer is dropped");
+        assert_eq!(node.quality.cost(&routed), 10.0);
+        assert_eq!(node.quality.cost(&provider), 20.0);
     }
 }

@@ -10,7 +10,7 @@
 //! the lowest estimated cost weighted by its current load.
 
 use crate::net::PeerId;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Chunk-assignment policy for multi-chunk file fetches
 /// ([`crate::peersdb::NodeConfig::chunk_scheduler`]).
@@ -53,6 +53,13 @@ const TIMEOUT_PENALTY_MS: f64 = 2_000.0;
 /// fetcher's point of view: the peer cannot provide this content).
 const DONTHAVE_PENALTY_MS: f64 = 500.0;
 
+/// Hard cap on tracked peers. Pre-cap, the table leaked one entry per
+/// peer ever fetched from — under city-scale churn that is every peer
+/// that ever existed. At the cap, admitting a new peer evicts the
+/// worst-cost entry: the peer least likely to win a chunk assignment is
+/// the one whose stale score is cheapest to re-learn.
+const MAX_TRACKED: usize = 256;
+
 /// Observed statistics for one peer.
 #[derive(Clone, Copy, Debug, Default)]
 struct PeerScore {
@@ -94,9 +101,24 @@ struct PeerScore {
 /// knob off) cannot perturb replay determinism. Iteration is over a
 /// `BTreeMap` keyed by [`PeerId`] so any future ordered walk is
 /// deterministic too.
+///
+/// ## Bounds
+///
+/// The table is bounded two ways, so churn cannot leak one entry per
+/// peer that ever existed: a hard [`MAX_TRACKED`] cap with
+/// deterministic worst-cost eviction on admission, and the
+/// [`PeerQuality::retain_known`] sweep the owning node runs on its
+/// anti-entropy cadence to drop peers it no longer tracks anywhere.
 #[derive(Clone, Debug, Default)]
 pub struct PeerQuality {
     scores: BTreeMap<PeerId, PeerScore>,
+}
+
+/// Cost of a recorded score: observed EWMA (or the prior) plus the
+/// accumulated failure penalty.
+fn score_cost(s: &PeerScore) -> f64 {
+    let base = if s.observed { s.ewma_ms } else { DEFAULT_COST_MS };
+    base + s.penalty_ms
 }
 
 impl PeerQuality {
@@ -104,9 +126,33 @@ impl PeerQuality {
         PeerQuality::default()
     }
 
+    /// Entry for `peer`, admitting it under the [`MAX_TRACKED`] cap: a
+    /// full table evicts its worst-cost entry first (ties keep evicting
+    /// the smallest [`PeerId`] — strict `>` over the ordered walk —
+    /// so eviction is deterministic and replay-safe).
+    fn score_mut(&mut self, peer: PeerId) -> &mut PeerScore {
+        if !self.scores.contains_key(&peer) && self.scores.len() >= MAX_TRACKED {
+            let mut worst: Option<(PeerId, f64)> = None;
+            for (id, s) in &self.scores {
+                let c = score_cost(s);
+                let beats = match &worst {
+                    None => true,
+                    Some((_, w)) => c > *w,
+                };
+                if beats {
+                    worst = Some((*id, c));
+                }
+            }
+            if let Some((id, _)) = worst {
+                self.scores.remove(&id);
+            }
+        }
+        self.scores.entry(peer).or_default()
+    }
+
     /// A verified block arrived from `peer` after `latency_ms`.
     pub fn observe_block(&mut self, peer: PeerId, latency_ms: f64) {
-        let s = self.scores.entry(peer).or_default();
+        let s = self.score_mut(peer);
         if s.observed {
             s.ewma_ms = EWMA_ALPHA * latency_ms + (1.0 - EWMA_ALPHA) * s.ewma_ms;
         } else {
@@ -118,12 +164,27 @@ impl PeerQuality {
 
     /// A request to `peer` timed out.
     pub fn observe_timeout(&mut self, peer: PeerId) {
-        self.scores.entry(peer).or_default().penalty_ms += TIMEOUT_PENALTY_MS;
+        self.score_mut(peer).penalty_ms += TIMEOUT_PENALTY_MS;
     }
 
     /// `peer` answered `DontHave` (or served unverifiable content).
     pub fn observe_dont_have(&mut self, peer: PeerId) {
-        self.scores.entry(peer).or_default().penalty_ms += DONTHAVE_PENALTY_MS;
+        self.score_mut(peer).penalty_ms += DONTHAVE_PENALTY_MS;
+    }
+
+    /// Drop `peer`'s entry (the peer departed or was evicted from every
+    /// view this node holds; its next appearance starts from the prior).
+    pub fn forget(&mut self, peer: &PeerId) {
+        self.scores.remove(peer);
+    }
+
+    /// Drop every entry whose peer is not in `known` — the churn-proof
+    /// sweep [`crate::peersdb::Node`] runs on its anti-entropy cadence
+    /// with the union of its routing table and active fetch providers,
+    /// so departed peers cannot accumulate (pure bookkeeping: no sends,
+    /// no randomness, replay-inert).
+    pub fn retain_known(&mut self, known: &BTreeSet<PeerId>) {
+        self.scores.retain(|id, _| known.contains(id));
     }
 
     /// Estimated cost of requesting a chunk from `peer`, in
@@ -131,10 +192,7 @@ impl PeerQuality {
     /// optimistic prior.
     pub fn cost(&self, peer: &PeerId) -> f64 {
         match self.scores.get(peer) {
-            Some(s) => {
-                let base = if s.observed { s.ewma_ms } else { DEFAULT_COST_MS };
-                base + s.penalty_ms
-            }
+            Some(s) => score_cost(s),
             None => DEFAULT_COST_MS,
         }
     }
@@ -204,6 +262,58 @@ mod tests {
             q.observe_block(p, 50.0);
         }
         assert!(q.cost(&p) < 55.0, "penalty decays to noise: {}", q.cost(&p));
+    }
+
+    #[test]
+    fn churn_loop_leaves_the_table_bounded() {
+        // Regression: pre-cap, 10,000 distinct peers left 10,000
+        // entries — the per-peer leak that bites at city scale.
+        let mut q = PeerQuality::new();
+        for n in 0..10_000u64 {
+            let p = peer(n + 100);
+            q.observe_block(p, 50.0 + (n % 7) as f64);
+            if n % 3 == 0 {
+                q.observe_timeout(p);
+            }
+        }
+        assert!(q.len() <= MAX_TRACKED, "table leaked: {} entries", q.len());
+        assert_eq!(q.len(), MAX_TRACKED, "cap admits up to the cap");
+    }
+
+    #[test]
+    fn admission_evicts_the_worst_cost_entry() {
+        let mut q = PeerQuality::new();
+        let cheap = peer(1);
+        q.observe_block(cheap, 10.0);
+        let expensive = peer(2);
+        q.observe_block(expensive, 10.0);
+        q.observe_timeout(expensive); // worst cost in the table
+        // Fill to the cap with middling peers…
+        for n in 0..MAX_TRACKED as u64 {
+            q.observe_block(peer(n + 100), 200.0);
+        }
+        // …which must have evicted `expensive` (worst-first), never
+        // `cheap`.
+        assert!(q.len() <= MAX_TRACKED);
+        assert_eq!(q.cost(&cheap), 10.0, "best entry survives eviction");
+        assert_eq!(q.cost(&expensive), DEFAULT_COST_MS, "worst entry was evicted");
+    }
+
+    #[test]
+    fn forget_and_retain_known_drop_departed_peers() {
+        let mut q = PeerQuality::new();
+        let (a, b, c) = (peer(1), peer(2), peer(3));
+        q.observe_block(a, 20.0);
+        q.observe_block(b, 30.0);
+        q.observe_block(c, 40.0);
+        q.forget(&b);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.cost(&b), DEFAULT_COST_MS);
+        let known: std::collections::BTreeSet<PeerId> = [a].into_iter().collect();
+        q.retain_known(&known);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.cost(&a), 20.0);
+        assert_eq!(q.cost(&c), DEFAULT_COST_MS);
     }
 
     #[test]

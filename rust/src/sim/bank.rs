@@ -9,7 +9,7 @@
 //! signal the perf-trajectory artifact is meant to carry.
 
 use crate::peersdb::{ChunkScheduler, NodeConfig};
-use crate::sim::regions::Region;
+use crate::sim::regions::{Region, ALL};
 use crate::sim::scenario::{
     AvailabilityInvariant, EclipseInvariant, Fault, Scenario, VerdictIntegrityInvariant,
 };
@@ -678,13 +678,74 @@ pub fn parity_quorum() -> Scenario {
         .at(6, Fault::Contribute { node: 5, workload: 2, rows: 60 })
 }
 
+/// Initial peer count in [`city_scale`].
+pub const CITY_INITIAL: usize = 256;
+/// Flash-crowd wave size in [`city_scale`] — one wave lands per region,
+/// so the final population is `CITY_INITIAL + 6 * CITY_WAVE` = 1,006.
+pub const CITY_WAVE: usize = 125;
+/// Number of crash/restart churn cycles in [`city_scale`]. Targets walk
+/// `1 + (7k) % 200` over the initial population — 7 is coprime to 200,
+/// so all forty targets are distinct and node 0 (the bootstrap root) is
+/// never touched.
+pub const CITY_CHURN_CYCLES: u64 = 40;
+
+/// 21. City-scale churn — the ROADMAP's order-of-magnitude proof point
+/// for the timer-wheel DES core: 256 initial peers rotated across all
+/// six regions, then six flash crowds of 125 (one per region) land in
+/// the first minute for 1,006 peers total. While the crowds are still
+/// bootstrapping, forty crash/restart cycles sweep the initial
+/// population (each victim down for 25 s, up to ~15 concurrently
+/// offline), then an entire region blacks out for 30 s and heals.
+/// Contribution traffic runs before, during, and after the outage.
+/// Repair runs on a 60 s cadence with 50% deterministic per-node phase
+/// jitter — this is the bank's replay-checked jittered scenario, and
+/// the churn is what exercises tombstone compaction and the
+/// [`PeerQuality`](crate::peersdb::PeerQuality) bounds under sustained
+/// join/leave. Standard invariant set at quiesce.
+pub fn city_scale() -> Scenario {
+    let mut sc = Scenario::named("city-scale", 2323, CITY_INITIAL);
+    sc.stagger = Duration::from_millis(50);
+    sc.warmup = Duration::from_secs(30);
+    sc.quiesce = Duration::from_secs(900);
+    sc.quiesce_poll = Duration::from_secs(15);
+    sc.cfg.repair_interval = Duration::from_secs(60);
+    sc.cfg.repair_jitter = 0.5;
+    // Contributions from initial nodes outside the churn target set;
+    // node 5 (AustraliaSoutheast1) keeps publishing mid-outage.
+    sc = sc
+        .at(0, Fault::Contribute { node: 2, workload: 0, rows: 20 })
+        .at(5, Fault::Contribute { node: 3, workload: 1, rows: 20 });
+    // Six flash-crowd waves, one per region, 10 s apart.
+    for (w, region) in ALL.iter().enumerate() {
+        sc = sc.at(10 * w as u64, Fault::FlashCrowd { n: CITY_WAVE, region: *region });
+    }
+    sc = sc
+        .at(15, Fault::Contribute { node: 5, workload: 2, rows: 20 })
+        .at(45, Fault::Contribute { node: 9, workload: 3, rows: 20 });
+    // Sustained churn: one crash per second for 40 s, each node
+    // restarted 25 s later (all restarts land before the outage).
+    for k in 0..CITY_CHURN_CYCLES {
+        let node = 1 + (7 * k as usize) % 200;
+        sc = sc
+            .at(60 + k, Fault::Crash { node })
+            .at(85 + k, Fault::Restart { node });
+    }
+    sc.at(70, Fault::Contribute { node: 10, workload: 4, rows: 20 })
+        .at(110, Fault::Checkpoint)
+        .at(130, Fault::Outage { region: Region::EuropeWest3 })
+        .at(135, Fault::Contribute { node: 5, workload: 5, rows: 20 })
+        .at(160, Fault::Recover { region: Region::EuropeWest3 })
+        .at(165, Fault::Contribute { node: 10, workload: 6, rows: 20 })
+}
+
 /// Every replayable bank scenario, in canonical order: the seven
 /// original fault scenarios, the multi-region scale-out headline, the
 /// two directional-plane scenarios (half-open region, eclipse), the two
 /// GC-pressure repair scenarios, the defended eclipse, the three
 /// striped-transfer scenarios (drag pair + provider death), the
-/// quorum-grace delayed-honest-majority scenario, and the three
-/// parity-tagged scenarios the sim-to-real harness replays over TCP.
+/// quorum-grace delayed-honest-majority scenario, the three
+/// parity-tagged scenarios the sim-to-real harness replays over TCP,
+/// and the 1,006-peer city-scale churn scenario.
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -707,6 +768,7 @@ pub fn all() -> Vec<Scenario> {
         parity_partition(),
         parity_gc_repair(),
         parity_quorum(),
+        city_scale(),
     ]
 }
 
@@ -807,6 +869,98 @@ mod tests {
             }
             assert_eq!(sc.cfg.dht.lookup_paths, 1, "{}: multipath leaked in", sc.name);
             assert!(!sc.cfg.dht.verify_peers, "{}: verification leaked in", sc.name);
+        }
+    }
+
+    #[test]
+    fn jitter_default_off_outside_city_scale() {
+        // Replay-compatibility guard: repair-phase jitter shifts every
+        // repair timestamp, so any pre-existing scenario picking it up
+        // would change its recorded SimStats checksum.
+        for sc in all() {
+            if sc.name == "city-scale" {
+                assert!(sc.cfg.repair_jitter > 0.0, "city-scale must jitter repair");
+                continue;
+            }
+            assert_eq!(sc.cfg.repair_jitter, 0.0, "{}: repair jitter leaked in", sc.name);
+        }
+    }
+
+    #[test]
+    fn city_scale_shape_is_consistent() {
+        let sc = city_scale();
+        // Population: 256 initial + one 125-peer wave per region ≥ 1,000.
+        let joins: usize = sc
+            .events
+            .iter()
+            .map(|e| match e.fault {
+                Fault::FlashCrowd { n, .. } => n,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(sc.peers, CITY_INITIAL);
+        assert_eq!(joins, 6 * CITY_WAVE);
+        assert!(sc.peers + joins >= 1000, "city-scale must reach 1,000 peers");
+        // One wave per region, no region hit twice.
+        let mut regions: Vec<Region> = sc
+            .events
+            .iter()
+            .filter_map(|e| match e.fault {
+                Fault::FlashCrowd { region, .. } => Some(region),
+                _ => None,
+            })
+            .collect();
+        regions.sort_unstable();
+        regions.dedup();
+        assert_eq!(regions.len(), ALL.len(), "a region missed its flash crowd");
+        // Churn: every crash has a later restart of the same node, all
+        // targets are distinct initial peers, the bootstrap root is
+        // untouched, and churn fully precedes the regional outage.
+        let crashes: Vec<(u64, usize)> = sc
+            .events
+            .iter()
+            .filter_map(|e| match e.fault {
+                Fault::Crash { node } => Some((e.at.0, node)),
+                _ => None,
+            })
+            .collect();
+        let restarts: Vec<(u64, usize)> = sc
+            .events
+            .iter()
+            .filter_map(|e| match e.fault {
+                Fault::Restart { node } => Some((e.at.0, node)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(crashes.len(), CITY_CHURN_CYCLES as usize);
+        assert_eq!(restarts.len(), crashes.len());
+        let outage_at = sc
+            .events
+            .iter()
+            .find_map(|e| match e.fault {
+                Fault::Outage { .. } => Some(e.at.0),
+                _ => None,
+            })
+            .expect("regional outage present");
+        let mut targets: Vec<usize> = Vec::new();
+        for ((c_at, c_node), (r_at, r_node)) in crashes.iter().zip(&restarts) {
+            assert_eq!(c_node, r_node, "crash/restart pairing drifted");
+            assert!(c_at < r_at, "restart precedes its crash");
+            assert!(*r_at < outage_at, "churn overlaps the regional outage");
+            assert_ne!(*c_node, 0, "the bootstrap root must never churn");
+            assert!(*c_node < CITY_INITIAL, "churn must target initial peers");
+            targets.push(*c_node);
+        }
+        targets.sort_unstable();
+        targets.dedup();
+        assert_eq!(targets.len(), crashes.len(), "churn re-crashed a node");
+        // Contributions only come from initial peers outside the churn
+        // set, so no publish races its author's own restart.
+        for e in &sc.events {
+            if let Fault::Contribute { node, .. } = e.fault {
+                assert!(node < CITY_INITIAL, "contributor joined mid-run");
+                assert!(!targets.contains(&node), "contributor {node} is churned");
+            }
         }
     }
 

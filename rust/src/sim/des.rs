@@ -23,9 +23,9 @@
 use crate::net::{Outbox, PeerId, Runner};
 use crate::sim::model::NetModel;
 use crate::sim::regions::Region;
+use crate::sim::wheel::{Scheduled, TimerWheel};
 use crate::util::time::{Duration, Nanos};
 use crate::util::{FxHashMap, Rng};
-use std::collections::BinaryHeap;
 
 /// Aggregate transport statistics for a simulation run.
 ///
@@ -79,6 +79,17 @@ pub struct SimStats {
     /// peers that contradict the scenario's contribution schedule (a
     /// clean contribution marked `Invalid`, or a corrupt one `Valid`).
     pub false_verdicts_adopted: u64,
+    /// Epoch-guarded tombstones discarded — at pop (the legacy path)
+    /// *or* removed early by queue compaction. Deliberately **not**
+    /// part of the checksum: every pre-existing crash scenario pops
+    /// tombstones, so hashing this would shift its recorded digest.
+    /// Replays still guard it via `SimStats` equality.
+    pub dead_events: u64,
+    /// High-water mark of the event-queue length. Digest-excluded for
+    /// the same reason (every run has a nonzero peak, and the wheel's
+    /// compaction makes the trajectory scheduler-specific); recorded in
+    /// `BENCH_sim.json` as the memory half of the perf trajectory.
+    pub peak_queue_len: u64,
 }
 
 impl SimStats {
@@ -200,29 +211,28 @@ enum Ev<R: Runner> {
     Timer { node: usize, epoch: u32, token: u64 },
 }
 
-struct Queued<R: Runner> {
-    at: Nanos,
-    seq: u64,
-    ev: Ev<R>,
+impl<R: Runner> Ev<R> {
+    /// The node this event targets (every variant has exactly one).
+    fn target(&self) -> usize {
+        match self {
+            Ev::Start { node, .. } | Ev::Timer { node, .. } => *node,
+            Ev::Deliver { to, .. } => *to,
+        }
+    }
+
+    /// The target-node epoch this event was stamped with.
+    fn epoch(&self) -> u32 {
+        match self {
+            Ev::Start { epoch, .. } | Ev::Deliver { epoch, .. } | Ev::Timer { epoch, .. } => *epoch,
+        }
+    }
 }
 
-impl<R: Runner> PartialEq for Queued<R> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<R: Runner> Eq for Queued<R> {}
-impl<R: Runner> PartialOrd for Queued<R> {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<R: Runner> Ord for Queued<R> {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reverse for min-heap behaviour inside BinaryHeap.
-        (other.at, other.seq).cmp(&(self.at, self.seq))
-    }
-}
+/// Queue length below which tombstone compaction never runs: small
+/// clusters (every pre-wheel bank scenario) must take the legacy
+/// pop-and-discard path unconditionally, so their stats trajectories —
+/// and recorded digests — cannot depend on the compaction heuristic.
+const COMPACT_MIN_QUEUE: usize = 1024;
 
 /// A simulated cluster of runner nodes.
 pub struct Cluster<R: Runner> {
@@ -230,9 +240,22 @@ pub struct Cluster<R: Runner> {
     /// Sender-address resolution on every simulated send; FxHash over
     /// the uniformly random ids keeps it cheap at hundreds of peers.
     index: FxHashMap<PeerId, usize>,
-    queue: BinaryHeap<Queued<R>>,
+    /// The event queue: a timer wheel whose pop order is proven
+    /// identical to the `BinaryHeap` it replaced (`sim::wheel`).
+    queue: TimerWheel<Ev<R>>,
+    /// Live (non-tombstone) queued events per node. Moves to
+    /// `dead_pending` wholesale when the node goes offline — a restart
+    /// bumps the epoch, so nothing queued before the crash can ever
+    /// deliver again.
+    pending_events: Vec<u64>,
+    /// Queued events already known dead (their target crashed or
+    /// re-epoched since they were pushed). Drives the compaction
+    /// trigger; dead-at-push events (e.g. deliveries to an offline
+    /// target) are born into this count.
+    dead_pending: usize,
+    /// Reusable same-timestamp batch buffer for `run_until`.
+    batch: Vec<Scheduled<Ev<R>>>,
     now: Nanos,
-    seq: u64,
     pub model: NetModel,
     rng: Rng,
     /// The directed link-state plane: per-(src, dst) overrides (blocked
@@ -256,9 +279,11 @@ impl<R: Runner> Cluster<R> {
         Cluster {
             nodes: Vec::new(),
             index: FxHashMap::default(),
-            queue: BinaryHeap::new(),
+            queue: TimerWheel::new(),
+            pending_events: Vec::new(),
+            dead_pending: 0,
+            batch: Vec::new(),
             now: Nanos::ZERO,
-            seq: 0,
             model,
             rng: Rng::new(seed ^ 0x5157_0CA5_7E11_0DE5),
             links: FxHashMap::default(),
@@ -313,6 +338,7 @@ impl<R: Runner> Cluster<R> {
             egress_free: Nanos::ZERO,
             machine,
         });
+        self.pending_events.push(0);
         self.index.insert(id, idx);
         self.push(start_at.max(self.now), Ev::Start { node: idx, epoch: 0 });
         idx
@@ -348,16 +374,66 @@ impl<R: Runner> Cluster<R> {
     }
 
     fn push(&mut self, at: Nanos, ev: Ev<R>) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.queue.push(Queued { at, seq, ev });
+        // Tombstone bookkeeping: an event whose target is offline or
+        // already re-epoched is dead on arrival (dispatch stamps the
+        // *current* epoch, so deliveries to an offline node are the
+        // born-dead case). Live events can only die via `set_offline`,
+        // which moves their node's whole pending count over — so
+        // `dead_pending` is exact, never a heuristic.
+        let t = ev.target();
+        let slot = &self.nodes[t];
+        if slot.online && slot.epoch == ev.epoch() {
+            self.pending_events[t] += 1;
+        } else {
+            self.dead_pending += 1;
+        }
+        self.queue.push(at, ev);
+        let len = self.queue.len();
+        if len as u64 > self.stats.peak_queue_len {
+            self.stats.peak_queue_len = len as u64;
+        }
+        // Lazy compaction: once tombstones dominate a large queue,
+        // remove them in place instead of waiting for the cursor to
+        // reach and discard each one. Gated on `COMPACT_MIN_QUEUE` so
+        // small (pre-wheel) scenarios always take the legacy
+        // pop-and-discard path and keep their recorded digests.
+        if len >= COMPACT_MIN_QUEUE && self.dead_pending * 2 > len {
+            self.compact_queue();
+        }
+    }
+
+    /// Remove every queued tombstone (target offline or re-epoched).
+    /// Dead-at-compact implies dead-at-pop — epochs only grow and a
+    /// restart always bumps them — so early removal is observationally
+    /// identical to the pop-time discard, minus the queue memory.
+    fn compact_queue(&mut self) {
+        let nodes = &self.nodes;
+        let removed = self.queue.compact(|ev| {
+            let slot = &nodes[ev.target()];
+            !slot.online || slot.epoch != ev.epoch()
+        });
+        self.stats.dead_events += removed as u64;
+        debug_assert_eq!(removed, self.dead_pending, "dead_pending must be exact");
+        self.dead_pending = 0;
+    }
+
+    /// Current event-queue length (bounds tests and the bench record).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
     }
 
     // ----- churn / fuzz controls ------------------------------------------
 
     /// Take a node offline: in-flight deliveries and timers are dropped.
     pub fn set_offline(&mut self, idx: usize) {
+        if !self.nodes[idx].online {
+            return;
+        }
         self.nodes[idx].online = false;
+        // Everything queued for this node is now permanently dead: a
+        // restart bumps the epoch, so no queued event can match again.
+        self.dead_pending += self.pending_events[idx] as usize;
+        self.pending_events[idx] = 0;
     }
 
     /// Bring a node back online; `on_start` runs again (rebootstrap).
@@ -561,14 +637,37 @@ impl<R: Runner> Cluster<R> {
         let Some(q) = self.queue.pop() else {
             return false;
         };
-        debug_assert!(q.at >= self.now, "time went backwards");
-        self.now = q.at;
+        self.process(q.at, q.item);
+        true
+    }
+
+    /// Run one popped event through its handler. Tombstones (target
+    /// offline or re-epoched) are discarded exactly as the heap-backed
+    /// loop discarded them — same counters, same silent paths — plus
+    /// the `dead_events` tally and the pending-count bookkeeping.
+    fn process(&mut self, at: Nanos, ev: Ev<R>) {
+        debug_assert!(at >= self.now, "time went backwards");
+        self.now = at;
         self.stats.events_processed += 1;
-        match q.ev {
+        // Pop-side half of the tombstone bookkeeping: born-dead events
+        // stay dead and live events only die via `set_offline` (which
+        // moves their count), so the discard condition below tells us
+        // exactly which counter this event was in.
+        {
+            let t = ev.target();
+            let slot = &self.nodes[t];
+            if slot.online && slot.epoch == ev.epoch() {
+                self.pending_events[t] -= 1;
+            } else {
+                self.dead_pending = self.dead_pending.saturating_sub(1);
+                self.stats.dead_events += 1;
+            }
+        }
+        match ev {
             Ev::Start { node, epoch } => {
                 let slot = &mut self.nodes[node];
                 if !slot.online || slot.epoch != epoch {
-                    return true;
+                    return;
                 }
                 let mut out = std::mem::take(&mut self.scratch);
                 slot.runner.on_start(self.now, &mut out);
@@ -579,7 +678,7 @@ impl<R: Runner> Cluster<R> {
                 let slot = &mut self.nodes[to];
                 if !slot.online || slot.epoch != epoch {
                     self.stats.msgs_dropped_offline += 1;
-                    return true;
+                    return;
                 }
                 // Shared-CPU model: processing starts when the node's
                 // *machine* frees up and takes `processing_cost`; the
@@ -605,7 +704,7 @@ impl<R: Runner> Cluster<R> {
             Ev::Timer { node, epoch, token } => {
                 let slot = &mut self.nodes[node];
                 if !slot.online || slot.epoch != epoch {
-                    return true;
+                    return;
                 }
                 self.stats.timers_fired += 1;
                 let mut out = std::mem::take(&mut self.scratch);
@@ -614,16 +713,28 @@ impl<R: Runner> Cluster<R> {
                 self.scratch = out;
             }
         }
-        true
     }
 
     /// Run until virtual time `t` (events at exactly `t` included).
+    ///
+    /// Events are drained in same-timestamp **batches**: one wheel
+    /// `pop_batch` per distinct instant, then the batch runs through
+    /// the handlers in pop order. Events a handler pushes mid-batch
+    /// carry larger sequence numbers than every batch member, so
+    /// deferring them to the next batch — even at the same timestamp —
+    /// is exactly the heap's pop order.
     pub fn run_until(&mut self, t: Nanos) {
-        while let Some(head) = self.queue.peek() {
-            if head.at > t {
-                break;
+        loop {
+            match self.queue.peek() {
+                Some(head) if head.at <= t => {}
+                _ => break,
             }
-            self.step();
+            let mut batch = std::mem::take(&mut self.batch);
+            self.queue.pop_batch(&mut batch);
+            for q in batch.drain(..) {
+                self.process(q.at, q.item);
+            }
+            self.batch = batch;
         }
         self.now = self.now.max(t);
     }
@@ -897,6 +1008,15 @@ mod tests {
         assert_ne!(rescued.checksum(), extended.checksum());
         let lied = SimStats { false_verdicts_adopted: 1, ..off.clone() };
         assert_ne!(lied.checksum(), off.checksum());
+        // The wheel-era queue counters are digest-excluded outright:
+        // every pre-wheel crash scenario pops tombstones and every run
+        // has a nonzero queue peak, so hashing either would shift all
+        // recorded digests. Replays guard them via `SimStats` equality.
+        let tombstoned =
+            SimStats { dead_events: 7, peak_queue_len: 4096, ..off.clone() };
+        assert_eq!(tombstoned.checksum(), legacy(&off), "queue counters are digest-excluded");
+        let tombstoned_on = SimStats { dead_events: 7, peak_queue_len: 4096, ..on.clone() };
+        assert_eq!(tombstoned_on.checksum(), on.checksum());
     }
 
     #[test]
@@ -1002,5 +1122,68 @@ mod tests {
         c.set_online(a); // restart → new ping round over healed links
         c.run_until_idle();
         assert!(!c.node(b).got.is_empty());
+    }
+
+    /// Timer-heavy runner for the queue-bounds test: every (re)start
+    /// arms a burst of long-dated timers, so each crash/restart cycle
+    /// strands a burst of epoch-guarded tombstones in the far future.
+    struct TimerStorm {
+        id: PeerId,
+    }
+
+    impl Runner for TimerStorm {
+        type Msg = u64;
+        fn id(&self) -> PeerId {
+            self.id
+        }
+        fn on_start(&mut self, _now: Nanos, out: &mut Outbox<u64>) {
+            for i in 0..200u64 {
+                out.timer(i, Duration::from_secs(3600 + i));
+            }
+        }
+        fn on_message(&mut self, _n: Nanos, _f: PeerId, _m: u64, _o: &mut Outbox<u64>) {}
+        fn on_timer(&mut self, _n: Nanos, _t: u64, _o: &mut Outbox<u64>) {}
+    }
+
+    #[test]
+    fn queue_stays_bounded_across_crash_restart_cycles() {
+        // Pre-wheel, every crash/restart cycle leaked its 200 stranded
+        // timers into the queue until their (hour-away) deadlines; a
+        // churn loop grew the queue monotonically. Compaction must keep
+        // it bounded near one cycle's worth of live events.
+        let mut rng = Rng::new(42);
+        let mut c: Cluster<TimerStorm> = Cluster::new(NetModel::uniform(1.0, 10_000.0, 0.0), 42);
+        let mut nodes = Vec::new();
+        for _ in 0..8 {
+            let id = PeerId::from_rng(&mut rng);
+            nodes.push(c.add_node(TimerStorm { id }, Region::Local, Nanos::ZERO));
+        }
+        c.run_for(Duration::from_secs(1));
+        let live_floor = c.queue_len(); // 8 × 200 armed timers
+        let mut peak_after_churn = 0;
+        for cycle in 0..50 {
+            for &n in &nodes {
+                c.set_offline(n); // strands 200 timers per node
+                c.set_online(n); // new epoch re-arms 200 more
+            }
+            c.run_for(Duration::from_secs(1));
+            if cycle >= 1 {
+                peak_after_churn = peak_after_churn.max(c.queue_len());
+            }
+        }
+        // 50 cycles × 1600 stranded timers would be 80k+ queued events
+        // without compaction; with it the queue stays within a small
+        // multiple of the live set.
+        assert!(
+            peak_after_churn <= live_floor * 4 + COMPACT_MIN_QUEUE,
+            "queue grew unbounded under churn: {peak_after_churn} vs live floor {live_floor}"
+        );
+        assert!(c.stats.dead_events > 0, "tombstones must be tallied");
+        assert!(c.stats.peak_queue_len > 0);
+        // And the tombstone totals never leak into the digest.
+        let mut scrubbed = c.stats.clone();
+        scrubbed.dead_events = 0;
+        scrubbed.peak_queue_len = 0;
+        assert_eq!(scrubbed.checksum(), c.stats.checksum());
     }
 }

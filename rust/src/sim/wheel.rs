@@ -1,0 +1,410 @@
+//! Hierarchical timer-wheel event queue for the DES hot path.
+//!
+//! [`TimerWheel`] replaces the `BinaryHeap` that backed
+//! [`crate::sim::des::Cluster`]'s event queue. A heap pays `O(log n)`
+//! per push *and* per pop with poor locality; at city scale (1,000+
+//! peers, millions of queued events) that log factor dominates the
+//! event loop. The wheel exploits what DES traffic actually looks like:
+//! almost every event is scheduled a few RTTs ahead, and events are
+//! consumed in nondecreasing time order.
+//!
+//! ## Structure
+//!
+//! * **Near-future wheel** — `SLOTS` buckets of `SLOT_NS` nanoseconds
+//!   each (≈1.05 ms slots, ≈1.07 s horizon). A push inside the horizon
+//!   is an unordered `Vec::push` into its bucket: O(1), no comparisons.
+//! * **Current buffer** — the cursor slot's entries, sorted once per
+//!   slot *descending* by `(at, seq)` so the minimum pops from the
+//!   `Vec` tail: amortized O(1) per pop, one `sort_unstable` per slot.
+//!   Pushes that land in the cursor slot (or in the past — a handler
+//!   scheduling "now") binary-search-insert to keep it ordered.
+//! * **Overflow heap** — everything past the horizon, a plain min-heap.
+//!   Each time the cursor advances one slot, entries that slid inside
+//!   the horizon migrate to their bucket; when the wheel goes idle the
+//!   cursor jumps straight to the overflow minimum's slot instead of
+//!   scanning empty buckets.
+//!
+//! ## Order contract
+//!
+//! Pop order is **exactly** the `BinaryHeap` order: ascending `(at,
+//! seq)`, where `seq` is the wheel-assigned push sequence number.
+//! Sequence numbers are unique, so the order is total and any correct
+//! min-queue yields the same sequence — the property `tests/prop.rs`
+//! drives lockstep against a retained heap reference, and the reason
+//! every pre-wheel scenario digest survives the swap byte-for-byte.
+//!
+//! ## Tombstones
+//!
+//! The DES guards events by node epoch, so a crashed node's queued
+//! timers and deliveries become garbage ("tombstones") that the heap
+//! could only discard at pop time. [`TimerWheel::compact`] removes them
+//! in place — bucket by bucket, order preserved — which is what keeps
+//! the queue bounded under sustained churn (`bank::city_scale`).
+
+use crate::util::time::Nanos;
+use std::collections::BinaryHeap;
+
+/// Width of one wheel slot in nanoseconds (`1 << 20` ≈ 1.05 ms — a
+/// power of two so slot indexing is a shift, not a division).
+pub const SLOT_NS: u64 = 1 << 20;
+
+/// Number of near-future slots. With `SLOT_NS` this spans ≈1.07 s,
+/// comfortably past the DES's RTTs, egress serialization, and protocol
+/// tick intervals, so steady-state traffic never touches the overflow.
+pub const SLOTS: usize = 1024;
+
+/// The wheel horizon: pushes at `wheel_start + SPAN` or later overflow.
+const SPAN: u64 = SLOT_NS * SLOTS as u64;
+
+/// One queued entry: an item plus its schedule time and the push
+/// sequence number that makes the pop order total.
+#[derive(Clone, Debug)]
+pub struct Scheduled<T> {
+    pub at: Nanos,
+    pub seq: u64,
+    pub item: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed so the overflow `BinaryHeap` behaves as a min-heap,
+        // mirroring the `Queued` ordering the wheel replaced.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// Timer-wheel min-queue ordered by `(at, seq)`. See the module docs
+/// for the structure; `seq` is assigned on [`TimerWheel::push`].
+pub struct TimerWheel<T> {
+    /// Near-future buckets, indexed by `(at / SLOT_NS) % SLOTS`.
+    slots: Vec<Vec<Scheduled<T>>>,
+    /// The cursor slot's entries, sorted descending by `(at, seq)` —
+    /// the minimum is at the tail.
+    current: Vec<Scheduled<T>>,
+    /// Entries at or past the horizon.
+    overflow: BinaryHeap<Scheduled<T>>,
+    /// Start of the cursor slot (multiple of `SLOT_NS`). The wheel
+    /// window is `[wheel_start, wheel_start + SPAN)`.
+    wheel_start: u64,
+    /// Entries currently in `slots` (excluding `current` / `overflow`).
+    wheel_len: usize,
+    /// Total entries, the peek stash included.
+    len: usize,
+    /// Peeked-but-not-popped minimum ([`TimerWheel::peek`] stashes it
+    /// here so peek can hand out a reference without re-deriving it).
+    head: Option<Scheduled<T>>,
+    /// Next push sequence number.
+    seq: u64,
+}
+
+impl<T> Default for TimerWheel<T> {
+    fn default() -> Self {
+        TimerWheel::new()
+    }
+}
+
+impl<T> TimerWheel<T> {
+    pub fn new() -> Self {
+        TimerWheel {
+            slots: std::iter::repeat_with(Vec::new).take(SLOTS).collect(),
+            current: Vec::new(),
+            overflow: BinaryHeap::new(),
+            wheel_start: 0,
+            wheel_len: 0,
+            len: 0,
+            head: None,
+            seq: 0,
+        }
+    }
+
+    /// Total queued entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Queue `item` at `at`, assigning it the next sequence number.
+    pub fn push(&mut self, at: Nanos, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        let e = Scheduled { at, seq, item };
+        self.len += 1;
+        // A freshly pushed entry carries the largest `seq` ever issued,
+        // so it precedes the peek stash iff its `at` is strictly
+        // earlier — in which case the stash goes back into the wheel
+        // and the new entry takes its place as the known minimum.
+        if let Some(h) = &self.head {
+            if at < h.at {
+                let old = self.head.take().expect("stash checked above");
+                self.head = Some(e);
+                self.insert(old);
+                return;
+            }
+        }
+        self.insert(e);
+    }
+
+    /// Reference to the minimum entry, if any.
+    pub fn peek(&mut self) -> Option<&Scheduled<T>> {
+        if self.head.is_none() {
+            self.head = self.next_internal();
+        }
+        self.head.as_ref()
+    }
+
+    /// Remove and return the minimum entry.
+    pub fn pop(&mut self) -> Option<Scheduled<T>> {
+        let e = match self.head.take() {
+            Some(h) => h,
+            None => self.next_internal()?,
+        };
+        self.len -= 1;
+        Some(e)
+    }
+
+    /// Pop the minimum entry and every further entry sharing its exact
+    /// timestamp into `out`, in pop order; returns the batch size. The
+    /// DES drains whole same-instant batches per loop iteration —
+    /// events pushed *while the batch is processed* get larger sequence
+    /// numbers than every batch member, so deferring them to the next
+    /// batch (even at the same timestamp) preserves the heap order.
+    pub fn pop_batch(&mut self, out: &mut Vec<Scheduled<T>>) -> usize {
+        let Some(first) = self.pop() else {
+            return 0;
+        };
+        let at = first.at;
+        out.push(first);
+        let mut n = 1;
+        while self.peek().is_some_and(|h| h.at == at) {
+            out.push(self.pop().expect("peeked non-empty"));
+            n += 1;
+        }
+        n
+    }
+
+    /// Remove every entry whose item satisfies `is_dead`, preserving
+    /// the relative order of survivors; returns how many were removed.
+    /// This is the tombstone compaction path: O(n) touch of every
+    /// queued entry, amortized by the caller's dead-fraction trigger.
+    pub fn compact(&mut self, mut is_dead: impl FnMut(&T) -> bool) -> usize {
+        let before = self.len;
+        if self.head.as_ref().is_some_and(|h| is_dead(&h.item)) {
+            self.head = None;
+        }
+        self.current.retain(|e| !is_dead(&e.item));
+        for slot in &mut self.slots {
+            slot.retain(|e| !is_dead(&e.item));
+        }
+        self.overflow.retain(|e| !is_dead(&e.item));
+        self.wheel_len = self.slots.iter().map(Vec::len).sum();
+        self.len = self.current.len()
+            + self.wheel_len
+            + self.overflow.len()
+            + usize::from(self.head.is_some());
+        before - self.len
+    }
+
+    /// Route an entry to the current buffer, its wheel bucket, or the
+    /// overflow. Entries at or before the cursor slot's end join the
+    /// sorted current buffer (this also absorbs past-due pushes — a
+    /// handler scheduling at "now" — which must pop before everything
+    /// later).
+    fn insert(&mut self, e: Scheduled<T>) {
+        let at = e.at.0;
+        if at < self.wheel_start + SLOT_NS {
+            let key = (e.at, e.seq);
+            let pos = self.current.partition_point(|x| (x.at, x.seq) > key);
+            self.current.insert(pos, e);
+        } else if at < self.wheel_start + SPAN {
+            self.insert_slot(e);
+        } else {
+            self.overflow.push(e);
+        }
+    }
+
+    /// Bucket an entry known to lie inside the wheel window.
+    fn insert_slot(&mut self, e: Scheduled<T>) {
+        let idx = (e.at.0 / SLOT_NS) as usize % SLOTS;
+        self.slots[idx].push(e);
+        self.wheel_len += 1;
+    }
+
+    /// Extract the global minimum (current buffer first; otherwise
+    /// advance the cursor — or jump it across an idle gap — migrating
+    /// overflow entries and draining the next non-empty bucket).
+    /// `len` bookkeeping is the caller's job.
+    fn next_internal(&mut self) -> Option<Scheduled<T>> {
+        loop {
+            if let Some(e) = self.current.pop() {
+                return Some(e);
+            }
+            if self.wheel_len == 0 {
+                // Idle wheel: jump the cursor straight to the overflow
+                // minimum's slot instead of stepping empty buckets.
+                let min_at = self.overflow.peek()?.at.0;
+                self.wheel_start = min_at - (min_at % SLOT_NS);
+            } else {
+                self.wheel_start += SLOT_NS;
+            }
+            // Entries that slid inside the horizon move to buckets.
+            while self.overflow.peek().is_some_and(|o| o.at.0 < self.wheel_start + SPAN) {
+                let e = self.overflow.pop().expect("peeked non-empty");
+                self.insert_slot(e);
+            }
+            let idx = (self.wheel_start / SLOT_NS) as usize % SLOTS;
+            let mut v = std::mem::take(&mut self.slots[idx]);
+            self.wheel_len -= v.len();
+            v.sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+            self.current = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn drain(w: &mut TimerWheel<u32>) -> Vec<(u64, u64, u32)> {
+        let mut out = Vec::new();
+        while let Some(e) = w.pop() {
+            out.push((e.at.0, e.seq, e.item));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut w = TimerWheel::new();
+        w.push(Nanos(500), 0);
+        w.push(Nanos(100), 1);
+        w.push(Nanos(100), 2);
+        w.push(Nanos(300), 3);
+        let got: Vec<u32> = drain(&mut w).into_iter().map(|e| e.2).collect();
+        assert_eq!(got, vec![1, 2, 3, 0], "ties broken by push order");
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn crosses_slot_and_horizon_boundaries() {
+        let mut w = TimerWheel::new();
+        // One entry per region of the structure: cursor slot, a later
+        // slot, the last slot of the window, and two overflow entries.
+        let times = [
+            SLOT_NS / 2,
+            SLOT_NS * 3 + 7,
+            SPAN - 1,
+            SPAN + 5,
+            SPAN * 3 + 11,
+        ];
+        for (i, t) in times.iter().enumerate() {
+            w.push(Nanos(*t), i as u32);
+        }
+        let got: Vec<u64> = drain(&mut w).into_iter().map(|e| e.0).collect();
+        let mut want = times.to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn idle_gap_jumps_to_overflow() {
+        let mut w = TimerWheel::new();
+        // Nothing inside the window; the cursor must jump, not scan.
+        let far = SPAN * 1000 + SLOT_NS * 5 + 123;
+        w.push(Nanos(far), 9);
+        w.push(Nanos(far + 1), 10);
+        assert_eq!(w.pop().unwrap().at, Nanos(far));
+        assert_eq!(w.pop().unwrap().at, Nanos(far + 1));
+        assert!(w.pop().is_none());
+    }
+
+    #[test]
+    fn past_due_push_pops_first() {
+        let mut w = TimerWheel::new();
+        w.push(Nanos(SLOT_NS * 10), 0);
+        // Advance the cursor to slot 10…
+        assert_eq!(w.peek().unwrap().item, 0);
+        // …then push into the past (a handler scheduling "now") and at
+        // the peeked time: the past-due entry must still pop first.
+        w.push(Nanos(3), 1);
+        w.push(Nanos(SLOT_NS * 10), 2);
+        let got: Vec<u32> = drain(&mut w).into_iter().map(|e| e.2).collect();
+        assert_eq!(got, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn pop_batch_groups_exact_timestamps() {
+        let mut w = TimerWheel::new();
+        w.push(Nanos(50), 0);
+        w.push(Nanos(50), 1);
+        w.push(Nanos(60), 2);
+        let mut batch = Vec::new();
+        assert_eq!(w.pop_batch(&mut batch), 2);
+        assert_eq!(batch.iter().map(|e| e.item).collect::<Vec<_>>(), vec![0, 1]);
+        batch.clear();
+        assert_eq!(w.pop_batch(&mut batch), 1);
+        assert_eq!(batch[0].item, 2);
+        batch.clear();
+        assert_eq!(w.pop_batch(&mut batch), 0);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn compact_removes_dead_and_preserves_order() {
+        let mut w = TimerWheel::new();
+        for i in 0..100u32 {
+            // Spread across slots and the overflow.
+            w.push(Nanos(u64::from(i) * SLOT_NS * 17), i);
+        }
+        // Stash a head so compact must check it too.
+        assert_eq!(w.peek().unwrap().item, 0);
+        let removed = w.compact(|item| item % 3 == 0);
+        assert_eq!(removed, 34, "0,3,…,99 are dead");
+        assert_eq!(w.len(), 66);
+        let got: Vec<u32> = drain(&mut w).into_iter().map(|e| e.2).collect();
+        let want: Vec<u32> = (0..100).filter(|i| i % 3 != 0).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matches_binary_heap_on_random_interleavings() {
+        // Small in-module randomized guard; the full lockstep property
+        // test (crash predicates included) lives in `tests/prop.rs`.
+        let mut rng = Rng::new(0x7ee1_5eed);
+        for round in 0..50 {
+            let mut wheel = TimerWheel::new();
+            let mut heap: BinaryHeap<Scheduled<u32>> = BinaryHeap::new();
+            let mut seq = 0u64;
+            let mut got = Vec::new();
+            let mut want = Vec::new();
+            for op in 0..400 {
+                if rng.chance(0.6) {
+                    let at = Nanos(rng.gen_range(SPAN * 2));
+                    wheel.push(at, op);
+                    heap.push(Scheduled { at, seq, item: op });
+                    seq += 1;
+                } else {
+                    got.extend(wheel.pop().map(|e| (e.at, e.seq)));
+                    want.extend(heap.pop().map(|e| (e.at, e.seq)));
+                }
+            }
+            got.extend(std::iter::from_fn(|| wheel.pop()).map(|e| (e.at, e.seq)));
+            want.extend(std::iter::from_fn(|| heap.pop()).map(|e| (e.at, e.seq)));
+            assert_eq!(got, want, "diverged in round {round}");
+        }
+    }
+}

@@ -1370,3 +1370,98 @@ fn prop_convergence_under_loss() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Timer wheel: pop order identical to the legacy BinaryHeap event queue
+// ---------------------------------------------------------------------------
+
+/// Lockstep differential test for the DES event queue swap: a
+/// [`TimerWheel`] and the legacy `BinaryHeap` (the reference model,
+/// via [`Scheduled`]'s reversed `Ord`) are driven through the same
+/// random interleaving of pushes, pops, and tombstone compactions.
+/// Every pop must yield the identical `(at, seq, item)` triple and the
+/// lengths must track exactly — the property the digest-stability of
+/// every pre-existing bank scenario rests on.
+#[test]
+fn prop_timer_wheel_matches_legacy_heap_reference() {
+    use peersdb::sim::wheel::{Scheduled, TimerWheel, SLOTS, SLOT_NS};
+    use std::collections::BinaryHeap;
+
+    check_with_rng(
+        "timer_wheel_matches_legacy_heap",
+        |r| {
+            (
+                r.range(10, 400), // op count
+                r.range(1, 4),    // horizon in wheel spans (>1 exercises overflow)
+                r.range(2, 6),    // congruence classes for the dead predicate
+            )
+        },
+        |(ops, horizon, modulus), rng| {
+            let span = SLOT_NS * SLOTS as u64 * *horizon as u64;
+            let m = *modulus as u64;
+            let mut wheel: TimerWheel<u64> = TimerWheel::new();
+            let mut heap: BinaryHeap<Scheduled<u64>> = BinaryHeap::new();
+            let mut seq = 0u64;
+            let mut item = 0u64;
+            for _ in 0..*ops {
+                match rng.range(0, 100) {
+                    // Push (~55%): anywhere in the horizon, including the
+                    // past relative to entries already popped.
+                    0..=54 => {
+                        let at = Nanos(rng.gen_range(span));
+                        wheel.push(at, item);
+                        heap.push(Scheduled { at, seq, item });
+                        seq += 1;
+                        item += 1;
+                    }
+                    // Pop (~35%): the verdicts must be identical.
+                    55..=89 => {
+                        let got = wheel.pop().map(|s| (s.at, s.seq, s.item));
+                        let want = heap.pop().map(|s| (s.at, s.seq, s.item));
+                        if got != want {
+                            return Err(format!("pop diverged: wheel {got:?} vs heap {want:?}"));
+                        }
+                    }
+                    // Compact (~10%): kill one congruence class of items —
+                    // the tombstone shape the DES uses for crashed nodes.
+                    _ => {
+                        let dead = rng.gen_range(m);
+                        let removed = wheel.compact(|v| v % m == dead);
+                        let before = heap.len();
+                        heap.retain(|s| s.item % m != dead);
+                        if removed != before - heap.len() {
+                            return Err(format!(
+                                "compact removed {removed}, reference removed {}",
+                                before - heap.len()
+                            ));
+                        }
+                    }
+                }
+                if wheel.len() != heap.len() {
+                    return Err(format!(
+                        "len diverged: wheel {} vs heap {}",
+                        wheel.len(),
+                        heap.len()
+                    ));
+                }
+            }
+            // Drain the tails: the remaining order must agree too.
+            while let Some(want) = heap.pop() {
+                match wheel.pop() {
+                    Some(got) if (got.at, got.seq, got.item) == (want.at, want.seq, want.item) => {}
+                    other => {
+                        return Err(format!(
+                            "drain diverged: wheel {:?} vs heap {:?}",
+                            other.map(|s| (s.at, s.seq, s.item)),
+                            (want.at, want.seq, want.item)
+                        ));
+                    }
+                }
+            }
+            if !wheel.is_empty() {
+                return Err("wheel holds entries the reference does not".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -693,3 +693,49 @@ fn eclipse_attack_is_detected_without_recovery_window() {
     let err = scenario::run(&sc).expect_err("eclipsed victim must fail the invariant");
     assert!(err.contains("eclipse"), "wrong failure: {err}");
 }
+
+// ---------------------------------------------------------------------------
+// 21. City scale: 1,006 peers, sustained crash/restart churn, and a
+//     regional outage on the timer-wheel DES core.
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "1,006-peer DES run needs the release profile; CI runs `cargo test --release`"
+)]
+fn scenario_city_scale() {
+    let sc = bank::city_scale();
+    let (report, cluster) = scenario::run_cluster(&sc).expect("city-scale scenario");
+    // Replay determinism with repair-phase jitter enabled: jitter is a
+    // pure function of PeerId, so a second run from the same seed must
+    // reproduce the identical report byte for byte.
+    let replay = scenario::run(&sc).expect("replay");
+    assert_eq!(report, replay, "city-scale scenario not deterministic");
+
+    // Shape: ≥ 1,000 peers spread over all six regions.
+    assert!(report.peers >= 1000, "only {} peers", report.peers);
+    assert_eq!(report.peers, bank::CITY_INITIAL + 6 * bank::CITY_WAVE);
+    let regions: BTreeSet<_> = (0..cluster.len()).map(|i| cluster.region_of(i)).collect();
+    assert_eq!(regions.len(), 6, "only {} regions", regions.len());
+    assert_eq!(report.contributions, 7);
+    assert_eq!(report.checkpoints, 1);
+
+    // The churn and the outage really produced tombstones, and the
+    // digest-excluded queue telemetry recorded the load: the peak
+    // backlog must at least cover one pending timer per live node.
+    assert!(report.stats.dead_events > 0, "churn produced no dead events");
+    assert!(
+        report.stats.peak_queue_len >= report.peers as u64,
+        "peak queue {} below one event per peer",
+        report.stats.peak_queue_len
+    );
+    println!(
+        "city-scale: peers={} events={} dead={} peak_queue={} end={}",
+        report.peers,
+        report.stats.events_processed,
+        report.stats.dead_events,
+        report.stats.peak_queue_len,
+        report.end
+    );
+}
