@@ -8,8 +8,9 @@
 //! striped-transfer scenarios: the slow-peer drag pair and the
 //! provider-death reassignment run — the delayed-honest-majority
 //! quorum-grace scenario, the three parity-tagged rows that
-//! `tests/parity.rs` also replays over real TCP, and the 1,006-peer
-//! city-scale churn scenario) in this process, measuring wall
+//! `tests/parity.rs` also replays over real TCP, the 1,006-peer
+//! city-scale churn scenario plus its gossip-mesh variant, and the
+//! 501-peer broadcast pair) in this process, measuring wall
 //! time and events/second, and emits the results as `BENCH_sim.json` —
 //! the machine-readable perf-trajectory artifact CI uploads on every
 //! run. Each record also carries the run's `SimStats` checksum: because
@@ -25,12 +26,19 @@
 //!
 //! Every record also carries the timer-wheel queue telemetry
 //! (`dead_events`, `peak_queue_len`) and the cluster-wide pubsub
-//! counters (`pubsub_published` / `_forwarded` / `_duplicates`), so the
-//! city-scale row doubles as the 1k-peer gossip-redundancy measurement
-//! the ROADMAP's mesh-overlay item starts from. The city-scale row
-//! additionally records the process peak-RSS high-water mark and
-//! **fails the bench** (and therefore CI) if its DES throughput drops
-//! below [`CITY_SCALE_EPS_FLOOR`].
+//! counters (`pubsub_published` / `_forwarded` / `_delivered` /
+//! `_duplicates`, plus the gossip-mesh telemetry quartet `ihave_sent` /
+//! `iwant_served` / `grafts` / `prunes`). `pubsub_redundancy` is
+//! duplicates per useful delivery — wasted frames each subscriber's
+//! delivery costs the network — so the `city-scale` (flood) and
+//! `city-scale-mesh` rows read as a controlled before/after of the
+//! gossip mesh on one schedule; the bench **fails** (and therefore CI)
+//! unless the mesh row sits at most half the flood row's redundancy
+//! ([`MESH_REDUNDANCY_FACTOR`]) — the same bound is enforced on the
+//! 501-peer broadcast pair, whose dense fabric makes flood pay its
+//! full fan-in. The city rows also enforce the
+//! [`CITY_SCALE_EPS_FLOOR`] DES-throughput floor, and the flood row
+//! records the process peak-RSS high-water mark.
 
 use peersdb::codec::Json;
 use peersdb::sim::bank;
@@ -44,6 +52,15 @@ use peersdb::util::bench::{print_environment, Table};
 /// regression (e.g. the wheel degenerating to per-push sorting), not on
 /// a slow CI runner.
 const CITY_SCALE_EPS_FLOOR: f64 = 100_000.0;
+
+/// CI-failing redundancy bound: the mesh-enabled city-scale row's
+/// `pubsub_redundancy` (duplicates per useful delivery) must be at most
+/// `1 / MESH_REDUNDANCY_FACTOR` of the flood row's on the identical
+/// schedule. The ROADMAP's gossip-mesh item targets ≥ 4×; the enforced
+/// floor is 2× so a scheduler-timing wobble cannot flake CI while a
+/// genuine mesh regression (e.g. every neighbor grafting everyone)
+/// still trips it.
+const MESH_REDUNDANCY_FACTOR: f64 = 2.0;
 
 /// Process peak-RSS high-water mark in KiB (`VmHWM` from
 /// `/proc/self/status`). This is a whole-process watermark, so it is
@@ -75,7 +92,8 @@ fn main() {
         "scenario bank: {} scenarios incl. multi-region scale-out (100 peers / 3 waves), \
          asymmetric half-open region, adversarial + defended eclipse, GC-pressure repair, \
          the striped-transfer trio (slow-peer drag pair + provider death), the \
-         delayed-honest-majority quorum-grace run, and the 1,006-peer city-scale churn\n",
+         delayed-honest-majority quorum-grace run, the 1,006-peer city-scale churn \
+         (flood + gossip-mesh variants), and the 501-peer broadcast pair\n",
         bank::all().len()
     );
 
@@ -86,6 +104,10 @@ fn main() {
     let mut records: Vec<Json> = Vec::new();
     let mut total_events = 0u64;
     let mut total_wall = 0.0f64;
+    let mut city_flood_redundancy: Option<f64> = None;
+    let mut city_mesh_redundancy: Option<f64> = None;
+    let mut bcast_flood_redundancy: Option<f64> = None;
+    let mut bcast_mesh_redundancy: Option<f64> = None;
 
     for sc in bank::all() {
         let name = sc.name;
@@ -116,20 +138,24 @@ fn main() {
         }
         let repl_mean = if repl_n > 0 { repl_sum / repl_n as f64 } else { 0.0 };
 
-        // Cluster-wide pubsub counters: the duplicate fraction is the
-        // flood-gossip redundancy measurement the mesh-overlay ROADMAP
-        // item starts from (most telling on the 1,006-peer row).
+        // Cluster-wide pubsub counters. Redundancy = duplicates per
+        // useful delivery: how many wasted `Publish` frames each
+        // subscriber's copy costs the network (flood pays roughly its
+        // fan-in; the mesh is chartered to collapse that by an integer
+        // factor — read it off the city-scale pair).
         let mut pubsub_published = 0u64;
         let mut pubsub_forwarded = 0u64;
+        let mut pubsub_delivered = 0u64;
         let mut pubsub_duplicates = 0u64;
         for i in 0..cluster.len() {
-            let (p, f, d) = cluster.node(i).pubsub_stats();
+            let (p, f, d, dup) = cluster.node(i).pubsub_stats();
             pubsub_published += p;
             pubsub_forwarded += f;
-            pubsub_duplicates += d;
+            pubsub_delivered += d;
+            pubsub_duplicates += dup;
         }
-        let pubsub_redundancy = pubsub_duplicates as f64
-            / (pubsub_forwarded + pubsub_duplicates).max(1) as f64;
+        let pubsub_redundancy =
+            pubsub_duplicates as f64 / pubsub_delivered.max(1) as f64;
 
         table.row(&[
             name.to_string(),
@@ -158,20 +184,67 @@ fn main() {
             .set("peak_queue_len", report.stats.peak_queue_len)
             .set("pubsub_published", pubsub_published)
             .set("pubsub_forwarded", pubsub_forwarded)
+            .set("pubsub_delivered", pubsub_delivered)
             .set("pubsub_duplicates", pubsub_duplicates)
             .set("pubsub_redundancy", pubsub_redundancy)
+            .set("ihave_sent", report.stats.ihave_sent)
+            .set("iwant_served", report.stats.iwant_served)
+            .set("grafts", report.stats.grafts)
+            .set("prunes", report.stats.prunes)
             .set("virtual_secs", report.end.as_secs_f64())
             .set("stats_checksum", checksum);
         if name == "city-scale" {
             record = record.set("peak_rss_kb", peak_rss_kb());
+            city_flood_redundancy = Some(pubsub_redundancy);
+        }
+        if name == "city-scale-mesh" {
+            city_mesh_redundancy = Some(pubsub_redundancy);
+        }
+        if name == "flood-broadcast-churn" {
+            bcast_flood_redundancy = Some(pubsub_redundancy);
+        }
+        if name == "mesh-broadcast-churn" {
+            bcast_mesh_redundancy = Some(pubsub_redundancy);
+        }
+        if name.starts_with("city-scale") {
             assert!(
                 eps >= CITY_SCALE_EPS_FLOOR,
-                "city-scale DES throughput regressed: {eps:.0} events/s \
+                "{name} DES throughput regressed: {eps:.0} events/s \
                  < floor {CITY_SCALE_EPS_FLOOR:.0}"
             );
         }
         records.push(record);
     }
+
+    // The before/after the mesh is chartered on: same city-scale
+    // schedule, one knob, an integer-factor redundancy collapse.
+    let flood = city_flood_redundancy.expect("bank lost the city-scale row");
+    let mesh = city_mesh_redundancy.expect("bank lost the city-scale-mesh row");
+    println!(
+        "city-scale pubsub redundancy: flood {flood:.2} → mesh {mesh:.2} \
+         ({:.1}× reduction, enforced ≥ {MESH_REDUNDANCY_FACTOR:.0}×)",
+        flood / mesh.max(1e-9)
+    );
+    assert!(
+        mesh * MESH_REDUNDANCY_FACTOR <= flood,
+        "gossip mesh failed to collapse city-scale redundancy: \
+         mesh {mesh:.2} vs flood {flood:.2} (need ≥ {MESH_REDUNDANCY_FACTOR:.0}×)"
+    );
+    // Same charter on the 501-peer broadcast pair, where the dense
+    // fabric makes flood pay its true fan-in: the collapse there is the
+    // mesh's headline number.
+    let bflood = bcast_flood_redundancy.expect("bank lost the flood-broadcast-churn row");
+    let bmesh = bcast_mesh_redundancy.expect("bank lost the mesh-broadcast-churn row");
+    println!(
+        "broadcast pubsub redundancy: flood {bflood:.2} → mesh {bmesh:.2} \
+         ({:.1}× reduction, enforced ≥ {MESH_REDUNDANCY_FACTOR:.0}×)",
+        bflood / bmesh.max(1e-9)
+    );
+    assert!(
+        bmesh * MESH_REDUNDANCY_FACTOR <= bflood,
+        "gossip mesh failed to collapse broadcast redundancy: \
+         mesh {bmesh:.2} vs flood {bflood:.2} (need ≥ {MESH_REDUNDANCY_FACTOR:.0}×)"
+    );
     table.print();
     println!(
         "aggregate: {} events in {:.2}s wall  →  {:.0} Kevents/s",

@@ -64,6 +64,13 @@ pub struct NodeConfig {
     pub bitswap: BitswapConfig,
     /// Pubsub neighbor sample size taken from the routing table.
     pub neighbor_degree: usize,
+    /// Gossip-mesh pubsub knobs ([`pubsub::MeshConfig`]). `Some` flips
+    /// the engine from floodsub to the bounded-degree eager-push +
+    /// lazy-IHAVE/IWANT mesh, with the heartbeat driven off the node
+    /// tick. Default `None`: flood dissemination, zero extra frames and
+    /// zero extra RNG draws, so pre-mesh schedules replay
+    /// bit-identically.
+    pub mesh: Option<pubsub::MeshConfig>,
     /// CPU model: base cost per message + per-KiB payload cost.
     pub proc_cost_per_msg: Duration,
     pub proc_cost_per_kb: Duration,
@@ -125,6 +132,7 @@ impl Default for NodeConfig {
             dht: DhtConfig::default(),
             bitswap: BitswapConfig::default(),
             neighbor_degree: 8,
+            mesh: None,
             proc_cost_per_msg: Duration::from_micros(30),
             proc_cost_per_kb: Duration::from_micros(8),
             anti_entropy_every_ticks: 20,
@@ -375,7 +383,13 @@ impl Node {
             bs: BlockStore::new(),
             dht: dht::Engine::new(id, cfg.dht.clone()),
             bitswap: bitswap::Engine::new(cfg.bitswap.clone()),
-            pubsub: pubsub::Engine::new(id),
+            pubsub: {
+                let mut ps = pubsub::Engine::new(id);
+                if let Some(mesh) = &cfg.mesh {
+                    ps.enable_mesh(mesh.clone());
+                }
+                ps
+            },
             contributions: ContributionsStore::new(),
             validations: ValidationsStore::new(),
             kv: KvStore::new(),
@@ -446,12 +460,37 @@ impl Node {
         self.quality.retain_known(&known);
     }
 
-    /// Flood-pubsub counters `(published, forwarded, duplicates)`.
-    /// `benches/sim_scale.rs` folds these into the city-scale record:
-    /// `duplicates / msgs_delivered` is the redundancy factor the
-    /// ROADMAP's gossip-mesh item is chartered to beat.
-    pub fn pubsub_stats(&self) -> (u64, u64, u64) {
-        (self.pubsub.published, self.pubsub.forwarded, self.pubsub.duplicates)
+    /// Pubsub counters `(published, forwarded, delivered, duplicates)`.
+    /// `forwarded` counts `Publish` frames actually pushed onto links
+    /// (fan-out, relays, IWANT serves); `delivered` counts first-copy
+    /// local deliveries. `benches/sim_scale.rs` folds these into each
+    /// record: `duplicates / delivered` is the redundancy factor
+    /// (wasted frames per useful delivery) the gossip mesh is chartered
+    /// to collapse versus flood.
+    pub fn pubsub_stats(&self) -> (u64, u64, u64, u64) {
+        (
+            self.pubsub.published,
+            self.pubsub.forwarded,
+            self.pubsub.delivered,
+            self.pubsub.duplicates,
+        )
+    }
+
+    /// Gossip-mesh telemetry `(ihave_sent, iwant_served, grafts,
+    /// prunes)` — all zero in flood mode.
+    pub fn pubsub_mesh_stats(&self) -> (u64, u64, u64, u64) {
+        self.pubsub.mesh_stats()
+    }
+
+    /// Number of pubsub messages this node originated (seqs `1..=n`).
+    pub fn pubsub_published_count(&self) -> u64 {
+        self.pubsub.published_count()
+    }
+
+    /// Whether pubsub message `(origin, seq)` was delivered locally —
+    /// the per-node half of the full-delivery invariant.
+    pub fn pubsub_has_delivered(&self, origin: PeerId, seq: u64) -> bool {
+        self.pubsub.has_delivered(origin, seq)
     }
 
     // ======================================================================
@@ -1900,7 +1939,12 @@ impl Runner for Node {
                 let mut bs_sends = bitswap::Sends::new();
                 self.bitswap.tick(now, &mut bs_sends);
                 self.wrap_bitswap(bs_sends, out);
-                self.pubsub.tick(now);
+                // Flood mode: seen-cache expiry only, never a send. Mesh
+                // mode: this also drives the gossip heartbeat (mesh
+                // repair, IHAVE batching, cache rotation).
+                let mut ps_sends = pubsub::Sends::new();
+                self.pubsub.tick(now, &mut ps_sends);
+                self.wrap_pubsub(ps_sends, out);
                 // Neighbor resampling is an O(table) shuffle + gossip —
                 // once a second is plenty (ticks are 100 ms).
                 if self.tick_count % 10 == 0 {

@@ -1,14 +1,48 @@
-//! Floodsub-style publish/subscribe.
+//! Publish/subscribe: floodsub by default, gossipsub-style epidemic
+//! mesh behind a knob.
 //!
 //! Used by the replication layer to announce new store heads (OrbitDB
-//! does the same over libp2p pubsub). Peers exchange subscriptions with
-//! their neighbors; published messages flood along subscribed links with
-//! a seen-cache for deduplication and a hop limit as a safety valve.
+//! does the same over libp2p pubsub). Two dissemination modes share one
+//! engine:
+//!
+//! - **Flood** (default, [`Engine::new`]): peers exchange subscriptions
+//!   with their neighbors; published messages flood along subscribed
+//!   links with a seen-cache for deduplication and a hop limit as a
+//!   safety valve. Every pre-mesh schedule replays bit-identically on
+//!   this path.
+//! - **Mesh** ([`Engine::enable_mesh`], the gossipsub/radicle-link
+//!   shape): each subscribed topic maintains a bounded-degree mesh
+//!   ([`MeshConfig::degree`] with low/high watermarks) repaired on a
+//!   heartbeat. Full [`Msg::Publish`] frames are pushed eagerly only to
+//!   mesh members; up to [`MeshConfig::lazy_degree`] other subscribers
+//!   get lazy, batched [`Msg::IHave`] digests once per heartbeat and
+//!   pull what they miss with [`Msg::IWant`], answered from a bounded
+//!   message cache. Mesh membership is negotiated with explicit
+//!   [`Msg::Graft`] / [`Msg::Prune`] control frames; candidate choice
+//!   is a deterministic FxHash ranking (no extra RNG draws, mirroring
+//!   the repair-jitter discipline in `peersdb::node`).
+//!
+//!   Because neighbor sampling is asymmetric *and* resampled
+//!   continuously (`peersdb` draws a fresh random sample from the
+//!   routing table about once a second), the mesh cannot build its
+//!   edges on "peers I currently sample" — the intersection of two
+//!   nodes' samples is usually empty and never stable. Instead each
+//!   node re-announces its subscriptions every heartbeat to its
+//!   sampled neighbors and mesh members; the *received* announcement
+//!   records (expiring a few heartbeats after the sender falls
+//!   silent) are what make a peer a graft candidate and a lazy-digest
+//!   target. Every live subscriber is therefore always held as a
+//!   candidate by the ~`neighbor_degree` peers it announces to,
+//!   whatever either side's sample currently looks like.
+//!
+//! Payloads are refcounted [`Blob`]s: forwarding a message to N peers
+//! clones a pointer, never the bytes.
 
 use crate::codec::bin::{bytes_len, varint_len, Decode, DecodeError, Encode, Reader, Writer};
 use crate::net::{PeerId, WireSize};
+use crate::util::bytes::Blob;
 use crate::util::time::{Duration, Nanos};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
 
 /// A topic is the hash of its name (store address).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -35,19 +69,53 @@ impl Decode for Topic {
 
 pub const MAX_HOPS: u8 = 16;
 
+/// Identity of a published message: `(origin, per-origin sequence)`.
+/// The same pair keys the seen-cache and the mesh message cache; on the
+/// wire the seq is a fixed 8-byte word so `IHave`/`IWant` sizes stay
+/// O(1)-computable from the id count alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MsgId {
+    pub origin: PeerId,
+    pub seq: u64,
+}
+
+impl Encode for MsgId {
+    fn encode(&self, w: &mut Writer) {
+        self.origin.encode(w);
+        w.put_u64(self.seq);
+    }
+}
+impl Decode for MsgId {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(MsgId { origin: PeerId::decode(r)?, seq: r.get_u64()? })
+    }
+}
+
+/// Encoded length of one [`MsgId`]: 32-byte peer id + fixed u64 seq.
+const MSG_ID_WIRE: usize = 32 + 8;
+
 /// Pubsub wire messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Announce our subscriptions to a neighbor.
     Subscriptions { topics: Vec<Topic> },
-    /// Flooded application message.
+    /// Application message, pushed eagerly (flooded, or mesh-routed).
     Publish {
         topic: Topic,
         origin: PeerId,
         seq: u64,
         hops: u8,
-        data: Vec<u8>,
+        data: Blob,
     },
+    /// Lazy advertisement: ids cached this heartbeat window, batched to
+    /// subscribed non-mesh neighbors. Mesh mode only.
+    IHave { topic: Topic, ids: Vec<MsgId> },
+    /// Pull request for advertised messages we have not seen.
+    IWant { ids: Vec<MsgId> },
+    /// Ask the receiver to add us to its mesh for `topic`.
+    Graft { topic: Topic },
+    /// Tell the receiver we removed it from our mesh for `topic`.
+    Prune { topic: Topic },
 }
 
 impl Encode for Msg {
@@ -65,6 +133,23 @@ impl Encode for Msg {
                 w.put_u8(*hops);
                 w.put_bytes(data);
             }
+            Msg::IHave { topic, ids } => {
+                w.put_u8(2);
+                topic.encode(w);
+                ids.encode(w);
+            }
+            Msg::IWant { ids } => {
+                w.put_u8(3);
+                ids.encode(w);
+            }
+            Msg::Graft { topic } => {
+                w.put_u8(4);
+                topic.encode(w);
+            }
+            Msg::Prune { topic } => {
+                w.put_u8(5);
+                topic.encode(w);
+            }
         }
     }
 }
@@ -78,49 +163,162 @@ impl Decode for Msg {
                 origin: PeerId::decode(r)?,
                 seq: r.get_varint()?,
                 hops: r.get_u8()?,
-                data: r.get_bytes()?.to_vec(),
+                data: r.get_bytes()?.into(),
             },
+            2 => Msg::IHave { topic: Topic::decode(r)?, ids: Vec::decode(r)? },
+            3 => Msg::IWant { ids: Vec::decode(r)? },
+            4 => Msg::Graft { topic: Topic::decode(r)? },
+            5 => Msg::Prune { topic: Topic::decode(r)? },
             _ => return Err(DecodeError("bad pubsub tag")),
         })
     }
 }
 
 impl WireSize for Msg {
-    /// Exact encoded length in O(1) (topics are fixed 8-byte hashes;
-    /// `Publish` adds origin, varint seq, hop byte and the payload).
-    /// Property-tested against the real encoding in `tests/prop.rs`.
+    /// Exact encoded length in O(1) (topics are fixed 8-byte hashes,
+    /// message ids fixed 40-byte pairs; `Publish` adds origin, varint
+    /// seq, hop byte and the payload). Property-tested against the real
+    /// encoding in `tests/prop.rs`.
     fn wire_size(&self) -> usize {
         match self {
             Msg::Subscriptions { topics } => 1 + varint_len(topics.len() as u64) + topics.len() * 8,
             Msg::Publish { seq, data, .. } => {
                 1 + 8 + 32 + varint_len(*seq) + 1 + bytes_len(data.len())
             }
+            Msg::IHave { ids, .. } => {
+                1 + 8 + varint_len(ids.len() as u64) + ids.len() * MSG_ID_WIRE
+            }
+            Msg::IWant { ids } => 1 + varint_len(ids.len() as u64) + ids.len() * MSG_ID_WIRE,
+            Msg::Graft { .. } | Msg::Prune { .. } => 1 + 8,
         }
     }
 }
 
-/// Message delivered to the local node.
+/// Message delivered to the local node. The payload is the shared
+/// refcounted allocation — delivering does not copy.
 #[derive(Clone, Debug)]
 pub struct Delivery {
     pub topic: Topic,
     pub origin: PeerId,
-    pub data: Vec<u8>,
+    pub data: Blob,
 }
 
-/// Floodsub engine. One per node.
+/// Gossip-mesh knobs. Defaults follow the gossipsub shape scaled to
+/// this crate's neighbor sample size (`NodeConfig::neighbor_degree`,
+/// default 8): a target degree well below the sample keeps eager-push
+/// amplification bounded while the low/high watermarks absorb churn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeshConfig {
+    /// Target mesh degree D: grafted up to this many members per topic.
+    pub degree: usize,
+    /// Repair threshold: below this the heartbeat grafts back to D.
+    pub degree_low: usize,
+    /// Prune threshold: above this the heartbeat prunes back to D.
+    pub degree_high: usize,
+    /// Lazy fan-out bound: at most this many non-mesh subscribers
+    /// (rank-preferred) receive each heartbeat's `IHave` digest per
+    /// topic, so a dense announcement-record set cannot turn the lazy
+    /// tier into a second flood.
+    pub lazy_degree: usize,
+    /// Heartbeat cadence: mesh repair, subscription re-announcement,
+    /// IHAVE batching, cache rotation.
+    pub heartbeat: Duration,
+    /// Message-cache depth in heartbeat windows: how long an id can be
+    /// advertised and its payload served to `IWant` pulls.
+    pub history_windows: usize,
+    /// Liveness lease for mesh members grafted by the remote side (we
+    /// may never have sampled them as neighbors ourselves). Refreshed
+    /// by any frame from the peer; an expired non-neighbor member is
+    /// swept at the next heartbeat — this is what finally unsticks a
+    /// crashed peer from the mesh.
+    pub graft_lease: Duration,
+}
+
+impl Default for MeshConfig {
+    fn default() -> Self {
+        MeshConfig {
+            degree: 3,
+            degree_low: 2,
+            degree_high: 6,
+            lazy_degree: 6,
+            heartbeat: Duration::from_secs(1),
+            history_windows: 5,
+            graft_lease: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Deterministic mesh preference: FxHash of `(own, peer)`. Every node
+/// ranks its candidate set differently (so meshes don't all collapse
+/// onto the same hubs) but identically across runs and heartbeats —
+/// zero RNG draws, mirroring the repair-jitter discipline.
+fn mesh_rank(own: PeerId, peer: PeerId) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::fxhash::FxHasher::default();
+    h.write(&own.0);
+    h.write(&peer.0);
+    h.finish()
+}
+
+/// Pubsub engine (flood or mesh). One per node.
 pub struct Engine {
     own: PeerId,
     subscriptions: BTreeSet<Topic>,
-    /// Known neighbor subscriptions.
-    neighbor_topics: HashMap<PeerId, BTreeSet<Topic>>,
+    /// Known subscriber records, fed by received `Subscriptions`
+    /// frames. Flood mode prunes them to the neighbor sample on every
+    /// refresh; mesh mode instead holds records for *any* announcer
+    /// (that is what makes the asymmetric sample workable — see the
+    /// module docs) and expires them via [`Engine::subs_heard`] a few
+    /// heartbeats after the sender falls silent. Ordered map: the
+    /// heartbeat's graft/IHAVE target iteration must be deterministic.
+    neighbor_topics: BTreeMap<PeerId, BTreeSet<Topic>>,
+    /// Mesh mode: when each subscriber record was last refreshed by an
+    /// announcement (its freshness clock; never read in flood mode).
+    subs_heard: HashMap<PeerId, Nanos>,
     neighbors: BTreeSet<PeerId>,
     seen: HashMap<(PeerId, u64), Nanos>,
     seen_ttl: Duration,
     next_seq: u64,
     pub deliveries: Vec<Delivery>,
+    /// Messages this node originated.
     pub published: u64,
+    /// `Publish` frames this node pushed onto links — publish fan-out,
+    /// relays and `IWant` serves alike. Actual sends, not "messages we
+    /// decided to forward": a relay with no eligible receivers counts
+    /// zero, so the bench's redundancy denominator is honest.
     pub forwarded: u64,
+    /// First-copy deliveries to the local subscriber.
+    pub delivered: u64,
+    /// Duplicate `Publish` frames received (suppressed).
     pub duplicates: u64,
+
+    // --- mesh state (inert unless `mesh_cfg` is set) ---
+    mesh_cfg: Option<MeshConfig>,
+    /// Per-topic mesh members (eager-push targets).
+    mesh: BTreeMap<Topic, BTreeSet<PeerId>>,
+    /// Last frame seen from each mesh member (liveness lease).
+    mesh_lease: HashMap<PeerId, Nanos>,
+    /// Bounded message cache: id → (topic, hops-to-serve, payload).
+    mcache: HashMap<(PeerId, u64), (Topic, u8, Blob)>,
+    /// Cache rotation: ids admitted per heartbeat window, oldest first.
+    mcache_windows: VecDeque<Vec<(PeerId, u64)>>,
+    /// Ids cached since the last heartbeat, batched into `IHave`s.
+    pending_ihave: BTreeMap<Topic, Vec<MsgId>>,
+    /// Ids already pulled this heartbeat (don't re-request from every
+    /// `IHave` sender at once); cleared on heartbeat.
+    iwant_requested: HashSet<(PeerId, u64)>,
+    last_heartbeat: Nanos,
+    /// Every id ever delivered locally — the ground-truth record behind
+    /// the full-delivery invariant (`sim::scenario`). Bounded by the
+    /// number of messages published cluster-wide, which for this crate
+    /// is the contribution count: a handful per scenario.
+    delivered_ids: BTreeSet<(PeerId, u64)>,
+    /// Mesh telemetry: `IHave` frames sent, `Publish` frames served to
+    /// `IWant` pulls, mesh additions, mesh removals.
+    pub ihave_sent: u64,
+    pub iwant_served: u64,
+    pub grafts: u64,
+    pub prunes: u64,
 }
 
 pub type Sends = Vec<(PeerId, Msg)>;
@@ -130,7 +328,8 @@ impl Engine {
         Engine {
             own,
             subscriptions: BTreeSet::new(),
-            neighbor_topics: HashMap::new(),
+            neighbor_topics: BTreeMap::new(),
+            subs_heard: HashMap::new(),
             neighbors: BTreeSet::new(),
             seen: HashMap::new(),
             seen_ttl: Duration::from_secs(120),
@@ -138,8 +337,53 @@ impl Engine {
             deliveries: Vec::new(),
             published: 0,
             forwarded: 0,
+            delivered: 0,
             duplicates: 0,
+            mesh_cfg: None,
+            mesh: BTreeMap::new(),
+            mesh_lease: HashMap::new(),
+            mcache: HashMap::new(),
+            mcache_windows: VecDeque::new(),
+            pending_ihave: BTreeMap::new(),
+            iwant_requested: HashSet::new(),
+            last_heartbeat: Nanos::ZERO,
+            delivered_ids: BTreeSet::new(),
+            ihave_sent: 0,
+            iwant_served: 0,
+            grafts: 0,
+            prunes: 0,
         }
+    }
+
+    /// Switch this engine from flood to gossip-mesh dissemination.
+    /// Call before any traffic flows (node construction time).
+    pub fn enable_mesh(&mut self, cfg: MeshConfig) {
+        self.mesh_cfg = Some(cfg);
+    }
+
+    pub fn mesh_enabled(&self) -> bool {
+        self.mesh_cfg.is_some()
+    }
+
+    /// Mesh telemetry `(ihave_sent, iwant_served, grafts, prunes)`.
+    pub fn mesh_stats(&self) -> (u64, u64, u64, u64) {
+        (self.ihave_sent, self.iwant_served, self.grafts, self.prunes)
+    }
+
+    /// Number of messages this engine has published (seqs `1..=n`).
+    pub fn published_count(&self) -> u64 {
+        self.published
+    }
+
+    /// Whether `(origin, seq)` was ever delivered to the local
+    /// subscriber — the per-node half of the full-delivery invariant.
+    pub fn has_delivered(&self, origin: PeerId, seq: u64) -> bool {
+        self.delivered_ids.contains(&(origin, seq))
+    }
+
+    /// Current mesh members for `topic` (empty in flood mode).
+    pub fn mesh_members(&self, topic: Topic) -> Vec<PeerId> {
+        self.mesh.get(&topic).map(|m| m.iter().copied().collect()).unwrap_or_default()
     }
 
     pub fn subscribe(&mut self, topic: Topic, out: &mut Sends) {
@@ -161,7 +405,14 @@ impl Engine {
             .copied()
             .collect();
         self.neighbors = peers.into_iter().filter(|p| *p != self.own).collect();
-        self.neighbor_topics.retain(|p, _| self.neighbors.contains(p));
+        if self.mesh_cfg.is_none() {
+            // Flood mode scopes subscriber records to the sample: the
+            // broadcast set is exactly `neighbors ∩ records`. Mesh mode
+            // keeps records across refreshes (they expire on their own
+            // freshness clock instead) because its graft candidates and
+            // lazy digests deliberately outlive any one sample.
+            self.neighbor_topics.retain(|p, _| self.neighbors.contains(p));
+        }
         if !self.subscriptions.is_empty() {
             for p in new {
                 out.push((
@@ -183,18 +434,32 @@ impl Engine {
         }
     }
 
-    /// Publish `data` on `topic`, flooding to subscribed neighbors.
-    pub fn publish(&mut self, now: Nanos, topic: Topic, data: Vec<u8>, out: &mut Sends) {
+    /// Publish `data` on `topic`: flood to subscribed neighbors, or
+    /// (mesh mode) eager-push to mesh members and advertise lazily to
+    /// the rest on the next heartbeat.
+    pub fn publish(&mut self, now: Nanos, topic: Topic, data: impl Into<Blob>, out: &mut Sends) {
+        let data: Blob = data.into();
         let seq = self.next_seq;
         self.next_seq += 1;
         self.published += 1;
         self.seen.insert((self.own, seq), now);
+        if self.mesh_cfg.is_some() {
+            self.remember(topic, (self.own, seq), 0, &data);
+        }
         let msg = Msg::Publish { topic, origin: self.own, seq, hops: 0, data };
-        self.flood(&msg, None, out);
+        let sent = if self.mesh_cfg.is_some() {
+            self.eager_push(&msg, None, out)
+        } else {
+            self.flood(&msg, None, out)
+        };
+        self.forwarded += sent;
     }
 
-    fn flood(&mut self, msg: &Msg, skip: Option<PeerId>, out: &mut Sends) {
-        let Msg::Publish { topic, .. } = msg else { return };
+    /// Flood `msg` to every subscribed neighbor except `skip`; returns
+    /// the number of frames actually pushed.
+    fn flood(&mut self, msg: &Msg, skip: Option<PeerId>, out: &mut Sends) -> u64 {
+        let Msg::Publish { topic, .. } = msg else { return 0 };
+        let mut sent = 0;
         for p in &self.neighbors {
             if Some(*p) == skip {
                 continue;
@@ -206,38 +471,326 @@ impl Engine {
                 .unwrap_or(false);
             if subscribed {
                 out.push((*p, msg.clone()));
+                sent += 1;
             }
+        }
+        sent
+    }
+
+    /// Push `msg` to the topic's mesh members except `skip`; returns
+    /// the number of frames pushed. Grafting is the subscription
+    /// assertion, so no per-member topic check is needed.
+    fn eager_push(&mut self, msg: &Msg, skip: Option<PeerId>, out: &mut Sends) -> u64 {
+        let Msg::Publish { topic, .. } = msg else { return 0 };
+        let Some(members) = self.mesh.get(topic) else { return 0 };
+        let mut sent = 0;
+        for p in members {
+            if Some(*p) == skip {
+                continue;
+            }
+            out.push((*p, msg.clone()));
+            sent += 1;
+        }
+        sent
+    }
+
+    /// Admit an id into the message cache and the pending-IHAVE batch.
+    fn remember(&mut self, topic: Topic, id: (PeerId, u64), hops: u8, data: &Blob) {
+        if self.mcache.insert(id, (topic, hops, data.clone())).is_none() {
+            self.pending_ihave
+                .entry(topic)
+                .or_default()
+                .push(MsgId { origin: id.0, seq: id.1 });
         }
     }
 
     pub fn on_msg(&mut self, now: Nanos, from: PeerId, msg: Msg, out: &mut Sends) {
+        let mesh_on = self.mesh_cfg.is_some();
+        if mesh_on && self.mesh_lease.contains_key(&from) {
+            // Any frame is a liveness proof for a mesh member.
+            self.mesh_lease.insert(from, now);
+        }
         match msg {
             Msg::Subscriptions { topics } => {
-                self.neighbors.insert(from);
+                // Flood mode keeps the legacy unilateral insert: neighbor
+                // sampling is asymmetric (A samples B; B first hears of A
+                // through this very frame), so the insert is the only
+                // channel that makes the B→A flood edge exist. The
+                // resurrection hazard it carries — a late frame from a
+                // departed peer re-adding it past `set_neighbors`
+                // pruning — is bounded by the next neighbor refresh and,
+                // in the DES, suppressed entirely by the crash-epoch
+                // plane. Mesh mode drops the hack: an announcement earns
+                // no broadcast edge, only an expiring subscriber record
+                // (graft candidacy plus at most a few heartbeats of lazy
+                // digests); eager links are negotiated explicitly with
+                // `Graft` and leased, so a departed peer's late frame
+                // cannot resurrect it into anyone's forwarding set.
+                if mesh_on {
+                    self.subs_heard.insert(from, now);
+                } else {
+                    self.neighbors.insert(from);
+                }
                 self.neighbor_topics.insert(from, topics.into_iter().collect());
             }
             Msg::Publish { topic, origin, seq, hops, data } => {
-                if self.seen.contains_key(&(origin, seq)) {
+                let id = (origin, seq);
+                // Mesh mode also dedups against the message cache: the
+                // cache outlives a seen-cache expiry within its window
+                // span, so an expiry-driven redelivery is suppressed
+                // instead of double-counted.
+                if self.seen.contains_key(&id) || (mesh_on && self.mcache.contains_key(&id)) {
                     self.duplicates += 1;
                     return;
                 }
-                self.seen.insert((origin, seq), now);
+                self.seen.insert(id, now);
                 if self.subscriptions.contains(&topic) {
+                    self.delivered += 1;
+                    self.delivered_ids.insert(id);
                     self.deliveries.push(Delivery { topic, origin, data: data.clone() });
                 }
+                if mesh_on {
+                    // Cache even at the hop limit: IWANT serves reset the
+                    // hop budget at the cache holder, they don't extend a
+                    // single flood path.
+                    self.remember(topic, id, hops.saturating_add(1), &data);
+                }
                 if hops < MAX_HOPS {
-                    self.forwarded += 1;
                     let fwd = Msg::Publish { topic, origin, seq, hops: hops + 1, data };
-                    self.flood(&fwd, Some(from), out);
+                    let sent = if mesh_on {
+                        self.eager_push(&fwd, Some(from), out)
+                    } else {
+                        self.flood(&fwd, Some(from), out)
+                    };
+                    self.forwarded += sent;
+                }
+            }
+            Msg::IHave { topic, ids } => {
+                if !mesh_on || !self.subscriptions.contains(&topic) {
+                    return;
+                }
+                let mut want = Vec::new();
+                for id in ids {
+                    let key = (id.origin, id.seq);
+                    if self.seen.contains_key(&key)
+                        || self.mcache.contains_key(&key)
+                        || self.iwant_requested.contains(&key)
+                    {
+                        continue;
+                    }
+                    self.iwant_requested.insert(key);
+                    want.push(id);
+                }
+                if !want.is_empty() {
+                    out.push((from, Msg::IWant { ids: want }));
+                }
+            }
+            Msg::IWant { ids } => {
+                if !mesh_on {
+                    return;
+                }
+                for id in ids {
+                    if let Some((topic, hops, data)) = self.mcache.get(&(id.origin, id.seq)) {
+                        out.push((
+                            from,
+                            Msg::Publish {
+                                topic: *topic,
+                                origin: id.origin,
+                                seq: id.seq,
+                                hops: *hops,
+                                data: data.clone(),
+                            },
+                        ));
+                        self.iwant_served += 1;
+                        self.forwarded += 1;
+                    }
+                }
+            }
+            Msg::Graft { topic } => {
+                if !mesh_on {
+                    return;
+                }
+                if self.subscriptions.contains(&topic) {
+                    if self.mesh.entry(topic).or_default().insert(from) {
+                        self.grafts += 1;
+                    }
+                    self.mesh_lease.insert(from, now);
+                } else {
+                    out.push((from, Msg::Prune { topic }));
+                }
+            }
+            Msg::Prune { topic } => {
+                if !mesh_on {
+                    return;
+                }
+                if let Some(m) = self.mesh.get_mut(&topic) {
+                    if m.remove(&from) {
+                        self.prunes += 1;
+                    }
                 }
             }
         }
     }
 
-    /// Expire the seen-cache.
-    pub fn tick(&mut self, now: Nanos) {
+    /// Periodic service: expire the seen-cache, and in mesh mode drive
+    /// the heartbeat (mesh repair, IHAVE batching, cache rotation).
+    /// Flood mode never pushes a send here, so pre-mesh schedules
+    /// replay bit-identically through the widened signature.
+    pub fn tick(&mut self, now: Nanos, out: &mut Sends) {
         let ttl = self.seen_ttl;
         self.seen.retain(|_, t| now.saturating_sub(*t) < ttl);
+        let Some(cfg) = self.mesh_cfg.clone() else { return };
+        if now.saturating_sub(self.last_heartbeat) < cfg.heartbeat {
+            return;
+        }
+        self.last_heartbeat = now;
+        self.heartbeat(now, &cfg, out);
+    }
+
+    /// Subscriber records expire this many heartbeats after the last
+    /// announcement from their holder: long enough to ride out frame
+    /// reordering, short enough that a departed peer stops drawing
+    /// grafts and digests within a few seconds.
+    const RECORD_TTL_HEARTBEATS: u64 = 3;
+
+    fn heartbeat(&mut self, now: Nanos, cfg: &MeshConfig, out: &mut Sends) {
+        // 0. Re-announce our subscriptions to the sampled neighbors and
+        //    every mesh member. This is the record-refresh channel: the
+        //    ~`neighbor_degree` peers we announce to each hold our
+        //    subscriber record for the next few heartbeats, which is
+        //    exactly what keeps us graftable and a lazy-digest target
+        //    under continuous resampling (module docs). Announcing to
+        //    mesh members doubles as a mutual lease refresh, so a live
+        //    mesh edge never cycles through lease expiry.
+        if !self.subscriptions.is_empty() {
+            let mut targets = self.neighbors.clone();
+            for members in self.mesh.values() {
+                targets.extend(members.iter().copied());
+            }
+            let topics = self.subscriptions();
+            for p in targets {
+                out.push((p, Msg::Subscriptions { topics: topics.clone() }));
+            }
+        }
+
+        // 1. Expire subscriber records whose holder fell silent, then
+        //    sweep departed mesh members: not in the current neighbor
+        //    sample and lease expired (no frame within the lease).
+        let record_ttl = Duration(cfg.heartbeat.0.saturating_mul(Self::RECORD_TTL_HEARTBEATS));
+        let heard = &self.subs_heard;
+        self.neighbor_topics
+            .retain(|p, _| heard.get(p).is_some_and(|t| now.saturating_sub(*t) < record_ttl));
+        let records = &self.neighbor_topics;
+        self.subs_heard.retain(|p, _| records.contains_key(p));
+        let mut dead: Vec<(Topic, PeerId)> = Vec::new();
+        for (t, members) in &self.mesh {
+            for p in members {
+                if self.neighbors.contains(p) {
+                    continue;
+                }
+                let fresh = self
+                    .mesh_lease
+                    .get(p)
+                    .map(|l| now.saturating_sub(*l) < cfg.graft_lease)
+                    .unwrap_or(false);
+                if !fresh {
+                    dead.push((*t, *p));
+                }
+            }
+        }
+        for (t, p) in dead {
+            if let Some(m) = self.mesh.get_mut(&t) {
+                if m.remove(&p) {
+                    self.prunes += 1;
+                    out.push((p, Msg::Prune { topic: t }));
+                }
+            }
+        }
+        let mesh = &self.mesh;
+        self.mesh_lease.retain(|p, _| mesh.values().any(|m| m.contains(p)));
+
+        // 2. Degree maintenance per subscribed topic: graft back up to D
+        //    below the low watermark, prune back down to D above the
+        //    high one. Candidates are the fresh subscriber records —
+        //    peers that announced *to us* recently, whether or not we
+        //    happen to sample them — preferred by the deterministic
+        //    rank. (Requiring candidates to sit in our own sample would
+        //    starve the mesh: two nodes' random samples rarely
+        //    intersect, and never for long.)
+        let topics: Vec<Topic> = self.subscriptions.iter().copied().collect();
+        for topic in topics {
+            let members = self.mesh.entry(topic).or_default().clone();
+            if members.len() < cfg.degree_low {
+                let mut cands: Vec<PeerId> = self
+                    .neighbor_topics
+                    .iter()
+                    .filter(|(p, t)| {
+                        **p != self.own && !members.contains(*p) && t.contains(&topic)
+                    })
+                    .map(|(p, _)| *p)
+                    .collect();
+                cands.sort_by_key(|p| mesh_rank(self.own, *p));
+                let need = cfg.degree.saturating_sub(members.len());
+                for p in cands.into_iter().take(need) {
+                    if self.mesh.entry(topic).or_default().insert(p) {
+                        self.grafts += 1;
+                        self.mesh_lease.entry(p).or_insert(now);
+                        out.push((p, Msg::Graft { topic }));
+                    }
+                }
+            } else if members.len() > cfg.degree_high {
+                let mut ranked: Vec<PeerId> = members.iter().copied().collect();
+                ranked.sort_by_key(|p| mesh_rank(self.own, *p));
+                for p in ranked.into_iter().skip(cfg.degree) {
+                    if self.mesh.entry(topic).or_default().remove(&p) {
+                        self.prunes += 1;
+                        out.push((p, Msg::Prune { topic }));
+                    }
+                }
+            }
+        }
+
+        // 3. Flush the batched IHAVE digests to subscribed record
+        //    holders outside the mesh (mesh members got the full
+        //    frames), capped at `lazy_degree` rank-preferred targets
+        //    per topic. The records are refreshed by step 0's
+        //    re-announcements, so every live subscriber keeps drawing
+        //    digests from the peers it announces to; what one
+        //    heartbeat's digest misses, the next hop's re-advertisement
+        //    of a pulled id covers — the lazy wave crosses the cluster
+        //    one heartbeat per hop.
+        let pending = std::mem::take(&mut self.pending_ihave);
+        let mut window: Vec<(PeerId, u64)> = Vec::new();
+        for (topic, ids) in pending {
+            window.extend(ids.iter().map(|id| (id.origin, id.seq)));
+            let members = self.mesh.get(&topic).cloned().unwrap_or_default();
+            let mut lazy: Vec<PeerId> = self
+                .neighbor_topics
+                .iter()
+                .filter(|(p, t)| **p != self.own && !members.contains(*p) && t.contains(&topic))
+                .map(|(p, _)| *p)
+                .collect();
+            lazy.sort_by_key(|p| mesh_rank(self.own, *p));
+            lazy.truncate(cfg.lazy_degree);
+            for p in lazy {
+                out.push((p, Msg::IHave { topic, ids: ids.clone() }));
+                self.ihave_sent += 1;
+            }
+        }
+
+        // 4. Rotate the message cache: admit this window, drop payloads
+        //    past the history horizon.
+        self.mcache_windows.push_back(window);
+        while self.mcache_windows.len() > cfg.history_windows {
+            if let Some(old) = self.mcache_windows.pop_front() {
+                for id in old {
+                    self.mcache.remove(&id);
+                }
+            }
+        }
+
+        // 5. A fresh heartbeat may re-request ids still missing.
+        self.iwant_requested.clear();
     }
 }
 
@@ -297,16 +850,30 @@ mod tests {
     #[test]
     fn msg_roundtrip() {
         let mut rng = Rng::new(1);
-        let m = Msg::Publish {
-            topic: Topic::named("x"),
-            origin: PeerId::from_rng(&mut rng),
-            seq: 9,
-            hops: 3,
-            data: b"heads".to_vec(),
-        };
-        let b = crate::codec::to_bytes(&m);
-        assert_eq!(crate::codec::from_bytes::<Msg>(&b).unwrap(), m);
-        assert_eq!(m.wire_size(), b.len(), "wire_size must be exact");
+        let origin = PeerId::from_rng(&mut rng);
+        let peer = PeerId::from_rng(&mut rng);
+        let cases = vec![
+            Msg::Subscriptions { topics: vec![Topic::named("a"), Topic::named("b")] },
+            Msg::Publish {
+                topic: Topic::named("x"),
+                origin,
+                seq: 9,
+                hops: 3,
+                data: b"heads".into(),
+            },
+            Msg::IHave {
+                topic: Topic::named("x"),
+                ids: vec![MsgId { origin, seq: 1 }, MsgId { origin: peer, seq: 300 }],
+            },
+            Msg::IWant { ids: vec![MsgId { origin, seq: u64::MAX }] },
+            Msg::Graft { topic: Topic::named("g") },
+            Msg::Prune { topic: Topic::named("p") },
+        ];
+        for m in cases {
+            let b = crate::codec::to_bytes(&m);
+            assert_eq!(crate::codec::from_bytes::<Msg>(&b).unwrap(), m);
+            assert_eq!(m.wire_size(), b.len(), "wire_size must be exact for {m:?}");
+        }
     }
 
     #[test]
@@ -324,7 +891,7 @@ mod tests {
         for p in &ps[1..] {
             let e = engines.get(p).unwrap();
             assert_eq!(e.deliveries.len(), 1, "peer did not receive");
-            assert_eq!(e.deliveries[0].data, b"new-head");
+            assert_eq!(&e.deliveries[0].data[..], &b"new-head"[..]);
         }
     }
 
@@ -390,23 +957,492 @@ mod tests {
         out.clear();
         a.publish(Nanos(0), t_other, b"m".to_vec(), &mut out);
         assert!(out.is_empty(), "b is not subscribed to t_other");
+        assert_eq!(a.forwarded, 0, "zero-send publish must not count as forwarded");
         a.publish(Nanos(0), t_sub, b"m".to_vec(), &mut out);
         assert_eq!(out.len(), 1);
+        assert_eq!(a.forwarded, 1, "forwarded counts actual link sends");
+    }
+
+    #[test]
+    fn forwarded_counts_actual_sends_on_relay() {
+        // A relay with no subscribed neighbors forwards nothing and the
+        // counter must say so (the redundancy denominator's honesty).
+        let ps = ids(2, 51);
+        let mut e = Engine::new(ps[0]);
+        let mut out = Sends::new();
+        let t = Topic::named("t");
+        e.subscribe(t, &mut out);
+        out.clear();
+        let m = Msg::Publish { topic: t, origin: ps[1], seq: 1, hops: 0, data: b"x".into() };
+        e.on_msg(Nanos(0), ps[1], m, &mut out);
+        assert_eq!(e.deliveries.len(), 1);
+        assert!(out.is_empty());
+        assert_eq!(e.forwarded, 0, "no receivers → no forwards counted");
+    }
+
+    #[test]
+    fn forwarding_shares_the_payload_allocation() {
+        // Zero-copy: every frame flooded out carries the same refcounted
+        // allocation as the frame that came in.
+        let ps = ids(4, 52);
+        let t = Topic::named("t");
+        let mut e = Engine::new(ps[0]);
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        e.set_neighbors(vec![ps[1], ps[2], ps[3]], &mut out);
+        for p in &ps[1..] {
+            e.on_msg(Nanos(0), *p, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        }
+        out.clear();
+        let payload: Blob = b"shared-bytes".into();
+        let m = Msg::Publish { topic: t, origin: ps[1], seq: 7, hops: 0, data: payload.clone() };
+        e.on_msg(Nanos(0), ps[1], m, &mut out);
+        assert_eq!(out.len(), 2, "forwarded to the two other subscribed neighbors");
+        for (_, fwd) in &out {
+            let Msg::Publish { data, .. } = fwd else { panic!("expected Publish") };
+            assert!(Blob::ptr_eq(data, &payload), "forwarding must clone the pointer");
+        }
+        assert!(Blob::ptr_eq(&e.deliveries[0].data, &payload), "delivery shares it too");
     }
 
     #[test]
     fn seen_cache_expires() {
+        // Flood mode: after the seen-cache TTL a redelivery is accepted
+        // again (upper layers dedupe by content). The mesh replaces this
+        // with mcache-backed suppression — see
+        // `mesh_expiry_redelivery_deduped_by_mcache`.
         let ps = ids(2, 6);
         let mut e = Engine::new(ps[0]);
         let mut out = Sends::new();
         let t = Topic::named("t");
         e.subscribe(t, &mut out);
-        let m = Msg::Publish { topic: t, origin: ps[1], seq: 1, hops: 0, data: vec![] };
+        let m = Msg::Publish { topic: t, origin: ps[1], seq: 1, hops: 0, data: Blob::empty() };
         e.on_msg(Nanos(0), ps[1], m.clone(), &mut out);
         assert_eq!(e.deliveries.len(), 1);
-        e.tick(Nanos(200_000_000_000)); // 200 s later
+        e.tick(Nanos(200_000_000_000), &mut out); // 200 s later
+        assert!(out.is_empty(), "flood-mode tick must stay send-free");
         e.on_msg(Nanos(200_000_000_000), ps[1], m, &mut out);
         // Cache expired → delivered again (upper layers dedupe by content).
         assert_eq!(e.deliveries.len(), 2);
+    }
+
+    // ------------------------------------------------------------------
+    // Mesh mode
+    // ------------------------------------------------------------------
+
+    fn mesh_engine(own: PeerId) -> Engine {
+        let mut e = Engine::new(own);
+        e.enable_mesh(MeshConfig::default());
+        e
+    }
+
+    /// A mesh engine with `n` subscribed neighbors and one heartbeat
+    /// already run (mesh formed). Returns (engine, topic, neighbors).
+    fn meshed(n: usize, seed: u64) -> (Engine, Topic, Vec<PeerId>) {
+        let ps = ids(n + 1, seed);
+        let mut e = mesh_engine(ps[0]);
+        let t = Topic::named("contrib");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        e.set_neighbors(ps[1..].to_vec(), &mut out);
+        for p in &ps[1..] {
+            e.on_msg(Nanos(0), *p, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        }
+        out.clear();
+        e.tick(Nanos(1_000_000_000), &mut out); // first heartbeat: graft
+        (e, t, ps[1..].to_vec())
+    }
+
+    #[test]
+    fn heartbeat_grafts_to_target_degree() {
+        let (e, t, _) = meshed(5, 7);
+        let cfg = MeshConfig::default();
+        assert_eq!(e.mesh_members(t).len(), cfg.degree, "mesh formed at target degree");
+        assert_eq!(e.grafts, cfg.degree as u64);
+    }
+
+    #[test]
+    fn publish_pushes_eagerly_only_to_mesh() {
+        let (mut e, t, _) = meshed(5, 8);
+        let members: BTreeSet<PeerId> = e.mesh_members(t).into_iter().collect();
+        let mut out = Sends::new();
+        e.publish(Nanos(2_000_000_000), t, b"head".to_vec(), &mut out);
+        assert_eq!(out.len(), members.len(), "one eager frame per mesh member");
+        for (to, m) in &out {
+            assert!(members.contains(to), "eager push went outside the mesh");
+            assert!(matches!(m, Msg::Publish { .. }));
+        }
+        assert_eq!(e.forwarded, members.len() as u64);
+    }
+
+    #[test]
+    fn heartbeat_advertises_lazily_to_non_mesh_subscribers() {
+        let (mut e, t, nbrs) = meshed(5, 9);
+        let members: BTreeSet<PeerId> = e.mesh_members(t).into_iter().collect();
+        let lazy: BTreeSet<PeerId> =
+            nbrs.iter().filter(|p| !members.contains(*p)).copied().collect();
+        assert!(!lazy.is_empty(), "test needs non-mesh subscribers");
+        let mut out = Sends::new();
+        // Publish and flush inside the record TTL (the fake neighbors
+        // never re-announce, so their records expire three heartbeats
+        // after the t=0 subscription exchange).
+        e.publish(Nanos(1_500_000_000), t, b"head".to_vec(), &mut out);
+        out.clear();
+        e.tick(Nanos(2_500_000_000), &mut out);
+        let ihaves: Vec<&PeerId> = out
+            .iter()
+            .filter(|(_, m)| matches!(m, Msg::IHave { .. }))
+            .map(|(to, _)| to)
+            .collect();
+        assert_eq!(ihaves.len(), lazy.len(), "one IHave per lazy subscriber");
+        for to in ihaves {
+            assert!(lazy.contains(to));
+        }
+        assert_eq!(e.ihave_sent, lazy.len() as u64);
+        // The batch drained: the next heartbeat advertises nothing new.
+        out.clear();
+        e.tick(Nanos(4_000_000_000), &mut out);
+        assert!(out.iter().all(|(_, m)| !matches!(m, Msg::IHave { .. })));
+    }
+
+    #[test]
+    fn iwant_pull_completes_delivery() {
+        let ps = ids(2, 10);
+        let (a, b) = (ps[0], ps[1]);
+        let mut ea = mesh_engine(a);
+        let mut eb = mesh_engine(b);
+        let t = Topic::named("contrib");
+        let mut out = Sends::new();
+        ea.subscribe(t, &mut out);
+        eb.subscribe(t, &mut out);
+        out.clear();
+        // a publishes with an empty mesh: the frame only enters a's cache.
+        ea.publish(Nanos(0), t, b"pulled".to_vec(), &mut out);
+        assert!(out.is_empty(), "no mesh members yet — nothing pushed");
+        // b hears the advertisement and pulls.
+        let ihave =
+            Msg::IHave { topic: t, ids: vec![MsgId { origin: a, seq: 1 }] };
+        eb.on_msg(Nanos(0), a, ihave, &mut out);
+        assert_eq!(out.len(), 1);
+        let (to, iwant) = out.remove(0);
+        assert_eq!(to, a);
+        assert!(matches!(iwant, Msg::IWant { .. }));
+        ea.on_msg(Nanos(0), b, iwant, &mut out);
+        assert_eq!(out.len(), 1, "cache must serve the pull");
+        assert_eq!(ea.iwant_served, 1);
+        let (to, frame) = out.remove(0);
+        assert_eq!(to, b);
+        eb.on_msg(Nanos(0), a, frame, &mut out);
+        assert_eq!(eb.deliveries.len(), 1);
+        assert_eq!(&eb.deliveries[0].data[..], &b"pulled"[..]);
+        assert!(eb.has_delivered(a, 1));
+        // A second IHave for the same id draws no second pull.
+        let ihave2 =
+            Msg::IHave { topic: t, ids: vec![MsgId { origin: a, seq: 1 }] };
+        eb.on_msg(Nanos(0), a, ihave2, &mut out);
+        assert!(out.is_empty(), "already seen — no re-request");
+    }
+
+    #[test]
+    fn heartbeat_prunes_above_high_watermark() {
+        let ps = ids(9, 11);
+        let mut e = mesh_engine(ps[0]);
+        let t = Topic::named("contrib");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        e.set_neighbors(ps[1..].to_vec(), &mut out);
+        // Every neighbor grafts us: mesh overshoots the high watermark.
+        for p in &ps[1..] {
+            e.on_msg(Nanos(0), *p, Msg::Graft { topic: t }, &mut out);
+        }
+        let cfg = MeshConfig::default();
+        assert_eq!(e.mesh_members(t).len(), 8);
+        assert!(e.mesh_members(t).len() > cfg.degree_high);
+        out.clear();
+        e.tick(Nanos(1_000_000_000), &mut out);
+        assert_eq!(e.mesh_members(t).len(), cfg.degree, "pruned back to target degree");
+        let prunes = out.iter().filter(|(_, m)| matches!(m, Msg::Prune { .. })).count();
+        assert_eq!(prunes, 8 - cfg.degree, "a Prune frame per removed member");
+        assert_eq!(e.prunes, (8 - cfg.degree) as u64);
+    }
+
+    #[test]
+    fn graft_on_unsubscribed_topic_is_refused_with_prune() {
+        let ps = ids(2, 12);
+        let mut e = mesh_engine(ps[0]);
+        let t = Topic::named("never-subscribed");
+        let mut out = Sends::new();
+        e.on_msg(Nanos(0), ps[1], Msg::Graft { topic: t }, &mut out);
+        assert_eq!(out, vec![(ps[1], Msg::Prune { topic: t })]);
+        assert!(e.mesh_members(t).is_empty());
+    }
+
+    #[test]
+    fn mesh_expiry_redelivery_deduped_by_mcache() {
+        // The satellite regression: in mesh mode a seen-cache expiry no
+        // longer double-counts a redelivery — the message cache (still
+        // inside its window horizon) suppresses it as a duplicate.
+        let ps = ids(2, 13);
+        let mut e = mesh_engine(ps[0]);
+        let t = Topic::named("t");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        let m = Msg::Publish { topic: t, origin: ps[1], seq: 1, hops: 0, data: b"d".into() };
+        e.on_msg(Nanos(0), ps[1], m.clone(), &mut out);
+        assert_eq!(e.deliveries.len(), 1);
+        assert_eq!(e.delivered, 1);
+        // 200 s later the seen-cache entry is gone (TTL 120 s); one
+        // heartbeat has rotated the cache a single window — well inside
+        // the history horizon.
+        out.clear();
+        e.tick(Nanos(200_000_000_000), &mut out);
+        e.on_msg(Nanos(200_000_000_000), ps[1], m, &mut out);
+        assert_eq!(e.deliveries.len(), 1, "redelivery must be suppressed");
+        assert_eq!(e.delivered, 1, "delivered must not double-count");
+        assert_eq!(e.duplicates, 1, "suppression counts as a duplicate");
+    }
+
+    #[test]
+    fn mcache_rotates_out_past_the_history_horizon() {
+        let ps = ids(2, 14);
+        let mut e = mesh_engine(ps[0]);
+        let t = Topic::named("t");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        let m = Msg::Publish { topic: t, origin: ps[1], seq: 1, hops: 0, data: b"d".into() };
+        e.on_msg(Nanos(0), ps[1], m, &mut out);
+        // Run past `history_windows` heartbeats: the cached payload is
+        // dropped and an IWant for it goes unanswered.
+        for k in 1..=(MeshConfig::default().history_windows as u64 + 1) {
+            e.tick(Nanos(k * 1_000_000_000), &mut out);
+        }
+        out.clear();
+        let iwant = Msg::IWant { ids: vec![MsgId { origin: ps[1], seq: 1 }] };
+        e.on_msg(Nanos(10_000_000_000), ps[0], iwant, &mut out);
+        assert!(out.is_empty(), "rotated-out id must not be served");
+        assert_eq!(e.iwant_served, 0);
+    }
+
+    #[test]
+    fn subscription_from_unknown_peer_held_provisional_in_mesh_mode() {
+        // The churn regression: a late Subscriptions frame from a
+        // departed (sampled-out, table-evicted) peer must not resurrect
+        // it into the broadcast set. Mesh mode holds it as an expiring
+        // provisional record: worth at most a graft attempt and a few
+        // heartbeats of digests at the dead address, never a flood
+        // edge — and once the record expires and the lease sweeps any
+        // dangling graft, nothing targets the peer at all.
+        let ps = ids(3, 15);
+        let (own, nbr, departed) = (ps[0], ps[1], ps[2]);
+        let mut e = mesh_engine(own);
+        let t = Topic::named("contrib");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        e.set_neighbors(vec![nbr], &mut out);
+        e.on_msg(Nanos(0), nbr, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        // The departed peer's late frame arrives after pruning.
+        e.on_msg(Nanos(0), departed, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        assert!(!e.neighbors().contains(&departed), "no resurrection");
+        assert!(e.neighbor_topics.contains_key(&departed), "held as an expiring record");
+        // With no further announcements the record dies on its
+        // freshness clock within RECORD_TTL_HEARTBEATS.
+        for k in 1..=4u64 {
+            out.clear();
+            e.tick(Nanos(k * 1_000_000_000), &mut out);
+        }
+        assert!(!e.neighbor_topics.contains_key(&departed), "silent record expired");
+        // Past the graft lease the dead address is fully unstuck:
+        // neither eager frames nor lazy digests go its way.
+        out.clear();
+        e.tick(Nanos(70_000_000_000), &mut out); // lease sweep
+        out.clear();
+        e.publish(Nanos(70_500_000_000), t, b"x".to_vec(), &mut out);
+        e.tick(Nanos(71_500_000_000), &mut out); // flush IHAVEs too
+        assert!(
+            out.iter().all(|(to, _)| *to != departed),
+            "departed peer must receive neither eager frames nor IHaves"
+        );
+        // Flood mode, by contrast, keeps the legacy discovery insert.
+        let mut f = Engine::new(own);
+        f.subscribe(t, &mut out);
+        f.on_msg(Nanos(0), departed, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        assert!(f.neighbors().contains(&departed), "flood keeps the legacy edge");
+    }
+
+    #[test]
+    fn graft_candidates_come_from_records_not_the_sample() {
+        // The asymmetric-sampling liveness property: a peer that
+        // samples *us* (we never sampled it) announces its
+        // subscriptions, and that record alone must make it graftable
+        // and a lazy-digest target — requiring candidates to sit in our
+        // own continuously reshuffled sample would starve the mesh.
+        let ps = ids(3, 18);
+        let (own, r1, r2) = (ps[0], ps[1], ps[2]);
+        let mut e = Engine::new(own);
+        e.enable_mesh(MeshConfig {
+            degree: 1,
+            degree_low: 1,
+            degree_high: 2,
+            ..MeshConfig::default()
+        });
+        let t = Topic::named("contrib");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        assert!(e.neighbors().is_empty(), "we sample nobody in this test");
+        e.on_msg(Nanos(0), r1, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        e.on_msg(Nanos(0), r2, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        out.clear();
+        e.tick(Nanos(1_000_000_000), &mut out);
+        let grafted: Vec<PeerId> = out
+            .iter()
+            .filter(|(_, m)| matches!(m, Msg::Graft { .. }))
+            .map(|(to, _)| *to)
+            .collect();
+        let best = if mesh_rank(own, r1) <= mesh_rank(own, r2) { r1 } else { r2 };
+        let other = if best == r1 { r2 } else { r1 };
+        assert_eq!(grafted, vec![best], "rank-preferred record holder grafted");
+        assert_eq!(e.mesh_members(t), vec![best]);
+        // The ungrafted record holder is the lazy tier: it gets the digest.
+        out.clear();
+        e.publish(Nanos(1_500_000_000), t, b"head".to_vec(), &mut out);
+        e.tick(Nanos(2_500_000_000), &mut out);
+        assert!(
+            out.iter().any(|(to, m)| *to == other && matches!(m, Msg::IHave { .. })),
+            "record holder outside the mesh must draw the lazy digest"
+        );
+    }
+
+    #[test]
+    fn lazy_fanout_bounded_by_lazy_degree() {
+        let ps = ids(9, 19);
+        let mut e = Engine::new(ps[0]);
+        e.enable_mesh(MeshConfig {
+            degree: 1,
+            degree_low: 1,
+            degree_high: 2,
+            lazy_degree: 4,
+            ..MeshConfig::default()
+        });
+        let t = Topic::named("contrib");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        for p in &ps[1..] {
+            e.on_msg(Nanos(0), *p, Msg::Subscriptions { topics: vec![t] }, &mut out);
+        }
+        out.clear();
+        e.tick(Nanos(1_000_000_000), &mut out); // grafts 1 of the 8 records
+        out.clear();
+        e.publish(Nanos(1_500_000_000), t, b"head".to_vec(), &mut out);
+        out.clear();
+        e.tick(Nanos(2_500_000_000), &mut out);
+        let ihave_to: BTreeSet<PeerId> = out
+            .iter()
+            .filter(|(_, m)| matches!(m, Msg::IHave { .. }))
+            .map(|(to, _)| *to)
+            .collect();
+        assert_eq!(ihave_to.len(), 4, "digest fan-out capped at lazy_degree");
+        assert_eq!(e.ihave_sent, 4);
+        // The cap keeps the rank-preferred holders, deterministically.
+        let members: BTreeSet<PeerId> = e.mesh_members(t).into_iter().collect();
+        let mut expect: Vec<PeerId> =
+            ps[1..].iter().filter(|p| !members.contains(*p)).copied().collect();
+        expect.sort_by_key(|p| mesh_rank(ps[0], *p));
+        expect.truncate(4);
+        assert_eq!(ihave_to, expect.into_iter().collect::<BTreeSet<PeerId>>());
+    }
+
+    #[test]
+    fn heartbeat_reannounces_subscriptions_each_beat() {
+        // Step 0 of the heartbeat is the record-refresh channel:
+        // without it every record would expire within
+        // RECORD_TTL_HEARTBEATS of the initial exchange and the mesh
+        // would starve as soon as the neighbor sample reshuffles.
+        let (mut e, t, nbrs) = meshed(5, 20);
+        let mut out = Sends::new();
+        e.tick(Nanos(2_000_000_000), &mut out);
+        for p in &nbrs {
+            assert!(
+                out.iter().any(|(to, m)| to == p
+                    && matches!(m, Msg::Subscriptions { topics } if topics == &vec![t])),
+                "every sampled neighbor must be re-announced to"
+            );
+        }
+    }
+
+    #[test]
+    fn departed_mesh_member_is_swept_after_lease_expiry() {
+        let ps = ids(2, 16);
+        let (own, remote) = (ps[0], ps[1]);
+        let mut e = mesh_engine(own);
+        let t = Topic::named("contrib");
+        let mut out = Sends::new();
+        e.subscribe(t, &mut out);
+        // A remote graft from a peer we never sampled: accepted on a lease.
+        e.on_msg(Nanos(0), remote, Msg::Graft { topic: t }, &mut out);
+        assert_eq!(e.mesh_members(t), vec![remote]);
+        // Within the lease it survives heartbeats despite not being a
+        // sampled neighbor.
+        out.clear();
+        e.tick(Nanos(1_000_000_000), &mut out);
+        assert_eq!(e.mesh_members(t), vec![remote]);
+        // Past the lease with no traffic it is swept (and Pruned).
+        let later = Nanos(70_000_000_000); // > 60 s lease
+        e.tick(later, &mut out);
+        assert!(e.mesh_members(t).is_empty(), "dead member swept");
+        assert!(out.iter().any(|(to, m)| *to == remote && matches!(m, Msg::Prune { .. })));
+        out.clear();
+        e.publish(Nanos(71_000_000_000), t, b"x".to_vec(), &mut out);
+        assert!(out.iter().all(|(to, _)| *to != remote));
+    }
+
+    #[test]
+    fn mesh_line_topology_delivers_end_to_end() {
+        // Mesh engines on a 10-node line: after a heartbeat round the
+        // meshes cover the line links and a publish reaches everyone.
+        let ps = ids(10, 17);
+        let mut engines: HashMap<PeerId, Engine> =
+            ps.iter().map(|p| (*p, mesh_engine(*p))).collect();
+        let topic = Topic::named("contrib");
+        let mut queue = Vec::new();
+        for (i, p) in ps.iter().enumerate() {
+            let mut nbrs = Vec::new();
+            if i > 0 {
+                nbrs.push(ps[i - 1]);
+            }
+            if i + 1 < ps.len() {
+                nbrs.push(ps[i + 1]);
+            }
+            let e = engines.get_mut(p).unwrap();
+            let mut out = Sends::new();
+            e.subscribe(topic, &mut out);
+            e.set_neighbors(nbrs, &mut out);
+            for (t, m) in out {
+                queue.push((*p, t, m));
+            }
+        }
+        settle(&mut engines, queue);
+        // One heartbeat round: everyone grafts its line adjacents.
+        let mut queue = Vec::new();
+        for p in &ps {
+            let e = engines.get_mut(p).unwrap();
+            let mut out = Sends::new();
+            e.tick(Nanos(1_000_000_000), &mut out);
+            for (t, m) in out {
+                queue.push((*p, t, m));
+            }
+        }
+        settle(&mut engines, queue);
+        let mut out = Sends::new();
+        engines.get_mut(&ps[0]).unwrap().publish(
+            Nanos(2_000_000_000),
+            topic,
+            b"head".to_vec(),
+            &mut out,
+        );
+        let queue: Vec<_> = out.into_iter().map(|(t, m)| (ps[0], t, m)).collect();
+        settle(&mut engines, queue);
+        for p in &ps[1..] {
+            assert_eq!(engines.get(p).unwrap().deliveries.len(), 1, "line member missed");
+        }
     }
 }

@@ -9,9 +9,11 @@
 //! signal the perf-trajectory artifact is meant to carry.
 
 use crate::peersdb::{ChunkScheduler, NodeConfig};
+use crate::pubsub::MeshConfig;
 use crate::sim::regions::{Region, ALL};
 use crate::sim::scenario::{
-    AvailabilityInvariant, EclipseInvariant, Fault, Scenario, VerdictIntegrityInvariant,
+    AvailabilityInvariant, EclipseInvariant, Fault, PubsubDeliveryInvariant, Scenario,
+    VerdictIntegrityInvariant,
 };
 use crate::util::time::Duration;
 use crate::validation::CostModel;
@@ -738,6 +740,116 @@ pub fn city_scale() -> Scenario {
         .at(165, Fault::Contribute { node: 10, workload: 6, rows: 20 })
 }
 
+/// Initial peer count in the broadcast pair
+/// ([`mesh_broadcast_churn`] / [`flood_broadcast_churn`]).
+pub const BROADCAST_INITIAL: usize = 251;
+/// Flash-crowd wave size in the broadcast pair — two waves land, so the
+/// final population is `BROADCAST_INITIAL + 2 * BROADCAST_WAVE` = 501.
+pub const BROADCAST_WAVE: usize = 125;
+/// Crash/restart churn cycles in the broadcast pair. Targets walk
+/// `20 + (7k) % 200` over the initial population — all thirty are
+/// distinct, start at 20 (clear of the root and every publisher), and
+/// each victim is down for 15 s while announcements broadcast.
+pub const BROADCAST_CHURN_CYCLES: u64 = 30;
+
+/// The broadcast pair's churn targets, in schedule order — also the
+/// exempt set of its [`PubsubDeliveryInvariant`]: a crash wipes the
+/// victim's local pubsub delivery record, so full delivery is asserted
+/// over everyone *else*.
+pub fn broadcast_churn_targets() -> Vec<usize> {
+    (0..BROADCAST_CHURN_CYCLES).map(|k| 20 + (7 * k as usize) % 200).collect()
+}
+
+/// The shared broadcast-pair schedule: two flash crowds to 501 peers,
+/// thirty crash/restart cycles, and five contribution announcements
+/// published from distinct untouched nodes while the churn runs.
+fn broadcast_schedule(mut sc: Scenario) -> Scenario {
+    sc.stagger = Duration::from_millis(20);
+    sc.warmup = Duration::from_secs(30);
+    sc.quiesce = Duration::from_secs(600);
+    sc.quiesce_poll = Duration::from_secs(15);
+    // A dense pubsub fabric: sample (nearly) the whole routing table
+    // instead of the default 8. Under the default sparse sample the
+    // 1 s resampling keeps flood edges so short-lived that flooding is
+    // *accidentally* cheap — and occasionally misses a node outright.
+    // Widening the sample makes the fabric the comparison assumes:
+    // flood fan-in approaches the table size (so its full-delivery
+    // half of the pair is robust and its duplicate factor shows the
+    // true cost), while the mesh rows stay pinned at the watermarks
+    // whatever the fabric density — that contrast is the point.
+    sc.cfg.neighbor_degree = 64;
+    sc.invariants.pubsub_delivery =
+        Some(PubsubDeliveryInvariant { exempt: broadcast_churn_targets() });
+    sc = sc
+        .at(5, Fault::FlashCrowd { n: BROADCAST_WAVE, region: Region::UsWest1 })
+        .at(15, Fault::FlashCrowd { n: BROADCAST_WAVE, region: Region::EuropeWest3 });
+    for k in 0..BROADCAST_CHURN_CYCLES {
+        let node = 20 + (7 * k as usize) % 200;
+        sc = sc
+            .at(55 + 2 * k, Fault::Crash { node })
+            .at(70 + 2 * k, Fault::Restart { node });
+    }
+    sc.at(60, Fault::Contribute { node: 2, workload: 0, rows: 20 })
+        .at(70, Fault::Contribute { node: 3, workload: 1, rows: 20 })
+        .at(80, Fault::Contribute { node: 5, workload: 2, rows: 20 })
+        .at(95, Fault::Contribute { node: 7, workload: 3, rows: 20 })
+        .at(105, Fault::Contribute { node: 11, workload: 4, rows: 20 })
+        .at(125, Fault::Checkpoint)
+}
+
+/// 22. Gossip-mesh broadcast under churn — the mesh's proof point. 501
+/// peers (251 initial + two 125-peer flash crowds), thirty crash/restart
+/// cycles sweeping the initial population, and five contribution
+/// announcements published *during* the churn. Runs with the
+/// [`MeshConfig`] knob on: eager push to a bounded-degree mesh, lazy
+/// IHAVE/IWANT to the rest. The [`PubsubDeliveryInvariant`] asserts
+/// every live non-churned subscriber received every announcement —
+/// bounded redundancy must not cost delivery; `tests/scenarios.rs`
+/// additionally asserts the redundancy factor sits an integer factor
+/// below [`flood_broadcast_churn`]'s on the identical schedule.
+pub fn mesh_broadcast_churn() -> Scenario {
+    let mut sc = Scenario::named("mesh-broadcast-churn", 2424, BROADCAST_INITIAL);
+    sc.cfg.mesh = Some(MeshConfig::default());
+    broadcast_schedule(sc)
+}
+
+/// 23. Flood broadcast under churn — the negative control for
+/// [`mesh_broadcast_churn`]: the identical 501-peer schedule with the
+/// mesh knob off. Over the pair's deliberately dense fabric flood also
+/// delivers fully (that is what makes the comparison fair); what it
+/// cannot do is bound the duplicate factor — every subscriber receives
+/// a copy per inbound edge, so redundancy tracks the fan-in. That
+/// blow-up is the collapse the paired test enforces.
+pub fn flood_broadcast_churn() -> Scenario {
+    let sc = Scenario::named("flood-broadcast-churn", 2525, BROADCAST_INITIAL);
+    broadcast_schedule(sc)
+}
+
+/// 24. City-scale churn with the gossip mesh on — [`city_scale`]'s
+/// schedule verbatim (same waves, churn, outage, and contribution
+/// traffic) under mesh dissemination, so the two `BENCH_sim.json` rows
+/// differ in exactly one knob and the `pubsub_redundancy` column reads
+/// as a controlled before/after. The mesh is tuned to the announcement
+/// workload: a single-member eager spine (degree 1, watermarks 1/2)
+/// with the lazy IHAVE/IWANT tier carrying the rest — head
+/// announcements are latency-tolerant (anti-entropy backstops them),
+/// so the thinnest mesh that still guarantees delivery is the honest
+/// duplicate-factor floor to hold flood against. The broadcast pair
+/// exercises the gossipsub-classic 3/2/6 shape; this row shows the
+/// knob's other end.
+pub fn city_scale_mesh() -> Scenario {
+    let mut sc = city_scale();
+    sc.name = "city-scale-mesh";
+    sc.seed = 2626;
+    sc.cfg.mesh = Some(MeshConfig {
+        degree: 1,
+        degree_low: 1,
+        degree_high: 2,
+        ..MeshConfig::default()
+    });
+    sc
+}
+
 /// Every replayable bank scenario, in canonical order: the seven
 /// original fault scenarios, the multi-region scale-out headline, the
 /// two directional-plane scenarios (half-open region, eclipse), the two
@@ -745,7 +857,9 @@ pub fn city_scale() -> Scenario {
 /// striped-transfer scenarios (drag pair + provider death), the
 /// quorum-grace delayed-honest-majority scenario, the three
 /// parity-tagged scenarios the sim-to-real harness replays over TCP,
-/// and the 1,006-peer city-scale churn scenario.
+/// the 1,006-peer city-scale churn scenario, the 501-peer gossip-mesh
+/// broadcast pair (mesh + flood control), and the mesh-enabled
+/// city-scale variant.
 pub fn all() -> Vec<Scenario> {
     vec![
         partition_heal(),
@@ -769,6 +883,9 @@ pub fn all() -> Vec<Scenario> {
         parity_gc_repair(),
         parity_quorum(),
         city_scale(),
+        mesh_broadcast_churn(),
+        flood_broadcast_churn(),
+        city_scale_mesh(),
     ]
 }
 
@@ -878,12 +995,132 @@ mod tests {
         // repair timestamp, so any pre-existing scenario picking it up
         // would change its recorded SimStats checksum.
         for sc in all() {
-            if sc.name == "city-scale" {
-                assert!(sc.cfg.repair_jitter > 0.0, "city-scale must jitter repair");
+            if sc.name == "city-scale" || sc.name == "city-scale-mesh" {
+                assert!(sc.cfg.repair_jitter > 0.0, "{} must jitter repair", sc.name);
                 continue;
             }
             assert_eq!(sc.cfg.repair_jitter, 0.0, "{}: repair jitter leaked in", sc.name);
         }
+    }
+
+    #[test]
+    fn mesh_default_off_outside_mesh_scenarios() {
+        // Replay-compatibility guard: the mesh knob changes every pubsub
+        // frame a node emits, so any pre-existing scenario picking it up
+        // would change its recorded SimStats checksum.
+        for sc in all() {
+            match sc.name {
+                "mesh-broadcast-churn" | "city-scale-mesh" => {
+                    assert!(sc.cfg.mesh.is_some(), "{}: mesh knob must be on", sc.name)
+                }
+                _ => assert!(sc.cfg.mesh.is_none(), "{}: mesh knob leaked in", sc.name),
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_pair_shapes_are_consistent() {
+        // The pair differs in the mesh knob (and seed) only: the
+        // redundancy comparison is schedule-for-schedule.
+        let mesh = mesh_broadcast_churn();
+        let flood = flood_broadcast_churn();
+        assert!(mesh.cfg.mesh.is_some(), "mesh row must run the mesh");
+        assert!(flood.cfg.mesh.is_none(), "control must flood");
+        let fmt = |sc: &Scenario| {
+            sc.events.iter().map(|e| format!("{:?}@{}", e.fault, e.at.0)).collect::<Vec<_>>()
+        };
+        assert_eq!(fmt(&mesh), fmt(&flood), "flood control drifted from the mesh schedule");
+        for sc in [&mesh, &flood] {
+            let joins: usize = sc
+                .events
+                .iter()
+                .map(|e| match e.fault {
+                    Fault::FlashCrowd { n, .. } => n,
+                    _ => 0,
+                })
+                .sum();
+            assert_eq!(sc.peers, BROADCAST_INITIAL);
+            assert!(sc.peers + joins > 500, "{}: the pair must exceed 500 peers", sc.name);
+            assert_eq!(
+                sc.cfg.neighbor_degree, 64,
+                "{}: the pair runs on the dense fabric (see broadcast_schedule)",
+                sc.name
+            );
+            let pd =
+                sc.invariants.pubsub_delivery.as_ref().expect("delivery invariant configured");
+            assert_eq!(pd.exempt, broadcast_churn_targets(), "{}: exempt ≠ churn set", sc.name);
+            // Publishers are untouched by churn (and are not the root):
+            // their announcements are the ones full delivery is sworn on.
+            let publishers: Vec<usize> = sc
+                .events
+                .iter()
+                .filter_map(|e| match e.fault {
+                    Fault::Contribute { node, .. } => Some(node),
+                    _ => None,
+                })
+                .collect();
+            assert!(publishers.len() >= 5, "{}: needs broadcast traffic", sc.name);
+            for p in &publishers {
+                assert!(*p != 0, "{}: the root must not publish", sc.name);
+                assert!(!pd.exempt.contains(p), "{}: publisher {p} is churned", sc.name);
+            }
+            // Every crash restarts later; all targets distinct initial
+            // peers inside the exempt set.
+            let crashes: Vec<(u64, usize)> = sc
+                .events
+                .iter()
+                .filter_map(|e| match e.fault {
+                    Fault::Crash { node } => Some((e.at.0, node)),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(crashes.len(), BROADCAST_CHURN_CYCLES as usize);
+            let mut targets: Vec<usize> = crashes.iter().map(|&(_, n)| n).collect();
+            targets.sort_unstable();
+            targets.dedup();
+            assert_eq!(
+                targets.len(),
+                BROADCAST_CHURN_CYCLES as usize,
+                "{}: churn targets must be distinct",
+                sc.name
+            );
+            for &(at, node) in &crashes {
+                assert!(node < BROADCAST_INITIAL, "{}: churn must hit initial peers", sc.name);
+                assert!(
+                    sc.events.iter().any(|e| matches!(
+                        e.fault, Fault::Restart { node: r } if r == node && e.at.0 > at
+                    )),
+                    "{}: node {node} never restarts",
+                    sc.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn city_scale_mesh_matches_flood_schedule() {
+        // The mesh variant is city-scale verbatim apart from the knob
+        // (and seed): the BENCH_sim.json before/after is controlled.
+        let flood = city_scale();
+        let mesh = city_scale_mesh();
+        let fmt = |sc: &Scenario| {
+            sc.events.iter().map(|e| format!("{:?}@{}", e.fault, e.at.0)).collect::<Vec<_>>()
+        };
+        assert_eq!(fmt(&mesh), fmt(&flood), "mesh variant drifted from city-scale");
+        assert_eq!(mesh.peers, flood.peers);
+        assert_eq!(mesh.cfg.repair_jitter, flood.cfg.repair_jitter);
+        assert_eq!(
+            mesh.cfg.neighbor_degree, flood.cfg.neighbor_degree,
+            "city pair shares the default sparse fabric — the knob is the mesh alone"
+        );
+        assert_ne!(mesh.seed, flood.seed);
+        assert!(mesh.cfg.mesh.is_some());
+        assert!(
+            mesh.invariants.pubsub_delivery.is_none(),
+            "city-scale-mesh is a BENCH row; full delivery is the broadcast pair's charter \
+             (city-scale churns through a regional outage, where exemption bookkeeping \
+             would swallow the assertion anyway)"
+        );
     }
 
     #[test]

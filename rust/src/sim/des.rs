@@ -90,6 +90,15 @@ pub struct SimStats {
     /// compaction makes the trajectory scheduler-specific); recorded in
     /// `BENCH_sim.json` as the memory half of the perf trajectory.
     pub peak_queue_len: u64,
+    /// Gossip-mesh pubsub telemetry, cluster-wide (`IHave` digests
+    /// sent, `Publish` frames served to `IWant` pulls, mesh additions,
+    /// mesh removals). Summed from per-node engines by `run_cluster`
+    /// like the defense groups; all four stay zero in flood mode, so
+    /// pre-mesh recordings hash the exact legacy byte stream.
+    pub ihave_sent: u64,
+    pub iwant_served: u64,
+    pub grafts: u64,
+    pub prunes: u64,
 }
 
 impl SimStats {
@@ -155,6 +164,15 @@ impl SimStats {
         ];
         if quorum.iter().any(|v| *v != 0) {
             for v in quorum {
+                mix(&mut h, v);
+            }
+        }
+        // Fourth only-when-nonzero group: gossip-mesh pubsub telemetry.
+        // Flood-mode runs (every recording that predates the mesh) keep
+        // all four at zero and hash the exact legacy byte stream.
+        let mesh = [self.ihave_sent, self.iwant_served, self.grafts, self.prunes];
+        if mesh.iter().any(|v| *v != 0) {
+            for v in mesh {
                 mix(&mut h, v);
             }
         }
@@ -1017,6 +1035,17 @@ mod tests {
         assert_eq!(tombstoned.checksum(), legacy(&off), "queue counters are digest-excluded");
         let tombstoned_on = SimStats { dead_events: 7, peak_queue_len: 4096, ..on.clone() };
         assert_eq!(tombstoned_on.checksum(), on.checksum());
+        // The gossip-mesh telemetry quartet is a fourth independent
+        // only-when-nonzero group: flood-mode runs (all four zero) keep
+        // the legacy digest; any engaged mesh extends it.
+        let mesh_zero = SimStats { ihave_sent: 0, grafts: 0, ..off.clone() };
+        assert_eq!(mesh_zero.checksum(), legacy(&off));
+        let meshed = SimStats { grafts: 5, prunes: 2, ..off.clone() };
+        assert_ne!(meshed.checksum(), off.checksum());
+        let advertised = SimStats { ihave_sent: 11, iwant_served: 4, ..meshed.clone() };
+        assert_ne!(advertised.checksum(), meshed.checksum());
+        let meshed_on_defended = SimStats { grafts: 5, ..on.clone() };
+        assert_ne!(meshed_on_defended.checksum(), on.checksum());
     }
 
     #[test]

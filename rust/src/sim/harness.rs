@@ -234,6 +234,42 @@ pub fn quorum_totals(cluster: &Cluster<Node>) -> (u64, u64, u64) {
     totals
 }
 
+/// Cluster-wide totals of the gossip-mesh pubsub telemetry, summed over
+/// every node's engine: `(ihave_sent, iwant_served, grafts, prunes)`.
+/// Like [`quorum_totals`], `sim::scenario::run_cluster` folds these
+/// into the report's [`crate::sim::des::SimStats`] so scenario replays
+/// guard them; tests use the totals directly to assert the mesh
+/// actually formed and advertised. All four are zero unless a node ran
+/// with [`crate::peersdb::NodeConfig::mesh`] set.
+pub fn pubsub_mesh_totals(cluster: &Cluster<Node>) -> (u64, u64, u64, u64) {
+    let mut totals = (0u64, 0u64, 0u64, 0u64);
+    for i in 0..cluster.len() {
+        let (ihave, iwant, grafts, prunes) = cluster.node(i).pubsub_mesh_stats();
+        totals.0 += ihave;
+        totals.1 += iwant;
+        totals.2 += grafts;
+        totals.3 += prunes;
+    }
+    totals
+}
+
+/// Cluster-wide pubsub dissemination totals, summed over every node's
+/// engine: `(published, forwarded, delivered, duplicates)`. `forwarded`
+/// counts `Publish` frames actually pushed onto links; `delivered`
+/// counts first-copy local deliveries — `duplicates / delivered` is the
+/// redundancy factor `benches/sim_scale.rs` tracks per record.
+pub fn pubsub_totals(cluster: &Cluster<Node>) -> (u64, u64, u64, u64) {
+    let mut totals = (0u64, 0u64, 0u64, 0u64);
+    for i in 0..cluster.len() {
+        let (p, f, d, dup) = cluster.node(i).pubsub_stats();
+        totals.0 += p;
+        totals.1 += f;
+        totals.2 += d;
+        totals.3 += dup;
+    }
+    totals
+}
+
 /// Ground-truth audit of network-adopted verdicts: counts, over every
 /// honest node, verdicts adopted *from the network* that contradict what
 /// the contribution schedule actually injected (`corrupt = true` ⇒ the

@@ -47,7 +47,12 @@
 //!      sit idle (chunks owed, nothing in flight, no lookup pending)
 //!      while a live provider still holds the file: a fetch either
 //!      makes progress or is abandoned outright, never wedged
-//!      (`peersdb`'s striped chunk scheduler and reassignment paths).
+//!      (`peersdb`'s striped chunk scheduler and reassignment paths);
+//!
+//!   8. **pubsub full delivery** (opt-in, [`PubsubDeliveryInvariant`])
+//!      — every non-exempt live subscriber received every pubsub
+//!      message published by every non-exempt node, i.e. gossip-mesh
+//!      dissemination (or flood) lost nobody (`pubsub`).
 //!
 //! Runs are deterministic: executing the same scenario twice yields the
 //! identical [`SimStats`], digest, and report — which is what makes a
@@ -215,6 +220,23 @@ impl Default for AvailabilityInvariant {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct VerdictIntegrityInvariant;
 
+/// The pubsub full-delivery invariant: checked at quiesce when
+/// configured on [`InvariantConfig::pubsub_delivery`].
+///
+/// Every online non-exempt node must have locally delivered every
+/// message `(origin, seq)` that any non-exempt node published — the
+/// liveness half of the gossip-mesh bargain (bounded redundancy is the
+/// efficiency half; losing subscribers to win it would be cheating).
+#[derive(Clone, Debug, Default)]
+pub struct PubsubDeliveryInvariant {
+    /// Node indices exempted both as publishers and as subscribers —
+    /// typically the churn set: a crash wipes the node's local delivery
+    /// record and a frame broadcast while it was down is gone for good
+    /// (pubsub is fire-and-forget; the *contribution log* still
+    /// converges via anti-entropy, which invariant 1 asserts).
+    pub exempt: Vec<usize>,
+}
+
 /// Invariant-checker knobs.
 #[derive(Clone, Debug)]
 pub struct InvariantConfig {
@@ -234,6 +256,9 @@ pub struct InvariantConfig {
     /// still be waiting out its grace mid-run; what matters is that no
     /// lie survived to the end).
     pub verdict_integrity: Option<VerdictIntegrityInvariant>,
+    /// Pubsub full-delivery guard (quiesce-only: frames are still in
+    /// flight — or waiting on a heartbeat's IHAVE batch — mid-run).
+    pub pubsub_delivery: Option<PubsubDeliveryInvariant>,
 }
 
 impl Default for InvariantConfig {
@@ -244,6 +269,7 @@ impl Default for InvariantConfig {
             eclipse: None,
             availability: None,
             verdict_integrity: None,
+            pubsub_delivery: None,
         }
     }
 }
@@ -566,6 +592,13 @@ pub fn run_cluster(sc: &Scenario) -> Result<(ScenarioReport, Cluster<Node>), Str
     stats.votes_extended = extended;
     stats.votes_rescued_by_grace = rescued;
     stats.false_verdicts_adopted = harness::false_verdicts(&cluster, &cids, &inv.byzantine);
+    // And the gossip-mesh pubsub telemetry: all-zero (and
+    // checksum-invisible) unless a scenario ran with the mesh knob on.
+    let (ihave, iwant, grafts, prunes) = harness::pubsub_mesh_totals(&cluster);
+    stats.ihave_sent = ihave;
+    stats.iwant_served = iwant;
+    stats.grafts = grafts;
+    stats.prunes = prunes;
 
     let report = ScenarioReport {
         name: sc.name,
@@ -732,6 +765,11 @@ pub fn check_invariants(
         }
     }
 
+    // ---- Pubsub full delivery (quiesce; opt-in) ------------------------
+    if let Some(pd) = &cfg.pubsub_delivery {
+        check_pubsub_delivery(cluster, pd)?;
+    }
+
     // ---- Block availability ≥ replication target (quiesce) -------------
     let target = cfg.replication_target.min(online.len());
     for c in cluster.node(first).contributions.iter() {
@@ -746,6 +784,42 @@ pub fn check_invariants(
                 c.workload,
                 online.len()
             ));
+        }
+    }
+    Ok(())
+}
+
+/// The [`PubsubDeliveryInvariant`] predicate, exposed for
+/// scenario-specific assertions: every online non-exempt node must have
+/// locally delivered every message `(origin, seq)` published by every
+/// other online non-exempt node. Publishers vouch for their own
+/// messages (`seq` runs `1..=published_count`), so the check needs no
+/// side-channel record of what the schedule injected.
+pub fn check_pubsub_delivery(
+    cluster: &impl ClusterView,
+    pd: &PubsubDeliveryInvariant,
+) -> Result<(), String> {
+    let eligible: Vec<usize> = (0..cluster.len())
+        .filter(|&i| cluster.is_online(i) && !pd.exempt.contains(&i))
+        .collect();
+    for &j in &eligible {
+        let n = cluster.node(j).pubsub_published_count();
+        if n == 0 {
+            continue;
+        }
+        let origin = cluster.peer_id(j);
+        for &i in &eligible {
+            if i == j {
+                continue;
+            }
+            for seq in 1..=n {
+                if !cluster.node(i).pubsub_has_delivered(origin, seq) {
+                    return Err(format!(
+                        "pubsub delivery: node {i} never received message {seq}/{n} \
+                         published by node {j}"
+                    ));
+                }
+            }
         }
     }
     Ok(())

@@ -561,6 +561,12 @@ fn random_peers(rng: &mut Rng, max: usize) -> Vec<PeerId> {
     (0..rng.range(0, max)).map(|_| PeerId::from_rng(rng)).collect()
 }
 
+fn random_msg_ids(rng: &mut Rng, max: usize) -> Vec<pubsub::MsgId> {
+    (0..rng.range(0, max))
+        .map(|_| pubsub::MsgId { origin: PeerId::from_rng(rng), seq: rng.next_u64() })
+        .collect()
+}
+
 /// Every `Message` variant (and, through the first three arms, every
 /// dht/bitswap/pubsub sub-variant) with randomized field contents — the
 /// generator behind both the roundtrip and the wire-size-exactness
@@ -568,7 +574,7 @@ fn random_peers(rng: &mut Rng, max: usize) -> Vec<PeerId> {
 /// `WireSize` is caught here.
 fn random_message(rng: &mut Rng) -> Message {
     let req_id = rng.next_u64() >> 1;
-    match rng.range(0, 19) {
+    match rng.range(0, 23) {
         0 => Message::Dht(dht::Rpc::Ping { req_id }),
         1 => Message::Dht(dht::Rpc::Pong { req_id }),
         2 => Message::Dht(dht::Rpc::FindNode { req_id, target: Key(rng.bytes32()) }),
@@ -606,9 +612,19 @@ fn random_message(rng: &mut Rng) -> Message {
             data: {
                 let mut v = vec![0u8; rng.range(0, 200)];
                 rng.fill_bytes(&mut v);
-                v
+                v.into()
             },
         }),
+        // The gossip-mesh control plane: `IHave`/`IWant` sizes must be
+        // exactly computable from the id count alone (fixed-width seqs),
+        // which is what the wire-size-exactness property pins here.
+        19 => Message::Pubsub(pubsub::Msg::IHave {
+            topic: pubsub::Topic(rng.next_u64()),
+            ids: random_msg_ids(rng, 8),
+        }),
+        20 => Message::Pubsub(pubsub::Msg::IWant { ids: random_msg_ids(rng, 8) }),
+        21 => Message::Pubsub(pubsub::Msg::Graft { topic: pubsub::Topic(rng.next_u64()) }),
+        22 => Message::Pubsub(pubsub::Msg::Prune { topic: pubsub::Topic(rng.next_u64()) }),
         12 => Message::Join { passphrase: rng.bytes32() },
         13 => Message::JoinAck {
             accepted: rng.chance(0.5),
